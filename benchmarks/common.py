@@ -1,0 +1,42 @@
+"""Shared benchmark harness: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows; ``derived`` carries
+the benchmark-specific quality metric (MSE, energy score, slope, bytes, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (post-jit)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def temp_bytes(jitted, *args) -> int:
+    """Peak XLA scratch bytes of a compiled callable — the paper's memory
+    metric (Appendix I.8 uses exactly temp_bytes)."""
+    c = jitted.lower(*args).compile()
+    m = c.memory_analysis()
+    return int(getattr(m, "temp_size_in_bytes", 0) or 0)

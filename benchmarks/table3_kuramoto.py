@@ -1,0 +1,103 @@
+"""Table 3 + Fig 5b: stochastic Kuramoto on T*T^N — CF-EES vs CG2, and the
+memory-complexity separation across adjoints.
+
+Quality: multi-horizon wrapped energy score after a short training run.
+Memory: peak XLA scratch bytes (temp_size) of the compiled grad step as a
+function of n_steps — the paper's Fig 5b metric: CF-EES+Reversible is flat,
+CG2+Full grows linearly, CG2+Recursive grows ~sqrt.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CrouchGrossman2, brownian_path, cfees25_solver, solve
+from repro.nsde import init_kuramoto_nsde, kuramoto_nsde_term, wrapped_energy_score
+from repro.nsde.data import kuramoto_paths
+from repro.optim import adamw
+
+from .common import emit, temp_bytes
+
+N, BATCH, T = 16, 32, 2.0
+
+
+def make_loss(solver, adjoint, n_steps, target_th, target_om):
+    term = kuramoto_nsde_term()
+    m_samples = 4
+
+    def loss(p, k, th0, om0):
+        def one(key):
+            bm = brownian_path(key, 0.0, T, n_steps, shape=((BATCH, N), (BATCH, N)))
+            r = solve(solver, term, (th0, om0), bm, p, adjoint=adjoint)
+            return r.y_final
+
+        keys = jax.random.split(k, m_samples)
+        ths, oms = jax.vmap(one)(keys)  # (m, batch, N)
+        es = jax.vmap(
+            lambda i: wrapped_energy_score(
+                ths[:, i], oms[:, i], target_th[i], target_om[i]
+            )
+        )(jnp.arange(BATCH))
+        return jnp.mean(es)
+
+    return loss
+
+
+def run():
+    rng = np.random.default_rng(3)
+    ths, oms = kuramoto_paths(rng, N, BATCH, 400, T=T, subsample=400)
+    th0 = jnp.asarray(ths[:, 0], jnp.float32)
+    om0 = jnp.asarray(oms[:, 0], jnp.float32)
+    tgt_th = jnp.asarray(ths[:, -1], jnp.float32)
+    tgt_om = jnp.asarray(oms[:, -1], jnp.float32)
+
+    n_steps = 30
+    cases = [
+        ("CG2+Full", CrouchGrossman2(), "full", 2 * n_steps // 2),
+        ("CG2+Recursive", CrouchGrossman2(), "recursive", 2 * n_steps // 2),
+        ("CF-EES(2,5)+Reversible", cfees25_solver(), "reversible", 2 * n_steps // 3),
+    ]
+    key = jax.random.PRNGKey(0)
+    for name, solver, adjoint, steps in cases:
+        params = init_kuramoto_nsde(key, N, width=64)
+        loss = make_loss(solver, adjoint, steps, tgt_th, tgt_om)
+        opt = adamw(2e-3)
+        state = opt.init(params)
+        step = jax.jit(
+            lambda p, s, k: (lambda l, g: (l, *opt.update(g, s, p)))(
+                *jax.value_and_grad(loss)(p, k, th0, om0)
+            )
+        )
+        t0 = time.time()
+        val = float("nan")
+        for e in range(15):
+            key, sub = jax.random.split(key)
+            val, params, state, _ = step(params, state, sub)
+        emit(f"table3_kuramoto/{name}", (time.time() - t0) / 15 * 1e6,
+             f"energy_score={float(val):.3f}")
+
+    # Fig 5b analogue: temp bytes vs n_steps per adjoint.
+    params = init_kuramoto_nsde(key, N, width=64)
+    for adjoint, solver in [
+        ("reversible", cfees25_solver()),
+        ("recursive", CrouchGrossman2()),
+        ("full", CrouchGrossman2()),
+    ]:
+        series = []
+        for steps in (32, 128, 512):
+            loss = make_loss(solver, adjoint, steps, tgt_th, tgt_om)
+            jitted = jax.jit(jax.grad(loss))
+            series.append(temp_bytes(jitted, params, key, th0, om0))
+        growth = series[-1] / max(series[0], 1)
+        emit(
+            f"fig5b_memory/{adjoint}",
+            0.0,
+            f"temp_bytes_32_128_512={series};growth16x={growth:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

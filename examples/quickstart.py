@@ -1,0 +1,37 @@
+"""Quickstart: solve an SDE with EES(2,5) and take O(1)-memory gradients.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import SDETerm, brownian_path, ees25_solver, solve
+
+# dy = tanh(w y) dt + 0.1 dW on R^4, 1000 steps.
+term = SDETerm(
+    drift=lambda t, y, args: jnp.tanh(args["w"] * y),
+    diffusion=lambda t, y, args: 0.1 * jnp.ones_like(y),
+    noise="diagonal",
+)
+params = {"w": jnp.float32(0.5)}
+bm = brownian_path(jax.random.PRNGKey(0), t0=0.0, t1=1.0, n_steps=1000, shape=(4,))
+
+
+def loss(p):
+    # reversible adjoint: backward pass RECONSTRUCTS the trajectory with the
+    # effectively-symmetric reverse step — no O(n_steps) activation storage.
+    out = solve(ees25_solver(), term, jnp.ones(4), bm, p, adjoint="reversible")
+    return jnp.sum(out.y_final ** 2)
+
+
+value, grads = jax.jit(jax.value_and_grad(loss))(params)
+print(f"loss = {value:.6f}")
+print(f"dloss/dw = {grads['w']:.6f}")
+
+# cross-check against full backprop (discretise-then-optimise):
+g_full = jax.grad(
+    lambda p: jnp.sum(
+        solve(ees25_solver(), term, jnp.ones(4), bm, p, adjoint="full").y_final ** 2
+    )
+)(params)
+print(f"full-adjoint dloss/dw = {g_full['w']:.6f}  (should match to ~1e-5)")

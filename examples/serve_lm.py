@@ -1,0 +1,32 @@
+"""Serve a (smoke-sized) LM with the continuous-batching engine.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(slots=4, max_len=args.max_len))
+    for i in range(args.requests):
+        eng.submit([2 + i, 7, 11])
+    done = eng.run()
+    for rid, toks in sorted(done.items()):
+        print(f"request {rid}: {len(toks)} tokens -> {toks[:12]}...")
+
+
+if __name__ == "__main__":
+    main()

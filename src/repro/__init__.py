@@ -1,0 +1,6 @@
+"""repro: EES schemes for Neural SDEs on Lie groups — production JAX framework.
+
+Layers: core (paper), nsde (paper benchmarks), models (assigned LM archs),
+kernels (Pallas TPU), data/optim/train/serving (substrate), configs, launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,14 @@
+"""Architecture & shape registry (one module per assigned arch)."""
+from .base import ArchConfig, get_arch, list_archs, register
+from .shapes import ALL_SHAPES, ShapeSpec, cell_applicable, get_shape
+
+__all__ = [
+    "ArchConfig",
+    "get_arch",
+    "list_archs",
+    "register",
+    "ALL_SHAPES",
+    "ShapeSpec",
+    "cell_applicable",
+    "get_shape",
+]

@@ -1,0 +1,84 @@
+"""repro.core — EES schemes for SDEs on Lie groups (the paper's contribution).
+
+Public surface:
+  tableaux   — Butcher tableaux (EES(2,5;x), EES(2,7), classical RK)
+  williamson — Williamson 2N coefficients + Bazavov conditions
+  brownian   — counter-based reconstructible Brownian paths
+  solvers    — Euclidean SDE solvers (EES Butcher/2N, Reversible Heun, MCF)
+  adjoint    — Full / Recursive / Reversible adjoints (Algorithms 1 & 2)
+  lie        — groups & homogeneous spaces (Torus, SO(3)/SO(n), S^{n-1}, products)
+  cfees      — CF-EES and geometric baselines (GeoEM, CG2, RKMK2)
+  stability  — linear & mean-square stability analysis
+"""
+from .adjoint import SolveResult, solve
+from .brownian import BrownianPath, brownian_path
+from .cfees import (
+    CFLowStorageSolver,
+    CrouchGrossman2,
+    GeoEulerMaruyama,
+    RKMK2,
+    cfees25_solver,
+    cfees27_solver,
+)
+from .lie import (
+    Euclidean,
+    Group,
+    ManifoldSDETerm,
+    Product,
+    SO3,
+    SOn,
+    SphereAction,
+    Torus,
+)
+from .solvers import (
+    ButcherSolver,
+    LowStorageSolver,
+    MCFSolver,
+    ReversibleHeun,
+    SDETerm,
+    ees25_solver,
+    ees27_solver,
+)
+from .tableaux import ees25, ees25_tableau, ees27_tableau, euler, heun, midpoint, rk3, rk4
+from .williamson import EES25_2N, EES27_2N, bazavov_residuals, butcher_from_2n, ees25_2n
+
+__all__ = [
+    "solve",
+    "SolveResult",
+    "BrownianPath",
+    "brownian_path",
+    "SDETerm",
+    "ButcherSolver",
+    "LowStorageSolver",
+    "ReversibleHeun",
+    "MCFSolver",
+    "ees25_solver",
+    "ees27_solver",
+    "ManifoldSDETerm",
+    "Group",
+    "Euclidean",
+    "Torus",
+    "SO3",
+    "SOn",
+    "SphereAction",
+    "Product",
+    "CFLowStorageSolver",
+    "GeoEulerMaruyama",
+    "CrouchGrossman2",
+    "RKMK2",
+    "cfees25_solver",
+    "cfees27_solver",
+    "ees25",
+    "ees25_tableau",
+    "ees27_tableau",
+    "euler",
+    "heun",
+    "midpoint",
+    "rk3",
+    "rk4",
+    "EES25_2N",
+    "EES27_2N",
+    "ees25_2n",
+    "bazavov_residuals",
+    "butcher_from_2n",
+]

@@ -1,0 +1,103 @@
+"""Embedded error estimation + adaptive stepping for EES schemes.
+
+Appendix D: the 2N recurrences admit a *three-register* low-storage variant
+with a first-order embedded estimator — store the final internal stage
+(at c_s, e.g. c_3 = 5/6 for EES(2,5;1/10)) and advance it over the remaining
+fraction of the step with a single Euler update re-using the already-computed
+stage evaluation:
+
+    y_low = Y_{s-1} + (1 - c_s) * K_s,        err = y_{n+1} - y_low.
+
+No extra vector-field evaluations.  As the paper's Limitations section notes,
+step *rejection* requires restoring the previous state (a 3S* register), which
+is incompatible with the two-register reversible implementation — so adaptive
+stepping here is a forward-only integration mode (use the fixed-grid solver
+for reversible-adjoint training).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .solvers import SDETerm, tree_axpy, tree_scale, tree_zeros_like
+from .williamson import LowStorage
+
+__all__ = ["step_with_error", "integrate_adaptive", "AdaptiveResult"]
+
+
+def step_with_error(ls: LowStorage, term: SDETerm, y, t, h, dW, args):
+    """One 2N step returning (y_next, embedded error pytree)."""
+    delta = tree_zeros_like(y)
+    y_prev = y
+    k_last = None
+    for l in range(ls.stages):
+        k = term.increment(t + ls.c[l] * h, y, args, h, dW)
+        delta = tree_axpy(ls.A[l], delta, k)
+        y_prev = y
+        k_last = k
+        y = tree_axpy(ls.B[l], delta, y)
+    c_last = ls.c[ls.stages - 1]
+    y_low = tree_axpy(1.0 - c_last, k_last, y_prev)
+    err = jax.tree_util.tree_map(jnp.subtract, y, y_low)
+    return y, err
+
+
+class AdaptiveResult(NamedTuple):
+    y: jnp.ndarray
+    t: jnp.ndarray
+    n_accepted: jnp.ndarray
+    n_rejected: jnp.ndarray
+    h_final: jnp.ndarray
+
+
+def integrate_adaptive(
+    ls: LowStorage,
+    term: SDETerm,
+    y0,
+    t0: float,
+    t1: float,
+    args=None,
+    *,
+    rtol: float = 1e-4,
+    atol: float = 1e-6,
+    h0: float = 1e-2,
+    safety: float = 0.9,
+    max_steps: int = 10_000,
+):
+    """ODE-mode adaptive integration (I-controller on the embedded error)."""
+
+    def err_norm(err, y):
+        flat_e = jnp.concatenate([e.ravel() for e in jax.tree_util.tree_leaves(err)])
+        flat_y = jnp.concatenate([x.ravel() for x in jax.tree_util.tree_leaves(y)])
+        scale = atol + rtol * jnp.abs(flat_y)
+        return jnp.sqrt(jnp.mean((flat_e / scale) ** 2))
+
+    order = ls.order  # embedded pair is (order, 1); exponent 1/(order)
+
+    def cond(state):
+        y, t, h, na, nr, i = state
+        return (t < t1) & (i < max_steps)
+
+    def body(state):
+        y, t, h, na, nr, i = state
+        h_eff = jnp.minimum(h, t1 - t)
+        y_new, err = step_with_error(ls, term, y, t, h_eff, None, args)
+        en = err_norm(err, y_new)
+        accept = en <= 1.0
+        factor = jnp.clip(safety * en ** (-1.0 / order), 0.2, 5.0)
+        h_next = h_eff * factor
+        y = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), y_new, y
+        )
+        t = jnp.where(accept, t + h_eff, t)
+        return (y, t, h_next, na + accept, nr + (1 - accept), i + 1)
+
+    y, t, h, na, nr, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (y0, jnp.asarray(t0, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32),
+         jnp.asarray(h0), jnp.asarray(0), jnp.asarray(0), jnp.asarray(0)),
+    )
+    return AdaptiveResult(y=y, t=t, n_accepted=na, n_rejected=nr, h_final=h)

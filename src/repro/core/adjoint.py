@@ -1,0 +1,233 @@
+"""The three adjoints of the paper.
+
+* **Full** (discretise-then-optimise): plain autodiff through ``lax.scan``;
+  exact gradients of the discrete computation, O(n) activation memory.
+* **Recursive** (checkpointed): segments of the scan are rematerialised
+  (``jax.checkpoint``), giving the O(sqrt(n)) memory/compute trade.
+* **Reversible**: O(1) memory.  The backward pass *reconstructs* the forward
+  trajectory with the solver's algebraic reverse step (exact for Reversible
+  Heun / MCF; O(h^{m+1})-accurate for EES(2,m)) and re-plays each step under
+  ``jax.vjp`` — Algorithm 1 of the paper (and, composed with the CF-EES step
+  on a manifold, Algorithm 2: the stage adjoints live on the cotangent bundle
+  automatically because every group action is an ordinary JAX computation).
+
+All three share one calling convention built around segments of
+``save_every`` steps, so the saved trajectory is identical bitwise across
+adjoints (the solver steps are the same computation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .brownian import BrownianPath
+from .solvers import tree_add, tree_scale
+
+__all__ = ["SolveResult", "solve"]
+
+
+class SolveResult(NamedTuple):
+    y_final: Any
+    ys: Any  # (n_saves, ...) pytree of saved states, or None
+
+
+def _float0_like(tree):
+    """Zero cotangents for a pytree that may contain non-inexact leaves."""
+
+    def z(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return jnp.zeros_like(x)
+        return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
+
+    return jax.tree_util.tree_map(z, tree)
+
+
+def _ct_add(a, b):
+    def add(x, y):
+        if hasattr(x, "dtype") and x.dtype == jax.dtypes.float0:
+            return x
+        return x + y
+
+    return jax.tree_util.tree_map(add, a, b)
+
+
+def _segment_counts(n_steps: int, save_every: Optional[int]):
+    if save_every is None:
+        return 1, n_steps
+    if n_steps % save_every != 0:
+        raise ValueError(f"n_steps={n_steps} not divisible by save_every={save_every}")
+    return n_steps // save_every, save_every
+
+
+# ---------------------------------------------------------------------------
+# Full & recursive adjoints: scan-of-scans, optionally rematerialised.
+# ---------------------------------------------------------------------------
+
+def _solve_scan(solver, term, y0, bm: BrownianPath, args, save_every, remat_chunk):
+    n_seg, seg_len = _segment_counts(bm.n_steps, save_every)
+    h = bm.h
+
+    def one_step(state, n):
+        return (
+            solver.step(term, state, bm.t_of(n), h, bm.increment(n), args),
+            None,
+        )
+
+    if remat_chunk is None:
+        def segment(state, n0):
+            state, _ = jax.lax.scan(one_step, state, n0 + jnp.arange(seg_len))
+            return state, (solver.extract(state) if save_every else None)
+    else:
+        if seg_len % remat_chunk != 0:
+            raise ValueError("segment length must be divisible by remat_chunk")
+
+        @jax.checkpoint
+        def chunk(state, c0):
+            state, _ = jax.lax.scan(one_step, state, c0 + jnp.arange(remat_chunk))
+            return state, None
+
+        def segment(state, n0):
+            state, _ = jax.lax.scan(
+                chunk, state, n0 + remat_chunk * jnp.arange(seg_len // remat_chunk)
+            )
+            return state, (solver.extract(state) if save_every else None)
+
+    state0 = solver.init(term, bm.t0, y0, args)
+    starts = seg_len * jnp.arange(n_seg)
+    state_f, ys = jax.lax.scan(segment, state0, starts)
+    return SolveResult(solver.extract(state_f), ys if save_every else None)
+
+
+# ---------------------------------------------------------------------------
+# Reversible adjoint (Algorithm 1 / 2).
+# ---------------------------------------------------------------------------
+
+def _solve_reversible(solver, term, y0, bm: BrownianPath, args, save_every):
+    n_steps = bm.n_steps
+    n_seg, seg_len = _segment_counts(n_steps, save_every)
+    h = bm.h
+    bm_static = dataclasses.replace(bm, key=None)  # template; key passed explicitly
+
+    def forward(key, y0, args):
+        b = dataclasses.replace(bm_static, key=key)
+
+        def one_step(state, n):
+            return solver.step(term, state, b.t_of(n), h, b.increment(n), args), None
+
+        def segment(state, n0):
+            state, _ = jax.lax.scan(one_step, state, n0 + jnp.arange(seg_len))
+            return state, (solver.extract(state) if save_every else None)
+
+        state0 = solver.init(term, b.t0, y0, args)
+        state_f, ys = jax.lax.scan(segment, state0, seg_len * jnp.arange(n_seg))
+        return state_f, (ys if save_every else None)
+
+    @jax.custom_vjp
+    def run(key, y0, args):
+        state_f, ys = forward(key, y0, args)
+        return SolveResult(solver.extract(state_f), ys)
+
+    def run_fwd(key, y0, args):
+        state_f, ys = forward(key, y0, args)
+        return SolveResult(solver.extract(state_f), ys), (key, state_f, y0, args)
+
+    def run_bwd(res, ct):
+        key, state_f, y0, args = res
+        ct_yf, ct_ys = ct.y_final, ct.ys
+        b = dataclasses.replace(bm_static, key=key)
+
+        # Inject the terminal cotangent through `extract`.
+        _, vjp_ex = jax.vjp(solver.extract, state_f)
+        (ct_state,) = vjp_ex(ct_yf)
+        ct_args = _float0_like(args)
+
+        def body(carry, n):
+            state, ct_state, ct_args = carry
+            t = b.t_of(n)
+            dW = b.increment(n)
+            # 1. Reconstruct the pre-step state (O(h^{m+1}) drift for EES;
+            #    exact for algebraically reversible solvers).
+            prev = solver.reverse(term, state, t, h, dW, args)
+            # 2. If step n produced a saved output, add its cotangent now.
+            if save_every is not None:
+                is_save = (n + 1) % seg_len == 0
+                idx = jnp.clip((n + 1) // seg_len - 1, 0, n_seg - 1)
+                picked = jax.tree_util.tree_map(
+                    lambda a: a[idx] * jnp.asarray(is_save, a.dtype), ct_ys
+                )
+                _, vex = jax.vjp(solver.extract, state)
+                (inc,) = vex(picked)
+                ct_state = tree_add(ct_state, inc)
+            # 3. Re-play the step under vjp for exact local cotangents.
+            def step_fn(s, a):
+                return solver.step(term, s, t, h, dW, a)
+
+            _, vjp = jax.vjp(step_fn, prev, args)
+            ct_prev, ct_args_inc = vjp(ct_state)
+            return (prev, ct_prev, _ct_add(ct_args, ct_args_inc)), None
+
+        (state0_rec, ct_state0, ct_args), _ = jax.lax.scan(
+            body, (state_f, ct_state, ct_args), jnp.arange(n_steps - 1, -1, -1)
+        )
+
+        # Back out through `init` (matters for solvers whose init evaluates
+        # the vector field, e.g. Reversible Heun).
+        y0_rec = solver.extract(state0_rec)
+
+        def init_fn(y, a):
+            return solver.init(term, b.t0, y, a)
+
+        _, vjp0 = jax.vjp(init_fn, y0_rec, args)
+        ct_y0, ct_args_inc = vjp0(ct_state0)
+        ct_args = _ct_add(ct_args, ct_args_inc)
+        ct_key = np.zeros(jnp.shape(key), dtype=jax.dtypes.float0)
+        return (ct_key, ct_y0, ct_args)
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(bm.key, y0, args)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point.
+# ---------------------------------------------------------------------------
+
+def solve(
+    solver,
+    term,
+    y0,
+    bm: BrownianPath,
+    args=None,
+    *,
+    adjoint: str = "full",
+    save_every: Optional[int] = None,
+    remat_chunk: Optional[int] = None,
+) -> SolveResult:
+    """Integrate ``term`` over the Brownian grid of ``bm`` with ``solver``.
+
+    adjoint:
+      * ``"full"``       — O(n) memory, exact discrete gradients.
+      * ``"recursive"``  — remat at ``remat_chunk`` granularity (default
+        ~sqrt(segment)), O(sqrt n) memory.
+      * ``"reversible"`` — O(1) memory via reverse reconstruction.
+
+    ``save_every`` saves ``extract(state)`` every that many steps (must divide
+    ``n_steps``); the saved trajectory participates in autodiff under every
+    adjoint mode.
+    """
+    if adjoint == "full":
+        return _solve_scan(solver, term, y0, bm, args, save_every, None)
+    if adjoint == "recursive":
+        if remat_chunk is None:
+            seg = save_every if save_every is not None else bm.n_steps
+            remat_chunk = max(1, int(math.isqrt(seg)))
+            while seg % remat_chunk != 0:
+                remat_chunk -= 1
+        return _solve_scan(solver, term, y0, bm, args, save_every, remat_chunk)
+    if adjoint == "reversible":
+        return _solve_reversible(solver, term, y0, bm, args, save_every)
+    raise ValueError(f"unknown adjoint {adjoint!r}")

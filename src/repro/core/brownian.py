@@ -1,0 +1,87 @@
+"""Counter-based Brownian motion for reversible solvers.
+
+Reversible adjoints must regenerate the *same* Brownian increment ``dW_n``
+during the backward reconstruction sweep without storing the path.  We use a
+counter-based construction (the fixed-grid analogue of a virtual Brownian
+tree): the increment over step ``n`` is a deterministic function of
+``fold_in(key, n)``, so any increment is recomputable in O(1) memory and O(1)
+time, in any order, on-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BrownianPath", "brownian_path"]
+
+
+def _is_simple_shape(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BrownianPath:
+    """Fixed-grid Brownian driver over [t0, t1] with ``n_steps`` steps.
+
+    ``shape`` is the shape of one increment (for diagonal noise: the state
+    shape; for general noise: ``(..., m)`` noise channels).  All increments
+    have standard deviation ``sqrt(h)``.
+    """
+
+    key: jax.Array
+    t0: float
+    t1: float
+    n_steps: int
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+
+    # -- pytree plumbing (key is a leaf; the rest is static) ----------------
+    def tree_flatten(self):
+        return (self.key,), (self.t0, self.t1, self.n_steps, self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (key,) = children
+        t0, t1, n_steps, shape, dtype = aux
+        return cls(key, t0, t1, n_steps, shape, dtype)
+
+    @property
+    def h(self) -> float:
+        return (self.t1 - self.t0) / self.n_steps
+
+    def t_of(self, n) -> jax.Array:
+        return self.t0 + n * self.h
+
+    def increment(self, n):
+        """dW over step n (t_n -> t_{n+1}); ``n`` may be a traced integer.
+
+        ``shape`` may be a simple shape tuple or a *pytree of shapes* (e.g.
+        ``((N,), (N,))`` for a product-group state) — the increments then form
+        the matching pytree, each leaf drawn from an independent stream.
+        """
+        sub = jax.random.fold_in(self.key, n)
+        scale = jnp.sqrt(jnp.asarray(self.h, self.dtype))
+        if _is_simple_shape(self.shape):
+            return scale * jax.random.normal(sub, self.shape, self.dtype)
+        leaves, treedef = jax.tree_util.tree_flatten(self.shape, is_leaf=_is_simple_shape)
+        keys = jax.random.split(sub, len(leaves))
+        outs = [scale * jax.random.normal(k, s, self.dtype) for k, s in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def path(self) -> jax.Array:
+        """Cumulative path W_{t_n}, shape (n_steps+1, *shape) — for analysis only."""
+        incs = jax.vmap(self.increment)(jnp.arange(self.n_steps))
+        w = jax.tree_util.tree_map(lambda x: jnp.cumsum(x, axis=0), incs)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([jnp.zeros_like(x[:1]), x], axis=0), w
+        )
+
+
+def brownian_path(key, t0, t1, n_steps, shape=(), dtype=jnp.float32) -> BrownianPath:
+    if isinstance(shape, list):
+        shape = tuple(shape)
+    return BrownianPath(key, float(t0), float(t1), int(n_steps), shape, dtype)

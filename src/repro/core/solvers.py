@@ -1,0 +1,305 @@
+"""Euclidean SDE solvers: EES Runge-Kutta (Butcher + Williamson 2N forms),
+Reversible Heun, and McCallum-Foster reversible couplings.
+
+SDEs ``dy = f(y) dt + g(y) o dW`` are treated as RDEs driven by X = (t, W):
+a Runge-Kutta tableau is applied with the vector-field increment
+
+    F(t, y) . dX  =  f(t, y) h  +  g(t, y) . dW
+
+in place of ``h f`` (the "simplified" Redmann-Riedel scheme, eq. (7)).  For
+Brownian drivers this yields strong order 1/2 and weak order 1; for smoother
+drivers (e.g. fBm with H > 1/2) higher rates follow from Theorem B.3.
+
+All solvers expose a uniform interface:
+
+    state  = solver.init(term, t0, y0, args)
+    state' = solver.step(term, state, t, h, dW, args)      # t -> t + h
+    state  = solver.reverse(term, state', t, h, dW, args)  # undo that step
+    y      = solver.extract(state)
+
+``reverse`` is *exact* (algebraic) for ReversibleHeun and MCF, and accurate to
+O(h^{m+1}) per step for EES(2,m) schemes (effective symmetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .tableaux import Tableau
+from .williamson import EES25_2N, EES27_2N, LowStorage
+
+__all__ = [
+    "SDETerm",
+    "ButcherSolver",
+    "LowStorageSolver",
+    "ReversibleHeun",
+    "MCFSolver",
+    "ees25_solver",
+    "ees27_solver",
+    "tree_add",
+    "tree_scale",
+    "tree_axpy",
+    "tree_zeros_like",
+]
+
+
+# -- pytree linear algebra ---------------------------------------------------
+
+def tree_add(x, y):
+    return jax.tree_util.tree_map(jnp.add, x, y)
+
+
+def tree_sub(x, y):
+    return jax.tree_util.tree_map(jnp.subtract, x, y)
+
+
+def tree_scale(a, x):
+    return jax.tree_util.tree_map(lambda xi: a * xi, x)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y."""
+    return jax.tree_util.tree_map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_zeros_like(x):
+    return jax.tree_util.tree_map(jnp.zeros_like, x)
+
+
+# -- SDE term ----------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SDETerm:
+    """Drift + diffusion with a declared noise structure.
+
+    noise:
+      * "none"     — ODE; ``diffusion`` is ignored.
+      * "diagonal" — ``diffusion(t,y,args)`` has the same pytree structure as
+        ``y``; ``dW`` likewise; the product is elementwise.  (Additive noise is
+        the special case where ``diffusion`` ignores ``y``.)
+      * "general"  — array state ``(..., d)``; ``diffusion`` returns
+        ``(..., d, m)``; ``dW`` is ``(..., m)``.
+    """
+
+    drift: Callable[..., Any]
+    diffusion: Optional[Callable[..., Any]] = None
+    noise: str = "diagonal"
+
+    def evals(self, t, y, args):
+        """Vector-field evaluation, returned as a (f, g) pair."""
+        f = self.drift(t, y, args)
+        g = None if self.noise == "none" else self.diffusion(t, y, args)
+        return f, g
+
+    def combine(self, f, g, h, dW):
+        """f * h + g . dW  (the driver-weighted increment)."""
+        out = tree_scale(h, f)
+        if self.noise == "none" or g is None:
+            return out
+        if self.noise == "diagonal":
+            return jax.tree_util.tree_map(lambda o, gi, wi: o + gi * wi, out, g, dW)
+        if self.noise == "general":
+            return jax.tree_util.tree_map(
+                lambda o, gi, wi: o + jnp.einsum("...dm,...m->...d", gi, wi), out, g, dW
+            )
+        raise ValueError(f"unknown noise mode {self.noise!r}")
+
+    def increment(self, t, y, args, h, dW):
+        f, g = self.evals(t, y, args)
+        return self.combine(f, g, h, dW)
+
+
+# -- Butcher-form RK solver ---------------------------------------------------
+
+class ButcherSolver:
+    """Classical (s+1)N-register explicit RK applied to the (h, dW) driver."""
+
+    def __init__(self, tab: Tableau):
+        self.tab = tab
+        self.name = tab.name
+        self.evals_per_step = tab.stages
+        self.is_reversible = tab.sym_order > tab.order  # effectively symmetric
+
+    def init(self, term, t0, y0, args):
+        return y0
+
+    def extract(self, state):
+        return state
+
+    def step(self, term, state, t, h, dW, args):
+        tab = self.tab
+        y = state
+        incrs = []
+        for i in range(tab.stages):
+            yi = y
+            for j in range(i):
+                if tab.a[i][j] != 0.0:
+                    yi = tree_axpy(tab.a[i][j], incrs[j], yi)
+            incrs.append(term.increment(t + tab.c[i] * h, yi, args, h, dW))
+        out = y
+        for i in range(tab.stages):
+            if tab.b[i] != 0.0:
+                out = tree_axpy(tab.b[i], incrs[i], out)
+        return out
+
+    def reverse(self, term, state, t, h, dW, args):
+        # Near-reversible reconstruction: the same scheme with negated driver
+        # increments, started from the end of the step (time t + h).
+        return self.step(term, state, t + h, -h, tree_scale(-1.0, dW), args)
+
+
+# -- Williamson 2N solver ------------------------------------------------------
+
+class LowStorageSolver:
+    """Two-register Williamson form (eq. (2)): the paper's memory-optimal EES."""
+
+    def __init__(self, ls: LowStorage, use_kernel: bool = False):
+        self.ls = ls
+        self.name = ls.name
+        self.evals_per_step = ls.stages
+        self.is_reversible = ls.sym_order > ls.order
+        # Optional fused Pallas update (beyond-paper TPU optimisation).
+        self.use_kernel = use_kernel
+
+    def init(self, term, t0, y0, args):
+        return y0
+
+    def extract(self, state):
+        return state
+
+    def _update(self, a, b, delta, k, y):
+        """delta' = a*delta + k ; y' = y + b*delta'  (optionally fused)."""
+        if self.use_kernel:
+            from repro.kernels.williamson2n.ops import williamson2n_update
+
+            def upd(d, kk, yy):
+                return williamson2n_update(d, kk, yy, a, b)
+
+            pairs = jax.tree_util.tree_map(upd, delta, k, y)
+            delta2 = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                            is_leaf=lambda p: isinstance(p, tuple))
+            y2 = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                        is_leaf=lambda p: isinstance(p, tuple))
+            return delta2, y2
+        delta2 = tree_axpy(a, delta, k)
+        y2 = tree_axpy(b, delta2, y)
+        return delta2, y2
+
+    def step(self, term, state, t, h, dW, args):
+        ls = self.ls
+        y = state
+        delta = tree_zeros_like(y)
+        for l in range(ls.stages):
+            k = term.increment(t + ls.c[l] * h, y, args, h, dW)
+            delta, y = self._update(ls.A[l], ls.B[l], delta, k, y)
+        return y
+
+    def reverse(self, term, state, t, h, dW, args):
+        return self.step(term, state, t + h, -h, tree_scale(-1.0, dW), args)
+
+
+# -- Reversible Heun (Kidger et al. 2021) --------------------------------------
+
+class ReversibleHeun:
+    """Algebraically reversible two-state Heun; one (f, g) evaluation per step.
+
+    State: (y, yhat, f(t, yhat), g(t, yhat)).  Stability region is the segment
+    lambda*h in [-i, i] (Theorem 2.1) — the instability the EES schemes fix.
+    """
+
+    name = "ReversibleHeun"
+    evals_per_step = 1
+    is_reversible = True
+
+    def init(self, term, t0, y0, args):
+        f, g = term.evals(t0, y0, args)
+        if g is None:
+            g = tree_zeros_like(f)
+        return (y0, y0, f, g)
+
+    def extract(self, state):
+        return state[0]
+
+    def step(self, term, state, t, h, dW, args):
+        y, yh, fh, gh = state
+        inc_prev = term.combine(fh, gh, h, dW)
+        yh2 = tree_add(tree_sub(tree_scale(2.0, y), yh), inc_prev)
+        f2, g2 = term.evals(t + h, yh2, args)
+        if g2 is None:
+            g2 = tree_zeros_like(f2)
+        inc_next = term.combine(f2, g2, h, dW)
+        y2 = tree_axpy(0.5, tree_add(inc_prev, inc_next), y)
+        return (y2, yh2, f2, g2)
+
+    def reverse(self, term, state, t, h, dW, args):
+        # Exact: the scheme is its own inverse under (h, dW) -> (-h, -dW).
+        return self.step(term, state, t + h, -h, tree_scale(-1.0, dW), args)
+
+
+# -- McCallum-Foster reversible coupling ----------------------------------------
+
+class MCFSolver:
+    """Reversible coupling of an arbitrary base RK method (McCallum & Foster).
+
+        y' = lam*y + (1-lam)*z + Psi_{dX}(z)
+        z' = z - Psi_{-dX}(y')
+
+    with exact algebraic inverse.  ``Psi_dX`` is the base-method increment over
+    the driver increment dX = (h, dW).  Costs 2x the base stages per step.
+    """
+
+    def __init__(self, base: Tableau, lam: float = 0.999, name: Optional[str] = None):
+        self.base = ButcherSolver(base)
+        self.lam = lam
+        self.name = name or f"MCF-{base.name}"
+        self.evals_per_step = 2 * base.stages
+        self.is_reversible = True
+
+    def _psi(self, term, z, t, h, dW, args):
+        return tree_sub(self.base.step(term, z, t, h, dW, args), z)
+
+    def init(self, term, t0, y0, args):
+        return (y0, y0)
+
+    def extract(self, state):
+        return state[0]
+
+    def step(self, term, state, t, h, dW, args):
+        y, z = state
+        lam = self.lam
+        y2 = tree_add(
+            tree_axpy(lam, y, tree_scale(1.0 - lam, z)),
+            self._psi(term, z, t, h, dW, args),
+        )
+        ndW = tree_scale(-1.0, dW)
+        z2 = tree_sub(z, self._psi(term, y2, t + h, -h, ndW, args))
+        return (y2, z2)
+
+    def reverse(self, term, state, t, h, dW, args):
+        y2, z2 = state
+        lam = self.lam
+        ndW = tree_scale(-1.0, dW)
+        z = tree_add(z2, self._psi(term, y2, t + h, -h, ndW, args))
+        y = tree_scale(
+            1.0 / lam,
+            tree_sub(
+                tree_sub(y2, tree_scale(1.0 - lam, z)),
+                self._psi(term, z, t, h, dW, args),
+            ),
+        )
+        return (y, z)
+
+
+def ees25_solver(x: float = 0.1, use_kernel: bool = False) -> LowStorageSolver:
+    if x == 0.1:
+        return LowStorageSolver(EES25_2N, use_kernel=use_kernel)
+    from .williamson import ees25_2n
+
+    return LowStorageSolver(ees25_2n(x), use_kernel=use_kernel)
+
+
+def ees27_solver(use_kernel: bool = False) -> LowStorageSolver:
+    return LowStorageSolver(EES27_2N, use_kernel=use_kernel)

@@ -1,0 +1,21 @@
+"""Dispatching wrapper: Pallas flash kernel on TPU, reference path elsewhere.
+
+The LM substrate calls :func:`attention`; the dry-run (CPU host, fake TPU
+device count) and smoke tests take the reference path, a real TPU deployment
+takes the kernel.  Both compute the same function (tested in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def attention(q, k, v, *, causal=True, sm_scale=None, use_kernel: str = "auto"):
+    """use_kernel: 'auto' (TPU backend only), 'never', 'interpret' (tests)."""
+    if use_kernel == "interpret":
+        return flash_attention(q, k, v, causal=causal, sm_scale=sm_scale, interpret=True)
+    if use_kernel == "auto" and jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, causal=causal, sm_scale=sm_scale)
+    return attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)

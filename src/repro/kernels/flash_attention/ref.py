@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: materialised causal GQA attention."""
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, sm_scale=None):
+    """q: (b, hq, sq, d); k, v: (b, hk, sk, d); returns (b, hq, sq, d)."""
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    group = hq // hk
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

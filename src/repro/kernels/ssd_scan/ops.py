@@ -1,0 +1,22 @@
+"""Dispatching wrapper for the SSD scan.
+
+On TPU: the Pallas kernel.  Elsewhere: the vectorised chunked reference
+(which is itself the form used by the LM substrate so the dry-run lowers a
+realistic chunked computation, not a per-token scan).
+"""
+from __future__ import annotations
+
+import jax
+
+from .ref import ssd_chunked_ref, ssd_ref
+from .ssd_scan import ssd_scan
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, use_kernel: str = "auto"):
+    """Returns y (b, l, h, dh).  See ref.ssd_ref for semantics."""
+    if use_kernel == "interpret":
+        return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    if use_kernel == "auto" and jax.default_backend() == "tpu":
+        return ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y, _ = ssd_chunked_ref(x, dt, A, B, C, chunk=min(chunk, x.shape[1]))
+    return y

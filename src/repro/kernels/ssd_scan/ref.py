@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space dual) scan.
+
+Per head h with scalar decay ``A_h < 0``, state S in R^{dh x ds}::
+
+    a_t = exp(A dt_t)
+    S_t = a_t S_{t-1} + (dt_t x_t) (outer) B_t
+    y_t = S_t C_t  (+ D x_t skip handled by the caller)
+
+``ssd_ref`` is the sequential recurrence (ground truth); ``ssd_chunked_ref``
+is the vectorised chunked form the Pallas kernel mirrors (and the form the LM
+substrate uses on non-TPU backends).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, S0=None):
+    """x: (b, l, h, dh); dt: (b, l, h); A: (h,); B, C: (b, l, ds).
+
+    Returns y: (b, l, h, dh) and final state (b, h, dh, ds).
+    """
+    b, l, h, dh = x.shape
+    ds = B.shape[-1]
+    if S0 is None:
+        S0 = jnp.zeros((b, h, dh, ds), jnp.promote_types(x.dtype, jnp.float32))
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,dh), (b,h), (b,ds), (b,ds)
+        a = jnp.exp(A[None, :] * dtt)  # (b,h)
+        dx = dtt[..., None] * xt  # (b,h,dh)
+        S = a[..., None, None] * S + dx[..., None] * Bt[:, None, None, :]
+        y = jnp.einsum("bhds,bs->bhd", S, Ct)
+        return S, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int = 64, S0=None):
+    """Chunked SSD: intra-chunk attention-like term + inter-chunk state pass."""
+    b, l, h, dh = x.shape
+    ds = B.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    if S0 is None:
+        S0 = jnp.zeros((b, h, dh, ds), jnp.promote_types(x.dtype, jnp.float32))
+
+    xr = x.reshape(b, nc, chunk, h, dh)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = B.reshape(b, nc, chunk, ds)
+    Cr = C.reshape(b, nc, chunk, ds)
+
+    lam = A[None, None, None, :] * dtr  # (b,nc,L,h) log-decay increments
+    cum = jnp.cumsum(lam, axis=2)  # inclusive cumsum
+    # intra-chunk: M[t, s] = (C_t . B_s) * exp(cum_t - cum_s) for s <= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,t,s,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    CB = jnp.einsum("bnts,bnus->bntu", Cr, Br)  # (b,nc,t,s)
+    M = CB[..., None] * jnp.exp(seg)  # (b,nc,t,s,h)
+    dx = dtr[..., None] * xr  # (b,nc,L,h,dh)
+    y_intra = jnp.einsum("bntsh,bnshd->bnthd", M, dx)
+
+    # inter-chunk: states at chunk boundaries.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h)
+    # contribution of chunk n to its end-state:
+    inc = jnp.einsum(
+        "bnsh,bnshd,bnsk->bnhdk", jnp.exp(cum[:, :, -1:, :] - cum), dx, Br
+    )  # (b,nc,h,dh,ds)
+
+    def pass_state(S, inp):
+        decay, incn = inp
+        S_out = S  # state entering the chunk
+        S = decay[..., None, None] * S + incn
+        return S, S_out
+
+    decays = jnp.moveaxis(chunk_decay, 1, 0)
+    incs = jnp.moveaxis(inc, 1, 0)
+    S_final, S_ins = jax.lax.scan(pass_state, S0, (decays, incs))
+    S_ins = jnp.moveaxis(S_ins, 0, 1)  # (b,nc,h,dh,ds) state entering each chunk
+
+    y_inter = jnp.einsum(
+        "bnth,bnhdk,bntk->bnthd", jnp.exp(cum), S_ins, Cr
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, dh)
+    return y, S_final

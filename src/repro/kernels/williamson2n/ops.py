@@ -1,0 +1,63 @@
+"""Jitted wrapper for the fused 2N update: arbitrary-shape states, custom VJP.
+
+The update is linear in (delta, k, y), so the VJP is closed-form::
+
+    ct_delta = a * (ct_delta' + b * ct_y')
+    ct_k     =      ct_delta' + b * ct_y'
+    ct_y     =      ct_y'
+
+which keeps the reversible adjoint's inner ``jax.vjp`` working through the
+kernel without a Pallas transpose rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import williamson2n_ref
+from .williamson2n import LANE, SUBLANE, williamson2n_2d
+
+_TILE = LANE * SUBLANE
+
+
+def _use_pallas(x: jax.Array) -> bool:
+    # Only the TPU backend can lower the compiled kernel; everywhere else the
+    # reference path is used (identical numerics), or interpret=True in tests.
+    return jax.default_backend() == "tpu" and x.size >= _TILE
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def williamson2n_update(delta, k, y, a: float, b: float, interpret: bool = False):
+    """delta' = a*delta + k; y' = y + b*delta'; fused on TPU.  Returns (delta', y')."""
+    if not (interpret or _use_pallas(delta)):
+        return williamson2n_ref(delta, k, y, a, b)
+    shape, dtype = delta.shape, delta.dtype
+    n = delta.size
+    pad = (-n) % _TILE
+    def to2d(x):
+        flat = x.reshape(-1)
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros(pad, dtype)])
+        return flat.reshape(-1, LANE)
+
+    d2, y2 = williamson2n_2d(to2d(delta), to2d(k), to2d(y), a=a, b=b, interpret=interpret)
+
+    def back(x):
+        return x.reshape(-1)[:n].reshape(shape)
+
+    return back(d2), back(y2)
+
+
+def _fwd(delta, k, y, a, b, interpret):
+    return williamson2n_update(delta, k, y, a, b, interpret), None
+
+
+def _bwd(a, b, interpret, _, ct):
+    ct_d2, ct_y2 = ct
+    common = ct_d2 + b * ct_y2
+    return (a * common, common, ct_y2)
+
+
+williamson2n_update.defvjp(_fwd, _bwd)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused Williamson 2N update."""
+import jax.numpy as jnp
+
+
+def williamson2n_ref(delta, k, y, a: float, b: float):
+    d2 = a * delta + k
+    y2 = y + b * d2
+    return d2, y2

@@ -1,0 +1,794 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder CPU devices stand in for 2 pods x 256 v5e chips.
+
+Two artifacts per cell:
+
+1. **Memory module** — the production step (scanned layers, remat, chunked
+   attention, gradient accumulation) jitted with production shardings;
+   ``.lower().compile()`` success proves shardability and
+   ``memory_analysis()`` proves the cell fits the 16 GiB v5e HBM.
+
+2. **Cost modules** — XLA's ``cost_analysis()`` counts a ``while`` body
+   *once*, ignoring trip count (verified against a hand-counted sharded
+   matmul), so the scanned-layer module under-reports FLOPs by ~L x.  We
+   therefore compile the per-layer body (forward, and vjp for training) as a
+   standalone module with identical shardings and assemble
+
+       total = outside + L * body (+ n_shared * shared_body)   [x microbatches]
+
+   for the §Roofline terms.  Collective bytes are parsed from each module's
+   partitioned HLO and assembled the same way.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --variant v2
+Results land in launch_results/<mesh>/<arch>__<shape>__<variant>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_SHAPES, cell_applicable, get_arch, get_shape, list_archs
+from repro.launch.mesh import (
+    batch_axes,
+    batch_pspecs,
+    cache_pspecs,
+    make_production_mesh,
+    opt_state_pspecs,
+    param_pspecs,
+    shardings_for,
+)
+from repro.launch.roofline import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    collective_bytes,
+    collective_bytes_structured,
+    memory_summary,
+)
+from repro.models import (
+    ModelOptions,
+    ShardingPolicy,
+    forward,
+    init_cache,
+    init_params,
+    make_serve_step,
+    serve_step,
+)
+from repro.models.transformer import _init_layer, _layer_apply, loss_fn
+from repro.models.layers import attn_block, init_attn_block, init_mlp, mlp_block
+from repro.models.ssm import init_mamba_cache, mamba_block_decode
+from repro.models.layers import attn_block_decode
+from repro.optim import adamw, cosine_schedule
+from repro.train.trainer import make_accum_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "launch_results")
+HBM_BUDGET = 16 * 2**30  # v5e
+
+_COST_KEYS = ("flops", "bytes", "coll", "transcendentals")
+
+
+# ---------------------------------------------------------------------------
+# Cell configuration heuristics.
+# ---------------------------------------------------------------------------
+
+def microbatches_for(cfg, shape, mesh) -> int:
+    """Gradient-accumulation factor so layer-boundary activations fit HBM."""
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= mesh.shape[a]
+    b_loc = max(shape.global_batch // dp, 1)
+    bound = cfg.n_layers * b_loc * shape.seq_len * cfg.d_model * 2  # bf16 carriers
+    if cfg.family == "moe":
+        # dispatch/scatter working set (xe + gate/up/down + bwd copies) is a
+        # multiple of the token volume through the experts
+        bound *= 4
+    budget = 4 * 2**30
+    k = max(1, (bound + budget - 1) // budget)
+    while b_loc % k != 0:  # must divide the local batch
+        k += 1
+    return min(k, b_loc)
+
+
+def input_specs(arch: str, shape_name: str, *, microbatches: int = 1):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+
+    def mb(shp):
+        if microbatches > 1:
+            return (microbatches, shp[0] // microbatches) + shp[1:]
+        return shp
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "frames":
+            batch = {"frames": jax.ShapeDtypeStruct(mb((B, S, cfg.frontend_dim)), jnp.bfloat16)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct(mb((B, S)), i32)}
+            if cfg.frontend == "patch":
+                batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                    mb((B, cfg.n_vision_tokens, cfg.frontend_dim)), jnp.bfloat16
+                )
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct(mb((B, S)), i32)
+            batch["loss_mask"] = jax.ShapeDtypeStruct(mb((B, S)), f32)
+        return batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+_BF16_BARRIER = os.environ.get("REPRO_BF16_BARRIER", "0") == "1"
+
+
+def _opts(mesh, *, seq_shard: bool = False, cache_constraints=None,
+          attn_chunk: int = 512) -> ModelOptions:
+    return ModelOptions(
+        remat=True,
+        use_flash="never",  # CPU host cannot lower Pallas; kernel used on real TPU
+        attn_chunk=attn_chunk,
+        shard=ShardingPolicy(
+            batch_axes=None if seq_shard else batch_axes(mesh),
+            model_axis="model",
+            seq_axes=batch_axes(mesh) if seq_shard else None,
+        ),
+        cache_constraints=cache_constraints,
+        bf16_ar_barrier=_BF16_BARRIER,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cost-module compilation.
+# ---------------------------------------------------------------------------
+
+def _cost_of(compiled, *, structured_coll: bool = False) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    text = compiled.as_text()
+    if structured_coll:
+        coll = collective_bytes_structured(text)
+    else:
+        coll = float(sum(v for k, v in collective_bytes(text).items() if k != "count"))
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "coll": coll,
+    }
+
+
+def _compile_cost(fn, args, in_shardings, mesh):
+    with mesh:
+        c = jax.jit(fn, in_shardings=in_shardings).lower(*args).compile()
+    return _cost_of(c)
+
+
+def _acc(total: Dict[str, float], part: Dict[str, float], factor: float = 1.0):
+    for k in _COST_KEYS:
+        total[k] = total.get(k, 0.0) + factor * part[k]
+    return total
+
+
+def _abstract_layer(cfg):
+    return jax.eval_shape(
+        lambda: _init_layer(cfg, jax.random.PRNGKey(0), jnp.bfloat16)
+    )
+
+
+def _layer_param_shardings(cfg, mesh, fsdp):
+    from repro.launch.mesh import _leaf_spec  # internal rule fn
+
+    al = _abstract_layer(cfg)
+
+    def assign(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        return _leaf_spec(mesh, keys[-1], leaf.shape, fsdp="data" if fsdp else None,
+                          stacked=False)
+
+    specs = jax.tree_util.tree_map_with_path(assign, al)
+    return al, shardings_for(mesh, specs)
+
+
+def build_cost_terms(cfg, shape, mesh, *, fsdp: bool, microbatches: int,
+                     full_cost: Dict[str, float]) -> Dict[str, float]:
+    """Assemble trip-count-corrected totals from per-layer cost modules."""
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    ba = batch_axes(mesh)
+    b_mb = max(B // microbatches, 1)
+    # unroll attention chunks inside the cost module (no inner while loop)
+    opts = _opts(mesh, attn_chunk=max(S, 1))
+    al, l_sh = _layer_param_shardings(cfg, mesh, fsdp)
+    h_sds = jax.ShapeDtypeStruct((b_mb, S, cfg.d_model), jnp.bfloat16)
+    h_sh = NamedSharding(mesh, P(ba, None, None))
+    shared = None
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        shared = jax.eval_shape(lambda: {
+            "attn": init_attn_block(cfg, jax.random.PRNGKey(0), jnp.bfloat16),
+            "mlp": init_mlp(cfg, jax.random.PRNGKey(0), jnp.bfloat16),
+        })
+        from repro.launch.mesh import _leaf_spec
+
+        def assign(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+            return _leaf_spec(mesh, keys[-1], leaf.shape, fsdp="data" if fsdp else None,
+                              stacked=False)
+
+        sh_specs = jax.tree_util.tree_map_with_path(assign, shared)
+        shared_sh = shardings_for(mesh, sh_specs)
+    n_inv = (L + cfg.shared_attn_every - 1) // cfg.shared_attn_every if shared else 0
+
+    def body_fwd(h, lp):
+        # idx=1: skip the shared-attn cond branch; it is costed separately.
+        return _layer_apply(cfg, opts, None, h, lp, jnp.int32(1))[0]
+
+    def shared_fwd(h, sp):
+        h = h + attn_block(cfg, sp["attn"], h, opts)
+        return h + mlp_block(cfg, sp["mlp"], h, opts)
+
+    total = dict.fromkeys(_COST_KEYS, 0.0)
+
+    # stub variants isolate HBM traffic the fused Pallas kernels eliminate
+    # (materialised attention scores / SSD segment matrices); the kernel-path
+    # memory term = stub bytes + analytic kernel I/O (q/k/v/o or x/B/C/y tiles
+    # stream once).  FLOPs are identical between paths.
+    stub_opts = _opts(mesh, attn_chunk=max(S, 1))
+    stub_opts = ModelOptions(**{**stub_opts.__dict__, "attn_impl": "stub"})
+
+    def body_fwd_stub(h, lp):
+        return _layer_apply(cfg, stub_opts, None, h, lp, jnp.int32(1))[0]
+
+    def shared_fwd_stub(h, sp):
+        h = h + attn_block(cfg, sp["attn"], h, stub_opts)
+        return h + mlp_block(cfg, sp["mlp"], h, stub_opts)
+
+    kio = _seq_mix_io_bytes(cfg, b_mb, S, mesh.size)
+    kernel_bytes = 0.0
+
+    if shape.kind == "train":
+        def body_vjp(h, ct, lp):
+            y, vjp = jax.vjp(body_fwd, h, lp)
+            return vjp(ct)
+
+        def body_vjp_stub(h, ct, lp):
+            y, vjp = jax.vjp(body_fwd_stub, h, lp)
+            return vjp(ct)
+
+        c_fwd = _compile_cost(body_fwd, (h_sds, al), (h_sh, l_sh), mesh)
+        c_vjp = _compile_cost(body_vjp, (h_sds, h_sds, al), (h_sh, h_sh, l_sh), mesh)
+        st_fwd = _compile_cost(body_fwd_stub, (h_sds, al), (h_sh, l_sh), mesh)
+        st_vjp = _compile_cost(body_vjp_stub, (h_sds, h_sds, al), (h_sh, h_sh, l_sh), mesh)
+        # remat: forward once + (recompute fwd + bwd) = fwd + vjp-module
+        _acc(total, c_fwd, L * microbatches)
+        _acc(total, c_vjp, L * microbatches)
+        kernel_bytes += (st_fwd["bytes"] + st_vjp["bytes"] + 4.5 * kio) * L * microbatches
+        if shared:
+            def shared_vjp(h, ct, sp):
+                y, vjp = jax.vjp(shared_fwd, h, sp)
+                return vjp(ct)
+
+            def shared_vjp_stub(h, ct, sp):
+                y, vjp = jax.vjp(shared_fwd_stub, h, sp)
+                return vjp(ct)
+
+            s_fwd = _compile_cost(shared_fwd, (h_sds, shared), (h_sh, shared_sh), mesh)
+            s_vjp = _compile_cost(shared_vjp, (h_sds, h_sds, shared),
+                                  (h_sh, h_sh, shared_sh), mesh)
+            ss_fwd = _compile_cost(shared_fwd_stub, (h_sds, shared), (h_sh, shared_sh), mesh)
+            ss_vjp = _compile_cost(shared_vjp_stub, (h_sds, h_sds, shared),
+                                   (h_sh, h_sh, shared_sh), mesh)
+            _acc(total, s_fwd, n_inv * microbatches)
+            _acc(total, s_vjp, n_inv * microbatches)
+            akio = _attn_io_bytes(cfg, b_mb, S, mesh.size)
+            kernel_bytes += (ss_fwd["bytes"] + ss_vjp["bytes"] + 4.5 * akio) * n_inv * microbatches
+        # outside (embed/head/loss/optimizer): the full module counted the
+        # scan body once; subtract one measured body to avoid double count.
+        _acc(total, full_cost, 1.0)
+        _acc(total, c_vjp, -1.0)
+        _acc(total, c_fwd, -1.0)
+        kernel_bytes += max(full_cost["bytes"] - c_vjp["bytes"] - c_fwd["bytes"], 0.0)
+        total["bytes_kernel"] = kernel_bytes
+        return total
+
+    if shape.kind == "prefill":
+        # At 32k the unrolled score tensor (b, H, S, S) exceeds practical HLO
+        # sizes; cost the layer with stub mixing + exact analytic attention
+        # flops (4 b H S^2 hd; the jnp fallback computes the full square).
+        analytic_attention = S >= 16384 and cfg.family not in ("ssm",)
+        st_fwd = _compile_cost(body_fwd_stub, (h_sds, al), (h_sh, l_sh), mesh)
+        if analytic_attention and cfg.family != "hybrid":
+            c_fwd = dict(st_fwd)
+            c_fwd["flops"] += _attn_flops(cfg, b_mb, S, mesh.size)
+            c_fwd["bytes"] += _attn_score_bytes(cfg, b_mb, S, mesh.size)
+        elif cfg.family == "hybrid":
+            c_fwd = _compile_cost(body_fwd, (h_sds, al), (h_sh, l_sh), mesh)
+        else:
+            c_fwd = _compile_cost(body_fwd, (h_sds, al), (h_sh, l_sh), mesh)
+        _acc(total, c_fwd, L)
+        kernel_bytes += (st_fwd["bytes"] + 1.0 * kio) * L
+        if shared:
+            ss_fwd = _compile_cost(shared_fwd_stub, (h_sds, shared), (h_sh, shared_sh), mesh)
+            if analytic_attention:
+                s_fwd = dict(ss_fwd)
+                s_fwd["flops"] += _attn_flops(cfg, b_mb, S, mesh.size)
+                s_fwd["bytes"] += _attn_score_bytes(cfg, b_mb, S, mesh.size)
+            else:
+                s_fwd = _compile_cost(shared_fwd, (h_sds, shared), (h_sh, shared_sh), mesh)
+            _acc(total, s_fwd, n_inv)
+            akio = _attn_io_bytes(cfg, b_mb, S, mesh.size)
+            kernel_bytes += (ss_fwd["bytes"] + 1.0 * akio) * n_inv
+        _acc(total, full_cost, 1.0)
+        _acc(total, c_fwd, -1.0)
+        kernel_bytes += max(full_cost["bytes"] - c_fwd["bytes"], 0.0)
+        total["bytes_kernel"] = kernel_bytes
+        return total
+
+    # decode: per-layer decode body with the production cache layout.
+    cc = _decode_cache_constraints(cfg, mesh, B, S)
+    d_opts = _opts(mesh, cache_constraints=cc)
+    h1 = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    h1_sh = NamedSharding(mesh, P(ba if B % _dp(mesh) == 0 and B > 1 else None, None, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if cfg.family in ("ssm", "hybrid"):
+        mc = jax.eval_shape(lambda: init_mamba_cache(cfg, B, jnp.bfloat16))
+        mc_specs = {k: cc[k] for k in mc}
+        mc_sh = {k: NamedSharding(mesh, v) for k, v in mc_specs.items()}
+
+        def dec_body(h, lc, lp):
+            out, nc = mamba_block_decode(cfg, lp["mamba"], h, lc)
+            return h + out, nc
+
+        c_dec = _compile_cost(dec_body, (h1, mc, al), (h1_sh, mc_sh, l_sh), mesh)
+        _acc(total, c_dec, L)
+        if shared:
+            hd = cfg.resolved_head_dim
+            kc = jax.ShapeDtypeStruct((B, cfg.n_kv_heads, S, hd), jnp.bfloat16)
+            kc_sh = NamedSharding(mesh, cc["k"])
+
+            def sh_dec(h, kca, vca, sp):
+                o, kcb, vcb = attn_block_decode(cfg, sp["attn"], h, kca, vca, jnp.int32(0))
+                h = h + o
+                return h + mlp_block(cfg, sp["mlp"], h, d_opts), kcb, vcb
+
+            s_dec = _compile_cost(sh_dec, (h1, kc, kc, shared),
+                                  (h1_sh, kc_sh, kc_sh, shared_sh), mesh)
+            _acc(total, s_dec, n_inv)
+    else:
+        hd = cfg.resolved_head_dim
+        kc = jax.ShapeDtypeStruct((B, cfg.n_kv_heads, S, hd), jnp.bfloat16)
+        kc_sh = NamedSharding(mesh, cc["k"])
+
+        def dec_body(h, kca, vca, lp):
+            o, kcb, vcb = attn_block_decode(cfg, lp["attn"], h, kca, vca, jnp.int32(0))
+            h = h + o
+            if cfg.family == "moe":
+                from repro.models.moe import moe_block
+
+                out, _ = moe_block(cfg, lp["moe"], h, d_opts)
+                h = h + out
+            else:
+                h = h + mlp_block(cfg, lp["mlp"], h, d_opts)
+            return h, kcb, vcb
+
+        c_dec = _compile_cost(dec_body, (h1, kc, kc, al), (h1_sh, kc_sh, kc_sh, l_sh), mesh)
+        _acc(total, c_dec, L)
+    _acc(total, full_cost, 1.0)
+    _acc(total, c_dec, -1.0)
+    total["bytes_kernel"] = total["bytes"]
+    return total
+
+
+
+
+def _attn_flops(cfg, b, S, n_devices) -> float:
+    """Full (non-causal-skip) attention flops per device: qk + pv."""
+    return 4.0 * b * cfg.n_heads * S * S * cfg.resolved_head_dim / n_devices
+
+
+def _attn_score_bytes(cfg, b, S, n_devices) -> float:
+    """Fallback-path score-matrix traffic per device (s write + softmax r/w +
+    p read: ~4 passes of the f32 (b, H, S, S) tensor)."""
+    return 4.0 * b * cfg.n_heads * S * S * 4.0 / n_devices
+
+
+def _attn_io_bytes(cfg, b, S, n_devices) -> float:
+    """Per-(layer, microbatch, device) flash-attention HBM I/O: q/k/v/o stream
+    once in bf16; running stats negligible."""
+    hd = cfg.resolved_head_dim
+    elems = b * S * hd * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
+    return 2.0 * elems / n_devices
+
+
+def _ssd_io_bytes(cfg, b, S, n_devices) -> float:
+    di, ds = cfg.d_inner, cfg.ssm_state
+    elems = b * S * (2 * di + 2 * ds + cfg.ssm_heads)
+    return 4.0 * elems / n_devices  # f32 path of the SSD kernel
+
+
+def _seq_mix_io_bytes(cfg, b, S, n_devices) -> float:
+    if cfg.family in ("ssm", "hybrid"):
+        return _ssd_io_bytes(cfg, b, S, n_devices)
+    return _attn_io_bytes(cfg, b, S, n_devices)
+
+
+
+def _local_bytes(tree, specs, mesh) -> float:
+    """Per-device bytes of a sharded pytree (leaf size / sharded axis sizes)."""
+    from repro.launch.mesh import axis_size
+
+    total = 0.0
+    for leaf, spec in zip(
+        jax.tree_util.tree_leaves(tree),
+        jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        shard = 1
+        for entry in tuple(spec):
+            shard *= axis_size(mesh, entry)
+        total += n * jnp.dtype(leaf.dtype).itemsize / max(shard, 1)
+    return total
+
+
+def _analytic_memory_bytes(cfg, shape, mesh, *, microbatches, al, l_specs) -> float:
+    """Fusion-aware HBM-traffic model (the post-fusion TPU estimate):
+
+        per layer/microbatch: 4x weight-shard (fwd read, remat read, bwd read,
+        grad write) + C x activation-boundary tensors (C ~= 45 train / 12
+        prefill, counting q/k/v/o, mlp gate/up/down, norms, residuals across
+        fwd + bwd + remat-fwd) + fused-kernel I/O;
+        outside: logits traffic (~6 passes) + embedding + optimizer sweep.
+
+    XLA's cost_analysis 'bytes accessed' is pre-fusion (every HLO op's
+    operands counted), a ~10x overestimate for fused pipelines; this model is
+    what the §Roofline dominance classification uses, with both measured
+    variants reported alongside.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp(mesh)
+    L = cfg.n_layers
+    mb = microbatches
+    b_loc = max(B // mb // dp, 1)
+    w_loc = _local_bytes(al, l_specs, mesh)
+    act = b_loc * S * cfg.d_model * 2.0
+    train = shape.kind == "train"
+    c_act = 45.0 if train else 12.0
+    c_w = 4.0 if train else 1.0
+    kio = _seq_mix_io_bytes(cfg, max(B // mb, 1), S, mesh.size) * (4.5 if train else 1.0)
+    per_layer = c_w * w_loc + c_act * act + kio
+    total = per_layer * L * mb
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        n_inv = (L + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        total += per_layer * n_inv * mb  # same order as a dense layer
+    # outside: logits + embed + optimizer sweep (per device)
+    from repro.launch.mesh import axis_size
+
+    v_shard = cfg.padded_vocab // max(
+        1, axis_size(mesh, "model") if cfg.padded_vocab % axis_size(mesh, "model") == 0 else 1
+    )
+    logits = b_loc * S * v_shard * 4.0 * (6.0 if train else 1.0) * mb
+    embed = cfg.padded_vocab * cfg.d_model * 2.0 / mesh.size * (3.0 if train else 1.0)
+    opt = 0.0
+    if train:
+        n_params_loc = cfg.param_count() * 2.0 / axis_size(mesh, "model")
+        opt = 7.0 * n_params_loc  # p r/w, m r/w, v r/w (f32~2x bf16), grads read
+    return total + logits + embed + opt
+
+def _dp(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _decode_cache_constraints(cfg, mesh, B, S):
+    """Per-layer cache PartitionSpecs (leading layer axis stripped)."""
+    abstract_cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    full = cache_pspecs(mesh, abstract_cache, batch=B)
+    out = {}
+
+    def strip(path, spec):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = keys[-1]
+        if name in ("shared_k", "shared_v"):
+            out["k" if name == "shared_k" else "v"] = P(*tuple(spec)[1:])
+        elif name in ("k", "v"):
+            out[name] = P(*tuple(spec)[1:])
+        elif name in ("state", "conv_x", "conv_B", "conv_C"):
+            # mamba leaves live under cache["mamba"][...] with leading L
+            out[name] = P(*tuple(spec)[1:])
+        return spec
+
+    jax.tree_util.tree_map_with_path(strip, full,
+                                     is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Memory-module build (the shardability + HBM proof).
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+               zero1: bool = False):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    B, S = shape.global_batch, shape.seq_len
+    mb = microbatches_for(cfg, shape, mesh)
+    seq_shard = shape.kind != "decode" and (B // mb) % _dp(mesh) != 0
+    opts = _opts(mesh, seq_shard=seq_shard)
+
+    abstract_params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_specs = param_pspecs(mesh, abstract_params, fsdp=fsdp)
+    p_sh = shardings_for(mesh, p_specs)
+    batch_sds = input_specs(arch, shape_name, microbatches=mb)
+
+    if shape.kind == "train":
+        optimizer = adamw(cosine_schedule(3e-4, 2000, 100_000))
+        abstract_opt = jax.eval_shape(optimizer.init, abstract_params)
+        o_sh = shardings_for(
+            mesh, opt_state_pspecs(mesh, abstract_opt, p_specs, zero1=zero1)
+        )
+        # microbatched batch leaves: (mb, B/mb, S...) -> batch axis is dim 1
+        def bspec(path, leaf):
+            dims = len(leaf.shape)
+            ba = batch_axes(mesh)
+            if mb > 1:
+                entries = (None, ba) + (None,) * (dims - 2)
+            elif seq_shard and dims >= 2:
+                entries = (None, ba) + (None,) * (dims - 2)
+            else:
+                entries = (ba,) + (None,) * (dims - 1)
+            from repro.launch.mesh import _safe
+
+            return _safe(mesh, leaf.shape, entries)
+
+        b_specs = jax.tree_util.tree_map_with_path(bspec, batch_sds)
+        b_sh = shardings_for(mesh, b_specs)
+        # bf16 grad accumulation for >16B-param models (buffer halving; §Perf)
+        adt = jnp.bfloat16 if cfg.param_count() > 16e9 else jnp.float32
+        grad_constraint = None
+        if zero1:
+            # ZeRO-2: reduce-scatter grads into a data-sharded accumulator.
+            gspecs = opt_state_pspecs(
+                mesh, jax.eval_shape(optimizer.init, abstract_params),
+                p_specs, zero1=True,
+            ).mu
+
+            def grad_constraint(tree):
+                return jax.tree_util.tree_map(
+                    lambda x, spec: jax.lax.with_sharding_constraint(x, spec),
+                    tree, gspecs,
+                    is_leaf=lambda x: x is None,
+                )
+        step = make_accum_train_step(cfg, optimizer, opts, microbatches=mb,
+                                     accum_dtype=adt, grad_constraint=grad_constraint)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (abstract_params, abstract_opt, batch_sds), mb
+
+    if shape.kind == "prefill":
+        b_specs = batch_pspecs(mesh, batch_sds, seq_shard=seq_shard)
+        b_sh = shardings_for(mesh, b_specs)
+
+        def prefill(params, batch):
+            logits, _ = forward(cfg, params, batch, opts, head_positions="last")
+            return logits
+
+        jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        return jitted, (abstract_params, batch_sds), mb
+
+    # decode
+    abstract_cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    c_specs = cache_pspecs(mesh, abstract_cache, batch=B)
+    c_sh = shardings_for(mesh, c_specs)
+    cc = _decode_cache_constraints(cfg, mesh, B, S)
+    d_opts = _opts(mesh, cache_constraints=cc)
+    if B % _dp(mesh) != 0 or B == 1:
+        d_opts = ModelOptions(
+            remat=d_opts.remat, use_flash=d_opts.use_flash,
+            attn_chunk=d_opts.attn_chunk,
+            shard=ShardingPolicy(batch_axes=None, model_axis="model"),
+            cache_constraints=cc,
+        )
+    tok_spec = P(batch_axes(mesh)) if B % _dp(mesh) == 0 and B > 1 else P()
+    tok_sh = NamedSharding(mesh, tok_spec)
+
+    def step(params, cache, tokens, pos):
+        return serve_step(cfg, params, cache, tokens, pos, d_opts)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, tok_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    sds = input_specs(arch, shape_name)
+    return jitted, (abstract_params, abstract_cache, sds["tokens"], sds["pos"]), mb
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N_active D for train; 2 N_active D for inference."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Cell runner.
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, fsdp: bool = True,
+             variant: str = "v2", cost: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "variant": variant, "status": "skipped", "reason": reason}
+    zero1 = variant.startswith("v3")
+    if zero1:
+        fsdp = False  # ZeRO-1: TP-only params, data-sharded moments
+    t0 = time.time()
+    with mesh:
+        jitted, args, mb = build_cell(arch, shape_name, mesh, fsdp=fsdp,
+                                      zero1=zero1)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = memory_summary(compiled)
+        full_cost = _cost_of(compiled, structured_coll=True)
+    t_mem = time.time() - t0
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "status": "ok",
+        "n_devices": mesh.size,
+        "microbatches": mb,
+        "fsdp": fsdp,
+        "compile_s": round(t_mem, 1),
+        "memory": mem,
+        "fits_hbm": mem["total_hbm_bytes"] <= HBM_BUDGET,
+        "full_module_cost": full_cost,
+    }
+    if cost:
+        terms = build_cost_terms(cfg, shape, mesh, fsdp=fsdp, microbatches=mb,
+                                 full_cost=full_cost)
+        # collectives: trust the structured full-module count (captures XLA's
+        # all-reduce hoisting out of the accumulation loop); flops/bytes come
+        # from the per-layer assembly (real per-iteration execution).
+        terms["coll"] = full_cost["coll"]
+        mf = model_flops_for(cfg, shape)
+        compute_s = terms["flops"] / PEAK_FLOPS
+        memory_s = terms["bytes"] / HBM_BW
+        memory_s_kernel = terms.get("bytes_kernel", terms["bytes"]) / HBM_BW
+        al = _abstract_layer(cfg)
+        _, l_sh_tmp = _layer_param_shardings(cfg, mesh, False)
+        l_specs_tmp = jax.tree_util.tree_map(lambda sh: sh.spec, l_sh_tmp)
+        analytic_bytes = _analytic_memory_bytes(
+            cfg, shape, mesh, microbatches=mb, al=al, l_specs=l_specs_tmp
+        )
+        memory_s_analytic = (
+            analytic_bytes / HBM_BW if shape.kind != "decode" else memory_s_kernel
+        )
+        collective_s = terms["coll"] / LINK_BW
+        tdict = {"compute": compute_s, "memory": memory_s_analytic,
+                 "collective": collective_s}
+        dominant = max(tdict, key=tdict.get)
+        rec["roofline"] = {
+            "flops": terms["flops"],
+            "bytes_accessed": terms["bytes"],
+            "bytes_accessed_kernel": terms.get("bytes_kernel", terms["bytes"]),
+            "coll_bytes": terms["coll"],
+            "transcendentals": terms["transcendentals"],
+            "compute_s": compute_s,
+            "memory_s_hlo_prefusion": memory_s,
+            "memory_s_kernel_prefusion": memory_s_kernel,
+            "memory_s": memory_s_analytic,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_ratio": mf / (terms["flops"] * mesh.size) if terms["flops"] else None,
+            "peak_fraction": compute_s / max(max(tdict.values()), 1e-30),
+        }
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def save(rec: dict):
+    d = os.path.join(os.path.abspath(RESULTS_DIR), rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    v = rec.get("variant", "baseline")
+    suffix = "" if v in ("baseline", "") else f"__{v}"
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--variant", default="v2")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in ALL_SHAPES:
+                cells.append((a, s.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_kind in meshes:
+        for arch, shape_name in cells:
+            suffix = "" if args.variant in ("baseline", "") else f"__{args.variant}"
+            out = os.path.join(os.path.abspath(RESULTS_DIR), mesh_kind,
+                               f"{arch}__{shape_name}{suffix}.json")
+            if args.skip_existing and os.path.exists(out):
+                print(f"[skip-existing] {mesh_kind} {arch} {shape_name}", flush=True)
+                continue
+            try:
+                rec = run_cell(arch, shape_name, mesh_kind, fsdp=not args.no_fsdp,
+                               variant=args.variant, cost=not args.no_cost)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                       "variant": args.variant, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            save(rec)
+            tag = rec["status"]
+            n_ok += tag == "ok"
+            n_skip += tag == "skipped"
+            n_fail += tag == "error"
+            extra = ""
+            if tag == "ok":
+                extra = (f" hbm={rec['memory']['total_hbm_bytes']/2**30:.2f}GiB"
+                         f" fits={rec['fits_hbm']} mb={rec['microbatches']}")
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    extra += (f" dom={r['dominant']} comp={r['compute_s']*1e3:.1f}ms"
+                              f" mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms"
+                              f" useful={r['useful_ratio']:.2f}" if r.get("useful_ratio") else "")
+            elif tag == "error":
+                extra = " " + rec["error"][:160]
+            print(f"[{tag}] {mesh_kind:6s} {arch:20s} {shape_name:12s}{extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Production mesh + sharding rules (DP x TP x EP x SP over (pod, data, model)).
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state.  Sharding is rule-based over parameter paths:
+
+  embeddings       vocab on "model"            (vocab-parallel head + loss)
+  attention q/k/v  columns on "model"          (head-parallel)
+  attention o      rows on "model"
+  mlp up/gate      columns on "model"          (megatron TP)
+  mlp down         rows on "model"
+  MoE experts      expert axis on "model"      (EP; all-to-all at dispatch)
+  mamba z/x/B/C    columns on "model"          (d_inner / d_state parallel)
+  mamba out        rows on "model"
+  per-head vectors "model" when divisible else replicated
+  norms / biases   replicated
+  (+ optional FSDP: remaining big axis on "data", ZeRO-3 style)
+
+Every rule is divisibility-guarded: a dim that does not divide the mesh axis
+falls back to replication for that dim (e.g. mamba2-130m's vocab=50280 on a
+16-way axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "make_production_mesh",
+    "axis_size",
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "shardings_for",
+    "opt_state_pspecs",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _safe(mesh: Mesh, shape, spec_entries):
+    """Drop shardings whose axis size does not divide the dim."""
+    out = []
+    for dim, entry in zip(shape, spec_entries):
+        if entry is None:
+            out.append(None)
+        elif dim % axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding.
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "wg", "wu", "wz", "wx", "wB", "wC", "wdt", "conv_x",
+        "conv_B", "conv_C"}
+_ROW = {"wo", "wd", "out_proj"}
+_HEADVEC = {"bq", "bk", "bv", "conv_bx", "conv_bB", "conv_bC", "A_log", "D",
+            "dt_bias", "gate_norm"}
+
+
+def _leaf_spec(mesh, name: str, shape, *, fsdp: Optional[str], stacked: bool):
+    eff = shape[1:] if stacked else shape
+    model = "model"
+
+    def done(entries):
+        if stacked:
+            entries = (None,) + tuple(entries)
+        return _safe(mesh, shape, entries)
+
+    if name == "embed":
+        return _safe(mesh, shape, (model, fsdp))
+    if name == "lm_head":
+        return _safe(mesh, shape, (fsdp, model))
+    if name in ("vision_proj", "frame_proj"):
+        return _safe(mesh, shape, (None, model))
+    if name == "router":
+        return done((None,) * len(eff))
+    if name in _COL:
+        if len(eff) == 3:  # MoE expert-stacked (E, d, f): EP on experts
+            return done((model, fsdp, None))
+        return done((fsdp, model))
+    if name in _ROW:
+        if len(eff) == 3:  # (E, f, d)
+            return done((model, None, fsdp))
+        return done((model, fsdp))
+    if name in _HEADVEC:
+        return done((model,) * 1 + (None,) * (len(eff) - 1))
+    # norms and anything unrecognised: replicate
+    return done((None,) * len(eff))
+
+
+def param_pspecs(mesh: Mesh, abstract_params, *, fsdp: bool = False):
+    """Pytree of PartitionSpec matching an (abstract) params tree."""
+    fsdp_axis = "data" if fsdp else None
+
+    def assign(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        stacked = "layers" in keys
+        return _leaf_spec(mesh, keys[-1], leaf.shape, fsdp=fsdp_axis, stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def opt_state_pspecs(mesh: Mesh, abstract_opt_state, pspecs_params, *, zero1: bool = False):
+    """OptState(step, mu, nu) sharded like the params.
+
+    ``zero1``: additionally shard the moments over the "data" axis (ZeRO-1) —
+    params stay TP-only (replicated across data) so no per-microbatch weight
+    all-gather; only the updated params are gathered once per step.
+    """
+    from repro.optim.optimizers import OptState
+
+    if not zero1:
+        return OptState(step=P(), mu=pspecs_params, nu=pspecs_params)
+
+    def extend(spec, leaf):
+        entries = list(tuple(spec)) + [None] * (len(leaf.shape) - len(tuple(spec)))
+        for i, (dim, e) in enumerate(zip(leaf.shape, entries)):
+            if e is None and dim % axis_size(mesh, "data") == 0 and dim > 1:
+                entries[i] = "data"
+                break
+        return _safe(mesh, leaf.shape, entries)
+
+    mu = jax.tree_util.tree_map(
+        extend, pspecs_params, abstract_opt_state.mu,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return OptState(step=P(), mu=mu, nu=mu)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache sharding.
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_pspecs(mesh: Mesh, abstract_batch, *, seq_shard: bool = False):
+    """tokens/labels (B, S, ...): batch on (pod, data); optionally SP on seq."""
+    ba = batch_axes(mesh)
+
+    def assign(path, leaf):
+        dims = len(leaf.shape)
+        if seq_shard and dims >= 2:
+            entries = (None, ba) + (None,) * (dims - 2)
+        else:
+            entries = (ba,) + (None,) * (dims - 1)
+        return _safe(mesh, leaf.shape, entries)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_batch)
+
+
+def cache_pspecs(mesh: Mesh, abstract_cache, *, batch: int):
+    """Decode caches: batch-shard when divisible, else shard heads/state on
+    "model" and sequence on data (the long_500k layout)."""
+    ba = batch_axes(mesh)
+    batch_ok = batch % axis_size(mesh, ba) == 0 and batch > 1
+
+    def assign(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        d = len(shape)
+        if name in ("k", "v", "shared_k", "shared_v"):
+            # (L|inv, B, KV, S, hd): batch on data; heads on model when they
+            # divide, otherwise sequence on model (split-k decode attention,
+            # softmax partial-sums psum over "model").
+            if batch_ok:
+                spec = _safe(mesh, shape, (None, ba, "model", None, None))
+                if spec[2] is None:
+                    spec = _safe(mesh, shape, (None, ba, None, "model", None))
+                return spec
+            spec = _safe(mesh, shape, (None, None, "model", ba, None))
+            if spec[2] is None:
+                return _safe(mesh, shape, (None, None, None, (ba + ("model",)) if isinstance(ba, tuple) else (ba, "model"), None))
+            return spec
+        if name == "state":  # (L, B, nh, dh, ds)
+            if batch_ok:
+                return _safe(mesh, shape, (None, ba, "model", None, None))
+            spec = _safe(mesh, shape, (None, None, "model", None, None))
+            if spec[2] is None:  # nh not divisible: shard the state dim
+                spec = _safe(mesh, shape, (None, None, None, None, "model"))
+            return spec
+        if name.startswith("conv_"):  # (L, B, K-1, di|ds)
+            if batch_ok:
+                return _safe(mesh, shape, (None, ba, None, "model"))
+            return _safe(mesh, shape, (None, None, None, "model"))
+        return P(*([None] * d))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)
+
+
+def shardings_for(mesh: Mesh, pspecs):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

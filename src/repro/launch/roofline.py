@@ -1,0 +1,248 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Per (arch x shape x mesh) cell we derive the three-term roofline from the
+SPMD-partitioned module (all quantities per device):
+
+    compute_s    = HLO_FLOPs        / PEAK_FLOPS      (197 TFLOP/s bf16, v5e)
+    memory_s     = HLO_bytes        / HBM_BW          (819 GB/s)
+    collective_s = collective_bytes / LINK_BW         (~50 GB/s/link ICI)
+
+``cost_analysis`` provides flops & bytes; collective bytes are parsed from
+the post-optimisation HLO text (result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_COND_BRANCH_RE = re.compile(r"conditional\(.*?\), (?:true_computation=%?([\w.\-]+), false_computation=%?([\w.\-]+)|branch_computations=\{([^}]*)\})")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """Map computation-name -> body lines.  Computation headers sit at indent
+    0 and end with '{'; the name is the first %-token (or the token after
+    ENTRY).  Handles nested parens in parameter tuple types."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+            name = None
+            for tok in line.split():
+                if tok.startswith("%"):
+                    name = tok.lstrip("%").split("(")[0]
+                    break
+            if name is None:
+                first = line.split()[0]
+                if first not in ("ENTRY", "HloModule"):
+                    name = first.split("(")[0]
+            cur = name
+            if cur is not None:
+                comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+            if line.strip() == "}":
+                cur = None
+    return comps
+
+
+def _line_collective_bytes(line: str) -> int:
+    s = line.strip()
+    if " = " not in s:
+        return 0
+    rhs = s.split(" = ", 1)[1]
+    for kind in _COLLECTIVES:
+        idx = rhs.find(f" {kind}(")
+        if idx < 0:
+            idx = rhs.find(f" {kind}-start(")
+        if idx >= 0:
+            return _shape_bytes(rhs[:idx])
+    return 0
+
+
+def collective_bytes_structured(hlo_text: str) -> float:
+    """Collective result-bytes with while-loop trip counts applied.
+
+    XLA cost/byte analyses count a loop body once; collectives inside a
+    scanned-layer loop really fire once *per iteration* — except when XLA's
+    all-reduce code motion hoists them out, which this structural count
+    respects because it reads the *post-optimisation* module.  Trip counts
+    are read from each loop condition's ``constant(N) / compare(LT)``
+    (exact for lax.scan-generated loops).  ``conditional`` branches are
+    counted at full weight (upper bound).
+    """
+    comps = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = [int(m.group(1)) for l in lines for m in _CONST_RE.finditer(l)]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, float] = {}
+
+    def eff(name: str, stack=()) -> float:
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return 0.0
+        total = 0.0
+        for line in comps.get(name, []):
+            total += _line_collective_bytes(line)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                total += trip_count(wm.group(1)) * eff(wm.group(2), stack + (name,))
+            cm = _COND_BRANCH_RE.search(line)
+            if cm:
+                branches = [b for b in (cm.group(1), cm.group(2)) if b]
+                if cm.group(3):
+                    branches = [b.strip().lstrip("%") for b in cm.group(3).split(",")]
+                for b in branches:
+                    total += eff(b, stack + (name,))
+        memo[name] = total
+        return total
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            for tok in line.split():
+                if tok.startswith("%"):
+                    entry = tok.lstrip("%").split("(")[0]
+                    break
+            break
+    if entry is None:
+        return float(sum(v for k, v in collective_bytes(hlo_text).items() if k != "count"))
+    return eff(entry)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes, summed over the module (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs_rhs = s.split(" = ", 1)[1]
+        for kind in _COLLECTIVES:
+            # match '<type> <kind>(' — `kind-start`/`kind-done` pairs count once
+            idx = lhs_rhs.find(f" {kind}(")
+            if idx < 0:
+                idx = lhs_rhs.find(f" {kind}-start(")
+                if idx < 0:
+                    continue
+            type_str = lhs_rhs[:idx]
+            out[kind] += _shape_bytes(type_str)
+            out["count"] += 1
+            break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None  # 6 N D (global, useful-work estimate)
+    useful_ratio: Optional[float] = None
+    peak_fraction: Optional[float] = None  # compute_s / max(all terms)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, n_devices: int, model_flops: Optional[float] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = None
+    if model_flops:
+        useful = model_flops / (flops * n_devices) if flops else None
+    peak_fraction = compute_s / max(max(terms.values()), 1e-30)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=cbytes,
+        coll_breakdown=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        peak_fraction=peak_fraction,
+    )
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    m = compiled.memory_analysis()
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        out[attr] = float(getattr(m, attr, 0) or 0)
+    out["total_hbm_bytes"] = (
+        out["argument_size_in_bytes"]
+        + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"]
+        - out.get("alias_size_in_bytes", 0.0)
+    )
+    return out

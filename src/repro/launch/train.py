@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch olmo-1b --steps 100 [--smoke]
+    python -m repro.launch.train --arch qwen3-1.7b --mesh single  # on a pod
+
+On real hardware the mesh axes map onto the pod topology and the same code
+runs under ``jax.distributed.initialize()`` (multi-host); on this CPU host use
+``--smoke`` (reduced config, 1 device) — the full configs are exercised by
+``repro.launch.dryrun`` (ShapeDtypeStruct only, no allocation).
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import ModelOptions, ShardingPolicy, init_params
+from repro.optim import adamw, cosine_schedule
+from repro.train.trainer import TrainLoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={jax.device_count()}")
+
+    data = SyntheticTokens(DataConfig(args.batch, args.seq, cfg.vocab))
+    out = train_loop(
+        cfg,
+        params,
+        data,
+        optimizer=adamw(cosine_schedule(args.lr, 10, args.steps)),
+        opts=ModelOptions(remat=True),
+        loop=TrainLoopConfig(
+            steps=args.steps,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=max(args.steps // 2, 1),
+            microbatches=args.microbatches,
+            log_every=max(args.steps // 10, 1),
+        ),
+    )
+    for step, loss in out["losses"]:
+        print(f"step {step:5d}  loss {loss:.4f}")
+    print(f"wall: {out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""LM architecture substrate (config-driven, pure-JAX pytree models)."""
+from .common import ModelOptions, ShardingPolicy
+from .transformer import (
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_serve_step,
+    make_train_step,
+    serve_step,
+)
+
+__all__ = [
+    "ModelOptions",
+    "ShardingPolicy",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "make_serve_step",
+    "make_train_step",
+    "serve_step",
+]

@@ -1,0 +1,96 @@
+"""Attention paths for the LM substrate.
+
+Three interchangeable implementations of causal/bidirectional GQA attention:
+
+* ``flash`` — the Pallas TPU kernel (repro.kernels.flash_attention);
+* ``chunked`` — jnp online-softmax over query chunks: O(S * chunk) live
+  memory instead of O(S^2); what the dry-run lowers (CPU host cannot lower
+  Pallas) and numerically identical to flash;
+* ``naive`` — materialised scores; only sensible for tiny smoke shapes.
+
+All paths accept q (B, H, Sq, hd), k/v (B, KV, Sk, hd) and broadcast KV heads
+by GQA grouping.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention as flash_dispatch
+
+__all__ = ["gqa_attention", "decode_attention"]
+
+
+def _chunked(q, k, v, *, causal: bool, sm_scale: float, chunk: int):
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    group = hq // hk
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        chunk = math.gcd(sq, chunk) or sq
+    nq = sq // chunk
+
+    qs = q.reshape(b, hq, nq, chunk, d)
+
+    def one(idx, qc):
+        s = jnp.einsum(
+            "bhqd,bhkd->bhqk", qc.astype(jnp.float32), kr.astype(jnp.float32)
+        ) * sm_scale
+        if causal:
+            rows = idx * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, sk), 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, sk), 1)
+            s = jnp.where(rows[None, None] >= cols[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+
+    out = jax.lax.map(lambda args: one(*args), (jnp.arange(nq), jnp.moveaxis(qs, 2, 0)))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def gqa_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    use_flash: str = "auto",
+    chunk: int = 512,
+):
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    if use_flash in ("auto", "interpret"):
+        if use_flash == "interpret" or jax.default_backend() == "tpu":
+            return flash_dispatch(
+                q, k, v, causal=causal, sm_scale=sm_scale, use_kernel=use_flash
+            )
+    return _chunked(q, k, v, causal=causal, sm_scale=sm_scale, chunk=chunk)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, sm_scale: Optional[float] = None):
+    """Single-token attention against a (B, KV, S_max, hd) cache.
+
+    ``pos`` is the index of the *current* token (attend to cols <= pos).
+    O(S_max) per token — the sub-quadratic decode path.
+    """
+    b, hq, one, d = q.shape
+    _, hk, smax, _ = k_cache.shape
+    group = hq // hk
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    kr = jnp.repeat(k_cache, group, axis=1)
+    vr = jnp.repeat(v_cache, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * sm_scale  # (B, H, 1, S)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (smax,), 0)
+    s = jnp.where(cols[None, None, None, :] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

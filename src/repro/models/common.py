@@ -1,0 +1,100 @@
+"""Shared model plumbing: options, sharding policy, dtype helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ModelOptions", "ShardingPolicy", "dtype_of", "constrain"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Activation sharding constraints (None = leave to the compiler).
+
+    ``batch_axes`` shards the batch dim of activations; ``model_axis`` shards
+    heads / ffn-hidden / experts; ``seq_axes`` (optional) shards the sequence
+    dim instead of batch for long-context small-batch cells (SP).
+    """
+
+    batch_axes: Optional[tuple] = None  # e.g. ("pod", "data")
+    model_axis: Optional[str] = None  # e.g. "model"
+    seq_axes: Optional[tuple] = None  # e.g. ("data",) for long-context
+
+    def hidden(self, h):
+        """(B, S, D) activation constraint."""
+        if self.batch_axes is None and self.seq_axes is None:
+            return h
+        return jax.lax.with_sharding_constraint(
+            h, P(self.batch_axes, self.seq_axes, None)
+        )
+
+    def ffn(self, h):
+        """(B, S, F) hidden constraint: model-shard the wide dim."""
+        if self.batch_axes is None and self.model_axis is None:
+            return h
+        return jax.lax.with_sharding_constraint(
+            h, P(self.batch_axes, self.seq_axes, self.model_axis)
+        )
+
+    def heads(self, x):
+        """(B, H, S, hd) attention layout constraint."""
+        if self.batch_axes is None and self.model_axis is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(self.batch_axes, self.model_axis, self.seq_axes, None)
+        )
+
+    def moe_dispatch(self, x):
+        """(groups, E, cap, d) expert-parallel layout: groups on the batch
+        axes, experts on the model axis."""
+        if self.batch_axes is None and self.model_axis is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(self.batch_axes, self.model_axis, None, None)
+        )
+
+
+NO_SHARDING = ShardingPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    remat: bool = False  # rematerialise each layer (training memory lever)
+    use_flash: str = "auto"  # attention kernel dispatch: auto | never | interpret
+    attn_chunk: int = 512  # q-chunk for the non-flash memory-bounded path
+    shard: ShardingPolicy = NO_SHARDING
+    logits_f32: bool = True  # CE loss in f32 (cast at the head)
+    ssd_chunk: int = 128
+    # Decode-cache layout pins: name -> PartitionSpec for the *per-layer*
+    # cache leaves inside the decode scan (leading layer axis stripped).
+    # Without these, SPMD can choose to all-gather the KV cache to satisfy a
+    # head-sharded q — catastrophic at 32k context (see EXPERIMENTS.md §Perf).
+    cache_constraints: Optional[dict] = None
+    # "real" computes attention/SSD mixing; "stub" replaces the sequence-mixing
+    # inner op with an identity of the right shape — used ONLY by the dry-run
+    # cost methodology to isolate kernel-eliminable HBM traffic (never for
+    # actual compute).
+    attn_impl: str = "real"
+    # Pin the residual stream to bf16 at layer boundaries with an
+    # optimization barrier: prevents SPMD from hoisting the f32 norm upcast
+    # above the TP all-reduce (which would double all-reduce bytes).
+    bf16_ar_barrier: bool = False
+
+    def constrain_cache(self, name: str, x):
+        if self.cache_constraints is None or name not in self.cache_constraints:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.cache_constraints[name])
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+def constrain(x, spec: Optional[P]):
+    return x if spec is None else jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,188 @@
+"""Transformer building blocks: norms, RoPE, GQA attention block, MLPs.
+
+All parameters are plain pytrees (dicts of arrays); every block is a pure
+function ``f(params, x, ...)``.  Weight layouts are chosen so the natural
+tensor-parallel sharding is the second axis of up-projections and the first
+axis of down-projections ("megatron" style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, gqa_attention
+from .common import ModelOptions
+
+__all__ = [
+    "rmsnorm",
+    "nonparam_layernorm",
+    "apply_norm",
+    "rope",
+    "init_attn_block",
+    "attn_block",
+    "attn_block_decode",
+    "init_mlp",
+    "mlp_block",
+]
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back).
+# ---------------------------------------------------------------------------
+
+def rmsnorm(scale, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layernorm(x, eps: float = 1e-5):
+    """OLMo-style non-parametric LayerNorm: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, scale, x):
+    if kind == "rmsnorm":
+        return rmsnorm(scale, x)
+    if kind == "nonparam_ln":
+        return nonparam_layernorm(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, hd) with hd even; positions: (S,) or (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block.
+# ---------------------------------------------------------------------------
+
+def init_attn_block(cfg, key, dtype):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    sd = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, cfg.n_heads * hd)) * sd).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, cfg.n_kv_heads * hd)) * sd).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, cfg.n_kv_heads * hd)) * sd).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (cfg.n_heads * hd, d)) * sd).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    if cfg.norm == "rmsnorm":
+        p["ln"] = jnp.ones((d,), dtype)
+    return p
+
+
+def _qkv(cfg, p, x, positions):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(cfg, p, x, opts: ModelOptions):
+    """Pre-norm attention sub-block (residual added by caller)."""
+    b, s, d = x.shape
+    h = apply_norm(cfg.norm, p.get("ln"), x)
+    positions = jnp.arange(s)
+    q, k, v = _qkv(cfg, p, h, positions)
+    q = opts.shard.heads(q)
+    k = opts.shard.heads(k)
+    v = opts.shard.heads(v)
+    if opts.attn_impl == "stub":
+        o = q  # dry-run cost isolation: no mixing compute / score traffic
+    else:
+        o = gqa_attention(
+            q, k, v, causal=cfg.causal, use_flash=opts.use_flash, chunk=opts.attn_chunk
+        )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    return o @ p["wo"]
+
+
+def attn_block_decode(cfg, p, x, k_cache, v_cache, pos):
+    """One-token attention against a cache; returns (out, k_cache, v_cache)."""
+    b, one, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = apply_norm(cfg.norm, p.get("ln"), x)
+    q, k, v = _qkv(cfg, p, h, pos[None] if jnp.ndim(pos) == 0 else pos)
+    # q, k, v: (B, H/KV, 1, hd); insert k, v at position pos.
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=2)
+    o = decode_attention(q, k_cache, v_cache, pos)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * hd)
+    return o @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sd_in, sd_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    if cfg.mlp == "swiglu":
+        p = {
+            "wg": (jax.random.normal(ks[0], (d, f)) * sd_in).astype(dtype),
+            "wu": (jax.random.normal(ks[1], (d, f)) * sd_in).astype(dtype),
+            "wd": (jax.random.normal(ks[2], (f, d)) * sd_out).astype(dtype),
+        }
+    else:  # gelu
+        p = {
+            "wu": (jax.random.normal(ks[1], (d, f)) * sd_in).astype(dtype),
+            "wd": (jax.random.normal(ks[2], (f, d)) * sd_out).astype(dtype),
+        }
+    if cfg.norm == "rmsnorm":
+        p["ln"] = jnp.ones((d,), dtype)
+    return p
+
+
+def mlp_block(cfg, p, x, opts: ModelOptions):
+    h = apply_norm(cfg.norm, p.get("ln"), x)
+    if cfg.mlp == "swiglu":
+        inner = jax.nn.silu(h @ p["wg"]) * (h @ p["wu"])
+    else:
+        inner = jax.nn.gelu(h @ p["wu"])
+    inner = opts.shard.ffn(inner)
+    return inner @ p["wd"]

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k routing with fixed expert capacity.
+
+Dispatch is sort-based rather than GShard one-hot-einsum based: token->expert
+assignments are grouped by expert with an argsort, each expert takes its first
+``capacity`` tokens (overflow dropped, standard for capacity-based MoE), runs
+a dense SwiGLU on an (E, C, d) batch — one MXU-friendly batched matmul — and
+results scatter back weighted by the router gate.
+
+Sharding: expert tensors are sharded over the "model" axis (EP).  Under SPMD
+the (E, C, d) regrouped activations reshard from data-parallel tokens to
+expert-parallel slots, which lowers to the expected all-to-all pair around the
+expert compute (inspected in the dry-run; see EXPERIMENTS.md §Roofline).
+
+Aux losses: load-balancing (Switch-style) + router z-loss, returned to the
+caller for the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelOptions
+from .layers import apply_norm
+
+__all__ = ["init_moe", "moe_block"]
+
+
+def init_moe(cfg, key, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    sd_in, sd_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "ln": jnp.ones((d,), dtype) if cfg.norm == "rmsnorm" else None,
+        "router": (jax.random.normal(ks[0], (d, e)) * sd_in).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (e, d, f)) * sd_in).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (e, d, f)) * sd_in).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (e, f, d)) * sd_out).astype(dtype),
+    }
+
+
+def _capacity(cfg, n_tokens: int) -> int:
+    cap = int(
+        math.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
+    )
+    return max(cap, cfg.moe_top_k)
+
+
+def _dispatch_group(flat, gate_vals, gate_idx, e: int, k: int, cap: int):
+    """Token->slot routing for one group: returns (xe (e, cap, d), scatter info)."""
+    n, d = flat.shape
+    flat_expert = gate_idx.reshape(-1)  # (n*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(n), k)
+
+    order = jnp.argsort(flat_expert)  # group assignments by expert
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # position within the expert's group
+    pos_in_expert = jnp.arange(n * k) - jnp.searchsorted(
+        sorted_expert, sorted_expert, side="left"
+    )
+    keep = pos_in_expert < cap
+    slot = jnp.where(keep, sorted_expert * cap + pos_in_expert, e * cap)  # drop -> OOB
+    xe = jnp.zeros((e * cap + 1, d), flat.dtype).at[slot].set(flat[sorted_token])
+    return xe[:-1].reshape(e, cap, d), (keep, slot, sorted_token, sorted_gate)
+
+
+def _combine_group(down, info, n: int, e: int, cap: int):
+    keep, slot, sorted_token, sorted_gate = info
+    d = down.shape[-1]
+    flat_out = down.reshape(e * cap, d)
+    contrib = jnp.where(keep[:, None], flat_out[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+    return jnp.zeros((n, d), down.dtype).at[sorted_token].add(
+        contrib * sorted_gate[:, None].astype(down.dtype)
+    )
+
+
+def moe_block(cfg, p, x, opts: ModelOptions) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar).
+
+    Routing is *grouped per sequence* (GShard-style groups): each batch row
+    sorts/dispatches its own S*k assignments with capacity per sequence, so
+    under SPMD the sort is local to the data shard and only the (groups,
+    experts, capacity, d) dispatch crosses the mesh (the EP all-to-all).
+    Degenerate groups (S*k < experts, e.g. decode) use one global group.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+
+    h = apply_norm(cfg.norm, p["ln"], x)
+    logits = h.astype(jnp.float32) @ p["router"]  # (b, s, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (b, s, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- aux losses (global) ----------------------------------------------
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, e), axis=2), axis=(0, 1))
+    lb_loss = e * jnp.sum(me * ce) / k
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = (lb_loss + 1e-3 * z_loss).astype(jnp.float32)
+
+    grouped = s * k >= e  # per-sequence groups when each row fills experts
+    if grouped:
+        n = s
+        cap = _capacity(cfg, n)
+        xe, info = jax.vmap(
+            lambda f, gv, gi: _dispatch_group(f, gv, gi, e, k, cap)
+        )(h, gate_vals, gate_idx)  # xe: (b, e, cap, d)
+        # Pin the EP layout: groups stay data-sharded, experts model-sharded.
+        # Without this SPMD may replicate the dispatch buffers (measured 3-15x
+        # collective blow-up; EXPERIMENTS.md §Perf iteration 6).
+        xe = opts.shard.moe_dispatch(xe)
+        gate_h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"]))
+        up_h = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+        down = jnp.einsum("gecf,efd->gecd", gate_h * up_h, p["wd"])
+        down = opts.shard.moe_dispatch(down)
+        out = jax.vmap(lambda dn, inf: _combine_group(dn, inf, n, e, cap))(down, info)
+        out = out.reshape(b, s, d)
+    else:
+        n = b * s
+        cap = _capacity(cfg, n)
+        xe, info = _dispatch_group(
+            h.reshape(n, d), gate_vals.reshape(n, k), gate_idx.reshape(n, k), e, k, cap
+        )
+        gate_h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"]))
+        up_h = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+        down = jnp.einsum("ecf,efd->ecd", gate_h * up_h, p["wd"])
+        out = _combine_group(down, info, n, e, cap).reshape(b, s, d)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,106 @@
+"""EES residual-stream integration: the paper's technique applied to LM depth.
+
+A pre-norm transformer layer is ``y_out = y + F(y)`` with
+``F(y) = attn(y) + mlp(y + attn(y))`` — an Euler step of the depth-ODE
+``dy/dt = F_l(y)`` with step 1.  Replacing Euler with one EES(2,5) 2N step per
+layer gives a *near-reversible* depth integration: the backward pass
+reconstructs layer inputs from layer outputs (``Phi_{-h}``, accurate to
+O(h^6)) instead of storing them, so training activation memory is **O(1) in
+depth** — the paper's reversible adjoint with depth playing the role of time.
+
+This is a beyond-paper integration (it changes the function computed: 3 stage
+evaluations per layer, continuous-depth semantics).  It is opt-in and never
+used for the baseline roofline cells; see DESIGN.md §Arch-applicability.
+
+At ``depth_step -> 0`` behaviour approaches the identity; ``depth_step = 1``
+with a single Euler tableau would recover the vanilla layer exactly (tested).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.williamson import EES25_2N
+
+__all__ = ["ees_depth_solve", "euler_depth_solve"]
+
+
+def _ees_step(block_fn, lp, y, step: float):
+    """One EES(2,5) 2N step of dy/dt = block_fn(lp, y)."""
+    delta = jnp.zeros_like(y)
+    for l in range(EES25_2N.stages):
+        k = step * block_fn(lp, y)
+        delta = EES25_2N.A[l] * delta + k
+        y = y + EES25_2N.B[l] * delta
+    return y
+
+
+def euler_depth_solve(block_fn, layers, y0, step: float = 1.0):
+    """Vanilla residual stack (Euler): y <- y + step * F_l(y).  Reference."""
+
+    def body(y, lp):
+        return y + step * block_fn(lp, y), None
+
+    y, _ = jax.lax.scan(body, y0, layers)
+    return y
+
+
+def ees_depth_solve(
+    block_fn: Callable,
+    layers,  # stacked per-layer params, leading axis L
+    y0,
+    step: float = 1.0,
+    adjoint: str = "reversible",
+):
+    """Integrate the depth-ODE with EES(2,5); reversible O(1)-memory backward.
+
+    ``block_fn(layer_params, y) -> F(y)`` must be side-effect free.
+    """
+    if adjoint == "full":
+        def body(y, lp):
+            return _ees_step(block_fn, lp, y, step), None
+
+        y, _ = jax.lax.scan(body, y0, layers)
+        return y
+
+    if adjoint != "reversible":
+        raise ValueError(adjoint)
+
+    def _forward(layers, y0):
+        def body(y, lp):
+            return _ees_step(block_fn, lp, y, step), None
+
+        y, _ = jax.lax.scan(body, y0, layers)
+        return y
+
+    @jax.custom_vjp
+    def run(layers, y0):
+        return _forward(layers, y0)
+
+    def fwd(layers, y0):
+        y = _forward(layers, y0)
+        return y, (layers, y)
+
+    def bwd(res, ct_y):
+        layers, y_final = res
+
+        rev_layers = jax.tree_util.tree_map(lambda a: jnp.flip(a, axis=0), layers)
+
+        def body(carry, lp):
+            y, ct = carry
+            # reconstruct the layer input (near-reversibility of EES)
+            y_prev = _ees_step(block_fn, lp, y, -step)
+            # exact cotangents through the re-played step
+            _, vjp = jax.vjp(lambda p, yy: _ees_step(block_fn, p, yy, step), lp, y_prev)
+            ct_lp, ct_prev = vjp(ct)
+            return (y_prev, ct_prev), ct_lp
+
+        (_, ct_y0), ct_layers_rev = jax.lax.scan(body, (y_final, ct_y), rev_layers)
+        ct_layers = jax.tree_util.tree_map(lambda a: jnp.flip(a, axis=0), ct_layers_rev)
+        return ct_layers, ct_y0
+
+    run.defvjp(fwd, bwd)
+    return run(layers, y0)

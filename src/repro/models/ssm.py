@@ -1,0 +1,153 @@
+"""Mamba2 (SSD) block: chunked-scan training path + O(1)-state decode path.
+
+Structure follows the Mamba2 reference — in_proj -> (z | x | B | C | dt),
+causal depthwise conv over (x | B | C), SSD scan with per-head scalar decay,
+gated RMSNorm, out_proj — with one TPU adaptation (DESIGN.md §Hardware
+adaptation): the packed ``in_proj`` of the CUDA implementation is split into
+separate per-stream projections.  The packed layout exists to feed one fused
+GPU kernel; under XLA the separate matmuls fuse anyway, and the split gives
+each stream a clean tensor-parallel sharding (d_inner and d_state shard on
+the "model" axis independently; tiny per-head vectors replicate).
+
+Single SSM group (B/C shared across heads).  The training path calls
+:func:`repro.kernels.ssd_scan.ops.ssd` (Pallas kernel on TPU, chunked jnp
+elsewhere).  Decode carries (conv_state, ssm_state): state size is
+independent of context length — this is what makes the ``long_500k`` cell
+runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import ssd
+
+from .common import ModelOptions
+from .layers import rmsnorm
+
+__all__ = ["init_mamba_block", "mamba_block", "mamba_block_decode", "init_mamba_cache"]
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    return di, ds, nh
+
+
+def init_mamba_block(cfg, key, dtype):
+    d = cfg.d_model
+    di, ds, nh = _dims(cfg)
+    ks = jax.random.split(key, 9)
+    sd = 1.0 / math.sqrt(d)
+    K = cfg.ssm_conv
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "wz": (jax.random.normal(ks[0], (d, di)) * sd).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, di)) * sd).astype(dtype),
+        "wB": (jax.random.normal(ks[2], (d, ds)) * sd).astype(dtype),
+        "wC": (jax.random.normal(ks[3], (d, ds)) * sd).astype(dtype),
+        "wdt": (jax.random.normal(ks[4], (d, nh)) * sd).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (K, di)) * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (K, ds)) * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (K, ds)) * 0.1).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((ds,), dtype),
+        "conv_bC": jnp.zeros((ds,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[8], (di, d)) / math.sqrt(di)).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq: x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba_block(cfg, p, xin, opts: ModelOptions):
+    """Training / prefill path: full sequence via chunked SSD."""
+    bsz, s, d = xin.shape
+    di, ds, nh = _dims(cfg)
+    h = rmsnorm(p["ln"], xin)
+    z = h @ p["wz"]
+    x = h @ p["wx"]
+    B = h @ p["wB"]
+    C = h @ p["wC"]
+    dt = h @ p["wdt"]
+    x = jax.nn.silu(_causal_conv(x, p["conv_x"], p["conv_bx"]))
+    B = jax.nn.silu(_causal_conv(B, p["conv_B"], p["conv_bB"]))
+    C = jax.nn.silu(_causal_conv(C, p["conv_C"], p["conv_bC"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    xh = x.reshape(bsz, s, nh, cfg.ssm_head_dim)
+    if opts.attn_impl == "stub":
+        y = xh.astype(jnp.float32) * dt[..., None]  # cost isolation (dry-run)
+    else:
+        y = ssd(
+            xh.astype(jnp.float32),
+            dt,
+            A,
+            B.astype(jnp.float32),
+            C.astype(jnp.float32),
+            chunk=opts.ssd_chunk,
+            use_kernel=opts.use_flash,  # same dispatch policy as attention
+        )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(xin.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    di, ds, nh = _dims(cfg)
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, ds), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, ds), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, ds), jnp.float32),
+    }
+
+
+def _conv_step(cache, new, w, b):
+    window = jnp.concatenate([cache, new[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return out, window[:, 1:]
+
+
+def mamba_block_decode(cfg, p, xin, cache):
+    """One-token step: O(1) state update (the sub-quadratic decode path)."""
+    bsz, one, d = xin.shape
+    di, ds, nh = _dims(cfg)
+    h = rmsnorm(p["ln"], xin)[:, 0]  # (B, d)
+    z = h @ p["wz"]
+    x = h @ p["wx"]
+    B = h @ p["wB"]
+    C = h @ p["wC"]
+    dt = h @ p["wdt"]
+    x, conv_x = _conv_step(cache["conv_x"], x, p["conv_x"], p["conv_bx"])
+    B, conv_B = _conv_step(cache["conv_B"], B, p["conv_B"], p["conv_bB"])
+    C, conv_C = _conv_step(cache["conv_C"], C, p["conv_C"], p["conv_bC"])
+    x, B, C = jax.nn.silu(x), jax.nn.silu(B), jax.nn.silu(C)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(A[None] * dt)  # (B, nh)
+    xh = x.reshape(bsz, nh, cfg.ssm_head_dim).astype(jnp.float32)
+    dx = dt[..., None] * xh  # (B, nh, dh)
+    S = a[..., None, None] * cache["state"] + dx[..., None] * B.astype(jnp.float32)[
+        :, None, None, :
+    ]
+    y = jnp.einsum("bhds,bs->bhd", S, C.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, di).astype(xin.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": S}

@@ -1,0 +1,330 @@
+"""Config-driven model assembly: init, forward, loss, train/serve steps.
+
+One code path serves all 10 assigned architectures:
+
+* dense / vlm / audio — stacked (attention + MLP) blocks, scanned over layers
+  with stacked parameters (compact HLO, MaxText-style);
+* moe — attention + capacity-based top-k MoE blocks;
+* ssm — stacked Mamba2 (SSD) blocks;
+* hybrid (zamba2) — scanned Mamba2 stack with a *shared* attention+MLP block
+  applied every ``shared_attn_every`` layers via ``lax.cond`` (the shared
+  parameters are scan-invariant, so they appear once in the HLO and once in
+  memory — the parameter-sharing that makes zamba2 7B-sized).
+
+Training uses next-token CE with a validity mask; decode carries KV caches
+(attention) and conv/SSD states (mamba) — state is O(1) in context for SSM,
+O(S) for attention, which is what the long_500k cell probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .common import ModelOptions, dtype_of
+from .layers import (
+    apply_norm,
+    attn_block,
+    attn_block_decode,
+    init_attn_block,
+    init_mlp,
+    mlp_block,
+)
+from .moe import init_moe, moe_block
+from .ssm import init_mamba_block, init_mamba_cache, mamba_block, mamba_block_decode
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "serve_step",
+    "make_train_step",
+    "make_serve_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (used directly for smoke tests; via eval_shape for dry-run).
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, key, dtype) -> Dict[str, Any]:
+    if cfg.family in ("ssm", "hybrid"):
+        return {"mamba": init_mamba_block(cfg, key, dtype)}
+    k1, k2 = jax.random.split(key)
+    layer = {"attn": init_attn_block(cfg, k1, dtype)}
+    if cfg.family == "moe":
+        layer["moe"] = init_moe(cfg, k2, dtype)
+    else:
+        layer["mlp"] = init_mlp(cfg, k2, dtype)
+    return layer
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    p["embed"] = (
+        jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model)) * 0.02
+    ).astype(dtype)
+    # stacked per-layer params for lax.scan
+    layer_keys = jax.random.split(keys[1], cfg.n_layers)
+    p["layers"] = jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        p["shared"] = {
+            "attn": init_attn_block(cfg, keys[2], dtype),
+            "mlp": init_mlp(cfg, keys[3], dtype),
+        }
+    if cfg.norm == "rmsnorm":
+        p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(keys[4], (cfg.d_model, cfg.padded_vocab)) * 0.02
+        ).astype(dtype)
+    if cfg.frontend == "patch":
+        p["vision_proj"] = (
+            jax.random.normal(keys[5], (cfg.frontend_dim, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    if cfg.frontend == "frames":
+        p["frame_proj"] = (
+            jax.random.normal(keys[6], (cfg.frontend_dim, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (full-sequence: training and prefill).
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ArchConfig, params, batch) -> jax.Array:
+    if cfg.frontend == "frames":
+        return batch["frames"] @ params["frame_proj"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend == "patch" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"] @ params["vision_proj"]
+        h = jax.lax.dynamic_update_slice(h, vis.astype(h.dtype), (0, 0, 0))
+    return h
+
+
+def _mask_pad_vocab(cfg, logits):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab, logits, jnp.asarray(-1e9, logits.dtype))
+
+
+def _layer_apply(cfg, opts, shared, h, layer_params, idx):
+    """One scanned layer; returns (h, aux_loss_increment)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "hybrid" and cfg.shared_attn_every and shared is not None:
+            def with_shared(hh):
+                hh = hh + attn_block(cfg, shared["attn"], hh, opts)
+                hh = hh + mlp_block(cfg, shared["mlp"], hh, opts)
+                return hh
+
+            h = jax.lax.cond(
+                idx % cfg.shared_attn_every == 0, with_shared, lambda hh: hh, h
+            )
+        h = h + mamba_block(cfg, layer_params["mamba"], h, opts)
+        return h, aux
+    h = h + attn_block(cfg, layer_params["attn"], h, opts)
+    if cfg.family == "moe":
+        out, aux = moe_block(cfg, layer_params["moe"], h, opts)
+        h = h + out
+    else:
+        h = h + mlp_block(cfg, layer_params["mlp"], h, opts)
+    return h, aux
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    batch,
+    opts: ModelOptions = ModelOptions(),
+    head_positions: str = "all",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V) — or (B, 1, V) for head_positions='last',
+    the prefill case — and the MoE aux-loss scalar)."""
+    h = _embed_inputs(cfg, params, batch)
+    h = opts.shard.hidden(h)
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_params, idx = xs
+        h, aux_inc = _layer_apply(cfg, opts, shared, h, layer_params, idx)
+        h = opts.shard.hidden(h)
+        if opts.bf16_ar_barrier:
+            h = jax.lax.optimization_barrier(h)
+        return (h, aux + aux_inc), None
+
+    if opts.remat:
+        body = jax.checkpoint(body)
+
+    (h, aux), _ = jax.lax.scan(
+        body,
+        (h, jnp.zeros((), jnp.float32)),
+        (params["layers"], jnp.arange(cfg.n_layers)),
+    )
+    if cfg.norm == "rmsnorm":
+        h = apply_norm(cfg.norm, params["final_norm"], h)
+    else:
+        h = apply_norm(cfg.norm, None, h)
+    if head_positions == "last":
+        h = h[:, -1:, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    logits = _mask_pad_vocab(cfg, logits)
+    if opts.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch, opts: ModelOptions = ModelOptions()):
+    """Masked next-token cross-entropy (+0.01 * MoE aux)."""
+    logits, aux = forward(cfg, params, batch, opts)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one new token against a cache of length seq_len.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("ssm", "hybrid"):
+        cache["mamba"] = jax.vmap(
+            lambda _: init_mamba_cache(cfg, batch, dtype)
+        )(jnp.arange(cfg.n_layers))
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            n_inv = (cfg.n_layers + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+            cache["shared_k"] = jnp.zeros(
+                (n_inv, batch, cfg.n_kv_heads, max_seq, hd), dtype
+            )
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    else:
+        cache["k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, hd), dtype
+        )
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def serve_step(
+    cfg: ArchConfig,
+    params,
+    cache,
+    tokens: jax.Array,  # (B,) current token ids
+    pos: jax.Array,  # scalar int32: index where this token sits
+    opts: ModelOptions = ModelOptions(),
+):
+    """Decode one token; returns (logits (B, V), new_cache)."""
+    h = jnp.take(params["embed"], tokens[:, None], axis=0)  # (B, 1, D)
+    h = opts.shard.hidden(h)
+    shared = params.get("shared")
+
+    if cfg.family in ("ssm", "hybrid"):
+        sk = cache.get("shared_k")
+        sv = cache.get("shared_v")
+
+        def body(carry, xs):
+            h, sk, sv = carry
+            layer_params, lcache, idx = xs
+            if cfg.family == "hybrid" and cfg.shared_attn_every:
+                inv = idx // cfg.shared_attn_every
+
+                def with_shared(args):
+                    hh, sk, sv = args
+                    kc = jax.lax.dynamic_index_in_dim(sk, inv, 0, keepdims=False)
+                    vc = jax.lax.dynamic_index_in_dim(sv, inv, 0, keepdims=False)
+                    o, kc, vc = attn_block_decode(cfg, shared["attn"], hh, kc, vc, pos)
+                    kc = opts.constrain_cache("k", kc)
+                    vc = opts.constrain_cache("v", vc)
+                    hh = hh + o
+                    hh = hh + mlp_block(cfg, shared["mlp"], hh, ModelOptions())
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, kc, inv, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, vc, inv, 0)
+                    return hh, sk, sv
+
+                h, sk, sv = jax.lax.cond(
+                    idx % cfg.shared_attn_every == 0,
+                    with_shared,
+                    lambda args: args,
+                    (h, sk, sv),
+                )
+            out, new_lcache = mamba_block_decode(cfg, layer_params["mamba"], h, lcache)
+            new_lcache = {k: opts.constrain_cache(k, v) for k, v in new_lcache.items()}
+            return (h + out, sk, sv), new_lcache
+
+        (h, sk, sv), new_mamba = jax.lax.scan(
+            body, (h, sk, sv), (params["layers"], cache["mamba"], jnp.arange(cfg.n_layers))
+        )
+        new_cache = dict(cache, mamba=new_mamba)
+        if sk is not None:
+            new_cache["shared_k"] = sk
+            new_cache["shared_v"] = sv
+    else:
+
+        def body(h, xs):
+            layer_params, kc, vc = xs
+            o, kc, vc = attn_block_decode(cfg, layer_params["attn"], h, kc, vc, pos)
+            kc = opts.constrain_cache("k", kc)
+            vc = opts.constrain_cache("v", vc)
+            h = h + o
+            h = opts.shard.hidden(h)
+            if cfg.family == "moe":
+                out, _ = moe_block(cfg, layer_params["moe"], h, opts)
+                h = h + out
+            else:
+                h = h + mlp_block(cfg, layer_params["mlp"], h, opts)
+            return h, (kc, vc)
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]))
+        new_cache = dict(cache, k=nk, v=nv)
+
+    if cfg.norm == "rmsnorm":
+        h = apply_norm(cfg.norm, params["final_norm"], h)
+    else:
+        h = apply_norm(cfg.norm, None, h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad_vocab(cfg, h @ head)[:, 0].astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Step builders.
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, optimizer, opts: ModelOptions = ModelOptions()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch, opts))(params)
+        params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, opts: ModelOptions = ModelOptions()):
+    def step(params, cache, tokens, pos):
+        return serve_step(cfg, params, cache, tokens, pos, opts)
+
+    return step

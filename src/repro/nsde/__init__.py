@@ -1,0 +1,20 @@
+"""Neural SDE model zoo, losses and synthetic data (the paper's experiments)."""
+from .losses import moment_mse, signature_mmd, wrapped_energy_score
+from .models import (
+    init_kuramoto_nsde,
+    init_lsde,
+    init_sphere_nsde,
+    kuramoto_nsde_term,
+    lsde_readout,
+    lsde_term,
+    sphere_nsde_term,
+)
+from .nets import init_linear, init_mlp, linear_apply, lipswish, mlp_apply
+
+__all__ = [
+    "moment_mse", "signature_mmd", "wrapped_energy_score",
+    "init_lsde", "lsde_term", "lsde_readout",
+    "init_kuramoto_nsde", "kuramoto_nsde_term",
+    "init_sphere_nsde", "sphere_nsde_term",
+    "init_mlp", "mlp_apply", "init_linear", "linear_apply", "lipswish",
+]

@@ -1,0 +1,83 @@
+"""Distribution-matching losses for NSDE training.
+
+* marginal moment MSE — match per-time mean/std of generated vs target
+  trajectories (the OU / GBM experiments).
+* wrapped energy score — strictly proper multivariate score with angular
+  wrapping on the torus components (the Kuramoto experiment; Gneiting &
+  Raftery 2007, eq. as in paper Section 4).
+* truncated signature MMD — distance between expected truncated signatures
+  (level <= 3) of time-augmented paths (the stochastic-volatility
+  experiments; the linear-kernel specialisation of the signature-kernel MMD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moment_mse", "wrapped_energy_score", "signature_mmd"]
+
+
+def moment_mse(gen, target):
+    """gen, target: (batch, time[, dim]) — match mean and std trajectories."""
+    gm, gs = jnp.mean(gen, axis=0), jnp.std(gen, axis=0)
+    tm, ts = jnp.mean(target, axis=0), jnp.std(target, axis=0)
+    return jnp.mean((gm - tm) ** 2) + jnp.mean((gs - ts) ** 2)
+
+
+def _wrap(x):
+    return x - 2 * jnp.pi * jnp.round(x / (2 * jnp.pi))
+
+
+def wrapped_energy_score(samples_th, samples_om, target_th, target_om):
+    """Energy score ES = E d(X, y) - 1/2 E d(X, X') with the wrapped-on-theta
+    distance d = sum|wrap(dth)| + sum|dom|.  samples: (m, N); target: (N,)."""
+
+    def dist(th_a, om_a, th_b, om_b):
+        return jnp.sum(jnp.abs(_wrap(th_a - th_b)), -1) + jnp.sum(jnp.abs(om_a - om_b), -1)
+
+    m = samples_th.shape[0]
+    term1 = jnp.mean(dist(samples_th, samples_om, target_th[None], target_om[None]))
+    d2 = dist(
+        samples_th[:, None], samples_om[:, None], samples_th[None], samples_om[None]
+    )
+    term2 = jnp.sum(d2) / (2 * m * (m - 1) + 1e-9)
+    return term1 - term2
+
+
+def _signature_l3(path):
+    """Truncated signature (levels 1..3) of the piecewise-linear path (T, d).
+
+    Level-k terms are iterated integrals; for a piecewise-linear path they
+    reduce to iterated sums with the in-segment Chen corrections (1/2 at
+    level 2; 1/2, 1/2, 1/6 at level 3).
+    """
+    dx = jnp.diff(path, axis=0)  # (T-1, d)
+    s1 = jnp.sum(dx, axis=0)
+    pre = jnp.cumsum(dx, axis=0) - dx  # increment strictly before each segment
+    seg2 = jnp.einsum("ti,tj->tij", pre, dx) + 0.5 * jnp.einsum("ti,tj->tij", dx, dx)
+    s2 = jnp.sum(seg2, axis=0)
+    pre2 = jnp.cumsum(seg2, axis=0) - seg2  # level-2 signature before segment
+    s3 = (
+        jnp.einsum("tij,tk->ijk", pre2, dx)
+        + 0.5 * jnp.einsum("ti,tj,tk->ijk", pre, dx, dx)
+        + (1.0 / 6.0) * jnp.einsum("ti,tj,tk->ijk", dx, dx, dx)
+    )
+    return jnp.concatenate([s1.ravel(), s2.ravel(), s3.ravel()])
+
+
+def signature_mmd(gen_paths, target_paths, times=None):
+    """|| E sig(gen) - E sig(target) ||^2 over time-augmented paths.
+
+    gen/target: (batch, T) or (batch, T, d).
+    """
+    if gen_paths.ndim == 2:
+        gen_paths = gen_paths[..., None]
+        target_paths = target_paths[..., None]
+    T = gen_paths.shape[1]
+    if times is None:
+        times = jnp.linspace(0.0, 1.0, T)
+    taug = lambda p: jnp.concatenate(
+        [jnp.broadcast_to(times[:, None], (T, 1)), p], axis=-1
+    )
+    sig = jax.vmap(lambda p: _signature_l3(taug(p)))
+    return jnp.sum((jnp.mean(sig(gen_paths), 0) - jnp.mean(sig(target_paths), 0)) ** 2)

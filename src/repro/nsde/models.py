@@ -1,0 +1,140 @@
+"""Neural SDE model zoo (the paper's experiments).
+
+* :class:`NeuralLSDE` — Neural Langevin SDE (Oh et al.):
+  dz = g(z) dt + f(t) o dW, z0 = affine(x); readout to data space.
+* :func:`kuramoto_nsde_term` — NSDE on T*T^N with MLP drift/diffusion over the
+  periodic encoding (sin th, cos th, om), outputs in the Lie algebra R^{2N}.
+* :func:`sphere_nsde_term` — latent SDE on S^{n-1} = SO(n)/SO(n-1) with an
+  MLP so(n)-valued drift and basis diffusion (Zeng et al. setup, synthetic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ManifoldSDETerm, Product, SDETerm, SphereAction, Torus
+from repro.core.lie import Euclidean
+
+from .nets import init_linear, init_mlp, linear_apply, mlp_apply
+
+__all__ = [
+    "init_lsde",
+    "lsde_term",
+    "lsde_readout",
+    "init_kuramoto_nsde",
+    "kuramoto_nsde_term",
+    "init_sphere_nsde",
+    "sphere_nsde_term",
+]
+
+
+# ---------------------------------------------------------------------------
+# Neural Langevin SDE (Euclidean; OU / GBM / vol experiments).
+# ---------------------------------------------------------------------------
+
+def init_lsde(key, d_obs: int, d_z: int = 32, width: int = 32):
+    ks = jax.random.split(key, 4)
+    return {
+        "encoder": init_linear(ks[0], d_obs, d_z),
+        "drift": init_mlp(ks[1], [d_z, width, width, d_z]),
+        "diff": init_mlp(ks[2], [1, width, d_z]),  # f(t): additive noise
+        "readout": init_linear(ks[3], d_z, d_obs),
+    }
+
+
+def lsde_term() -> SDETerm:
+    def drift(t, z, p):
+        return mlp_apply(p["drift"], z)
+
+    def diffusion(t, z, p):
+        tvec = jnp.broadcast_to(jnp.asarray(t)[None], z.shape[:-1] + (1,))
+        return jax.nn.softplus(mlp_apply(p["diff"], tvec)) * 0.5 + 0.05
+
+    return SDETerm(drift=drift, diffusion=diffusion, noise="diagonal")
+
+
+def lsde_readout(p, z):
+    return linear_apply(p["readout"], z)
+
+
+# ---------------------------------------------------------------------------
+# Kuramoto NSDE on T*T^N (Section 4).
+# ---------------------------------------------------------------------------
+
+def init_kuramoto_nsde(key, N: int, width: int = 128):
+    ks = jax.random.split(key, 2)
+    return {
+        "drift": init_mlp(ks[0], [3 * N, width, width, 2 * N]),
+        "diff": init_mlp(ks[1], [3 * N, width, N]),
+    }
+
+
+def kuramoto_nsde_term() -> ManifoldSDETerm:
+    group = Product([Torus(), Euclidean()])
+
+    def features(y):
+        th, om = y
+        return jnp.concatenate([jnp.sin(th), jnp.cos(th), om], axis=-1)
+
+    def drift(t, y, p):
+        out = mlp_apply(p["drift"], features(y))
+        N = out.shape[-1] // 2
+        return (out[..., :N], out[..., N:])
+
+    def diffusion(t, y, p):
+        th, om = y
+        sig = 0.1 * jax.nn.softplus(mlp_apply(p["diff"], features(y)))
+        return (jnp.zeros_like(th), sig)  # additive noise on omega only
+
+    return ManifoldSDETerm(group=group, drift=drift, diffusion=diffusion, noise="diagonal")
+
+
+# ---------------------------------------------------------------------------
+# Latent SDE on the sphere S^{n-1} (Section 4, Zeng et al. setup).
+# ---------------------------------------------------------------------------
+
+def _skew_basis_map(n: int):
+    iu = jnp.triu_indices(n, 1)
+
+    def to_skew(v):
+        S = jnp.zeros(v.shape[:-1] + (n, n), v.dtype)
+        S = S.at[..., iu[0], iu[1]].set(v)
+        return S - jnp.swapaxes(S, -1, -2)
+
+    return to_skew, n * (n - 1) // 2
+
+
+def init_sphere_nsde(key, n: int, width: int = 64, d_ctx: int = 0):
+    _, m = _skew_basis_map(n)
+    ks = jax.random.split(key, 2)
+    return {
+        "drift": init_mlp(ks[0], [n + 1 + d_ctx, width, width, m]),
+        "log_sigma": jnp.zeros(()),
+    }
+
+
+def sphere_nsde_term(n: int, ctx=None) -> ManifoldSDETerm:
+    group = SphereAction(n)
+    to_skew, m = _skew_basis_map(n)
+
+    def drift(t, y, p):
+        tvec = jnp.broadcast_to(jnp.asarray(t)[None], y.shape[:-1] + (1,))
+        feats = jnp.concatenate(
+            [y, tvec] + ([ctx] if ctx is not None else []), axis=-1
+        )
+        return to_skew(0.5 * jnp.tanh(mlp_apply(p["drift"], feats)))
+
+    def diffusion(t, y, p):
+        return jnp.exp(p["log_sigma"]) * 0.1
+
+    return ManifoldSDETerm(
+        group=group,
+        drift=drift,
+        diffusion=diffusion,
+        noise="general",
+        noise_apply=lambda sig, dw: to_skew(sig * dw),
+    )

@@ -1,0 +1,45 @@
+"""Small neural nets for NSDE drift/diffusion fields (pure pytrees).
+
+LipSwish activation (x * sigmoid(x) * 0.909) keeps the vector fields
+Lipschitz — standard for neural SDEs (Kidger et al.).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lipswish", "init_mlp", "mlp_apply", "init_linear", "linear_apply"]
+
+
+def lipswish(x):
+    return 0.909 * jax.nn.silu(x)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32):
+    k1, _ = jax.random.split(key)
+    return {
+        "w": (jax.random.normal(k1, (d_in, d_out)) / math.sqrt(d_in)).astype(dtype),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def linear_apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key, sizes: Sequence[int], dtype=jnp.float32):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [init_linear(k, a, b, dtype) for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(layers, x, final_activation=None):
+    for i, p in enumerate(layers):
+        x = linear_apply(p, x)
+        if i < len(layers) - 1:
+            x = lipswish(x)
+    if final_activation is not None:
+        x = final_activation(x)
+    return x

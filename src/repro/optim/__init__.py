@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adamw, clip_by_global_norm, cosine_schedule, sgd
+
+__all__ = ["Optimizer", "adamw", "sgd", "cosine_schedule", "clip_by_global_norm"]

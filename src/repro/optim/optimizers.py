@@ -1,0 +1,126 @@
+"""Optimizers in pure JAX (no optax dependency): Adam/AdamW with mixed
+precision (bf16 params, f32 moments), global-norm clipping, schedules.
+
+State layout mirrors the params pytree so the same PartitionSpecs shard both
+(optionally extended with a data-axis shard for ZeRO-style partitioning).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "sgd", "cosine_schedule", "clip_by_global_norm", "Optimizer"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (params, state)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state: OptState, params):
+        gnorm = jnp.zeros((), jnp.float32)
+        if max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * g32 * g32
+            upd32 = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+            if weight_decay:
+                upd32 = upd32 + weight_decay * p.astype(jnp.float32)
+            p2 = (p.astype(jnp.float32) - lr_t * upd32).astype(p.dtype)
+            return p2, m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        params2 = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu2 = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu2 = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return params2, OptState(step=step, mu=mu2, nu=nu2), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum:
+            return OptState(
+                step=jnp.zeros((), jnp.int32),
+                mu=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                nu=None,
+            )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=None, nu=None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu2 = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads
+            )
+            params2 = jax.tree_util.tree_map(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+                params,
+                mu2,
+            )
+            return params2, OptState(step=step, mu=mu2, nu=None), jnp.zeros(())
+        params2 = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return params2, OptState(step=step, mu=None, nu=None), jnp.zeros(())
+
+    return Optimizer(init=init, update=update)

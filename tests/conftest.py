@@ -1,0 +1,16 @@
+"""Shared test configuration.
+
+NOTE: deliberately does NOT set XLA_FLAGS / host device count — smoke tests
+and benchmarks must see the single real CPU device.  Only launch/dryrun.py
+fakes 512 devices, in its own process.
+"""
+import jax
+import pytest
+
+# Numerical-order measurements need f64.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,158 @@
+"""Adaptive EES (embedded estimator, Appendix D) + launch-layer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EES25_2N, SDETerm
+from repro.core.adaptive import integrate_adaptive, step_with_error
+from repro.launch.roofline import (
+    _shape_bytes,
+    collective_bytes,
+    memory_summary,
+)
+
+
+class TestEmbeddedEstimator:
+    def test_error_estimate_tracks_true_error(self):
+        """The embedded (2,1) pair's estimate correlates with the true local
+        error across step sizes (order gap of 1)."""
+        term = SDETerm(drift=lambda t, y, a: jnp.sin(y) + 0.2 * y, noise="none")
+        y0 = jnp.array([0.7, -0.3], dtype=jnp.float64)
+
+        def true_err(h):
+            fine = y0
+            for i in range(64):
+                fine, _ = step_with_error(EES25_2N, term, fine, i * h / 64, h / 64, None, None)
+            coarse, est = step_with_error(EES25_2N, term, y0, 0.0, h, None, None)
+            return (
+                float(jnp.max(jnp.abs(coarse - fine))),
+                float(jnp.max(jnp.abs(est))),
+            )
+
+        for h in (0.2, 0.1, 0.05):
+            true, est = true_err(h)
+            # estimate is first-order-gap: bounds the true error within ~20x
+            assert est > true * 0.05, (h, true, est)
+            assert est < max(true * 200, 1e-8), (h, true, est)
+
+    def test_estimate_scales_quadratically(self):
+        """Embedded estimate ~ O(h^2) (difference of order-2 and order-1)."""
+        term = SDETerm(drift=lambda t, y, a: jnp.cos(y), noise="none")
+        y0 = jnp.array([0.3], dtype=jnp.float64)
+        ests = []
+        hs = [0.2, 0.1, 0.05]
+        for h in hs:
+            _, est = step_with_error(EES25_2N, term, y0, 0.0, h, None, None)
+            ests.append(float(jnp.abs(est[0])))
+        slope = np.polyfit(np.log(hs), np.log(ests), 1)[0]
+        assert 1.5 < slope < 3.0, (slope, ests)
+
+    def test_adaptive_integration_accuracy(self):
+        """Adaptive EES on y' = -5y hits the analytic solution."""
+        term = SDETerm(drift=lambda t, y, a: -5.0 * y, noise="none")
+        y0 = jnp.array([1.0], dtype=jnp.float64)
+        out = integrate_adaptive(EES25_2N, term, y0, 0.0, 1.0, rtol=1e-6, atol=1e-9)
+        assert float(out.t) == pytest.approx(1.0)
+        np.testing.assert_allclose(float(out.y[0]), np.exp(-5.0), rtol=1e-4)
+        assert int(out.n_accepted) > 5
+
+    def test_adaptive_rejects_on_stiffness(self):
+        """A stiff segment must trigger rejections / smaller steps."""
+        term = SDETerm(
+            drift=lambda t, y, a: jnp.where(t > 0.5, -200.0, -1.0) * y, noise="none"
+        )
+        y0 = jnp.array([1.0], dtype=jnp.float64)
+        out = integrate_adaptive(EES25_2N, term, y0, 0.0, 1.0, h0=0.2, rtol=1e-5)
+        assert int(out.n_rejected) >= 1
+        assert float(out.h_final) < 0.05  # controller shrank into stability
+
+
+class TestRooflineParsers:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+        assert _shape_bytes("f32[8]") == 32
+        assert _shape_bytes("(f32[4,4]{1,0}, bf16[2,2]{1,0})") == 64 + 8
+        assert _shape_bytes("pred[]") == 1
+
+    def test_collective_bytes_counts_kinds(self):
+        hlo = """
+ENTRY %main.1 (p: f32[4]) -> f32[4] {
+  %ar = f32[4]{0} all-reduce(%p), replica_groups={}
+  %ag = bf16[8,2]{1,0} all-gather(%x), dimensions={0}
+  %t = (s32[], f32[4]) tuple(%c, %ar)
+  ROOT %r = f32[4]{0} add(%ar, %ar)
+}
+"""
+        out = collective_bytes(hlo)
+        assert out["all-reduce"] == 16
+        assert out["all-gather"] == 32
+        assert out["count"] == 2
+
+    def test_structured_respects_trip_count(self):
+        from repro.launch.roofline import collective_bytes_structured
+
+        hlo = """
+HloModule m
+
+%body.1 (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ar = f32[4]{0} all-reduce(%gte), replica_groups={}
+  ROOT %t = (s32[], f32[4]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[4])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main.2 (p: f32[4]) -> f32[4] {
+  %w = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[2]{0} all-gather(%x), dimensions={0}
+  ROOT %r = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+        total = collective_bytes_structured(hlo)
+        assert total == 7 * 16 + 8, total
+
+
+class TestLaunchHelpers:
+    def test_input_specs_all_cells(self):
+        from repro.configs import ALL_SHAPES, cell_applicable, get_arch, list_archs
+        from repro.launch.dryrun import input_specs
+
+        for arch in list_archs():
+            for shape in ALL_SHAPES:
+                ok, _ = cell_applicable(get_arch(arch), shape)
+                if not ok:
+                    continue
+                specs = input_specs(arch, shape.name)
+                assert specs, (arch, shape.name)
+                for leaf in jax.tree_util.tree_leaves(specs):
+                    assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+    def test_microbatches_divide_local_batch(self):
+        from repro.configs import ALL_SHAPES, get_arch, list_archs
+        from repro.launch.dryrun import microbatches_for
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        for arch in list_archs():
+            cfg = get_arch(arch)
+            for shape in ALL_SHAPES:
+                if shape.kind != "train":
+                    continue
+                mb = microbatches_for(cfg, shape, FakeMesh())
+                b_loc = shape.global_batch // 16
+                assert b_loc % mb == 0, (arch, mb, b_loc)
+
+    def test_model_flops(self):
+        from repro.configs import get_arch, get_shape
+        from repro.launch.dryrun import model_flops_for
+
+        cfg = get_arch("yi-9b")
+        train = model_flops_for(cfg, get_shape("train_4k"))
+        # 6 N D with N=8.83B, D=256*4096 tokens
+        assert train == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+        decode = model_flops_for(cfg, get_shape("decode_32k"))
+        assert decode == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)

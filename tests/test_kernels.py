@@ -1,0 +1,157 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes,
+executed in Pallas interpret mode (kernel body runs in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.williamson2n.ops import williamson2n_update
+from repro.kernels.williamson2n.ref import williamson2n_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestWilliamson2N:
+    @pytest.mark.parametrize(
+        "shape", [(128,), (1000,), (8, 128), (3, 5, 7), (4096,), (2, 1024)]
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        d, k, y = (
+            jax.random.normal(jax.random.fold_in(KEY, i), shape, dtype)
+            for i in range(3)
+        )
+        a, b = -35 / 32, 2 / 5
+        got = williamson2n_update(d, k, y, a, b, True)
+        want = williamson2n_ref(d, k, y, a, b)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(
+                np.asarray(g, np.float32), np.asarray(w, np.float32), atol=tol
+            )
+
+    def test_vjp_matches_ref(self):
+        shape = (513,)
+        d, k, y = (
+            jax.random.normal(jax.random.fold_in(KEY, i), shape) for i in range(3)
+        )
+        f_k = lambda *xs: jnp.sum(williamson2n_update(*xs, -0.46, 0.93, True)[1] ** 2)
+        f_r = lambda *xs: jnp.sum(williamson2n_ref(*xs, -0.46, 0.93)[1] ** 2)
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(d, k, y)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(d, k, y)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 3000),
+        a=st.floats(-2.0, 2.0),
+        b=st.floats(-2.0, 2.0),
+    )
+    def test_property_random_coeffs(self, n, a, b):
+        d, k, y = (
+            jax.random.normal(jax.random.fold_in(KEY, 100 + i), (n,)) for i in range(3)
+        )
+        got = williamson2n_update(d, k, y, a, b, True)
+        want = williamson2n_ref(d, k, y, a, b)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,hq,hk,s,d,causal",
+        [
+            (2, 4, 2, 256, 64, True),
+            (1, 8, 1, 128, 128, True),   # MQA
+            (2, 2, 2, 256, 64, False),
+            (1, 4, 4, 384, 32, True),    # MHA, 3 kv blocks
+            (1, 16, 4, 256, 64, True),   # GQA group 4
+        ],
+    )
+    def test_matches_ref(self, b, hq, hk, s, d, causal):
+        q = jax.random.normal(jax.random.fold_in(KEY, 10), (b, hq, s, d))
+        k = jax.random.normal(jax.random.fold_in(KEY, 11), (b, hk, s, d))
+        v = jax.random.normal(jax.random.fold_in(KEY, 12), (b, hk, s, d))
+        got = flash_attention(q, k, v, causal=causal, interpret=True)
+        want = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = (
+            jax.random.normal(jax.random.fold_in(KEY, 20 + i), (1, 2, 256, 64), dtype)
+            for i in range(3)
+        )
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = attention_ref(q, k, v, causal=True)
+        tol = 2e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+        )
+
+    def test_block_sizes(self):
+        q, k, v = (
+            jax.random.normal(jax.random.fold_in(KEY, 30 + i), (1, 2, 256, 64))
+            for i in range(3)
+        )
+        base = attention_ref(q, k, v, causal=True)
+        for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+            got = flash_attention(
+                q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True
+            )
+            np.testing.assert_allclose(got, base, atol=2e-5)
+
+    def test_sm_scale(self):
+        q, k, v = (
+            jax.random.normal(jax.random.fold_in(KEY, 40 + i), (1, 2, 128, 64))
+            for i in range(3)
+        )
+        got = flash_attention(q, k, v, causal=True, sm_scale=0.5, interpret=True)
+        want = attention_ref(q, k, v, causal=True, sm_scale=0.5)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize(
+        "b,l,h,dh,ds,chunk",
+        [
+            (2, 128, 3, 16, 32, 32),
+            (1, 256, 2, 64, 128, 128),
+            (2, 64, 4, 8, 16, 64),   # single chunk
+            (1, 512, 1, 32, 64, 64),
+        ],
+    )
+    def test_matches_sequential(self, b, l, h, dh, ds, chunk):
+        ks = jax.random.split(jax.random.fold_in(KEY, l + h), 5)
+        x = jax.random.normal(ks[0], (b, l, h, dh))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        B = jax.random.normal(ks[3], (b, l, ds))
+        C = jax.random.normal(ks[4], (b, l, ds))
+        y_seq, S_seq = ssd_ref(x, dt, A, B, C)
+        y_chk, S_chk = ssd_chunked_ref(x, dt, A, B, C, chunk=chunk)
+        y_pal = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(y_chk, y_seq, atol=5e-4)
+        np.testing.assert_allclose(S_chk, S_seq, atol=5e-5)
+        np.testing.assert_allclose(y_pal, y_seq, atol=5e-4)
+
+    def test_decay_extremes(self):
+        """Strong decay (dt large) must not produce NaN/inf."""
+        b, l, h, dh, ds = 1, 128, 2, 8, 16
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, l, h, dh))
+        dt = jnp.full((b, l, h), 5.0)
+        A = jnp.array([-8.0, -0.001])
+        B = jax.random.normal(ks[3], (b, l, ds))
+        C = jax.random.normal(ks[4], (b, l, ds))
+        y = ssd_scan(x, dt, A, B, C, chunk=64, interpret=True)
+        assert np.isfinite(np.asarray(y)).all()
+        y_seq, _ = ssd_ref(x, dt, A, B, C)
+        np.testing.assert_allclose(y, y_seq, atol=5e-4)

@@ -1,0 +1,135 @@
+"""Distribution-layer tests in a subprocess with 8 fake XLA devices.
+
+Run in a child process because the host device count must stay 1 for every
+other test (jax locks device count on first init).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_mesh_and_param_shardings():
+    out = run_py("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import param_pspecs, batch_pspecs
+        from repro.configs import get_arch
+        from repro.models import init_params
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = get_arch("olmo-1b")
+        ap = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        specs = param_pspecs(mesh, ap)
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        d = {"/".join(str(p) for p, _ in [(k.key, None) for k in path]): spec
+             for path, spec in flat}
+        # embed vocab-sharded; layer wq col-sharded with leading layer axis
+        assert tuple(specs["embed"]) == ("model", None), specs["embed"]
+        wq = specs["layers"]["attn"]["wq"]
+        assert tuple(wq) == (None, None, "model"), wq
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    """Real (small) train step executed on an 8-device mesh: loss equals the
+    unsharded single-device loss (SPMD correctness)."""
+    out = run_py("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.models import init_params, loss_fn, ModelOptions, ShardingPolicy
+        from repro.launch.mesh import param_pspecs, shardings_for
+
+        cfg = get_arch("qwen3-1.7b").smoke()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab),
+        }
+        l_single = float(loss_fn(cfg, params, batch))
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with mesh:
+            p_sh = shardings_for(mesh, param_pspecs(mesh, params))
+            b_sh = {k: NamedSharding(mesh, P(("data",), None)) for k in batch}
+            params_s = jax.device_put(params, p_sh)
+            batch_s = jax.device_put(batch, b_sh)
+            opts = ModelOptions(shard=ShardingPolicy(batch_axes=("data",), model_axis="model"))
+            f = jax.jit(lambda p, b: loss_fn(cfg, p, b, opts),
+                        in_shardings=(p_sh, b_sh))
+            l_sharded = float(f(params_s, batch_s))
+        assert abs(l_single - l_sharded) < 2e-2, (l_single, l_sharded)
+        print("OK", l_single, l_sharded)
+    """)
+    assert "OK" in out
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a (2,)-mesh, restore onto a (4,)-mesh (elastic recovery)."""
+    out = run_py("""
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        mesh2 = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",))
+        tree2 = jax.device_put(tree, {"w": NamedSharding(mesh2, P("data", None))})
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, tree2)
+            mesh4 = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("data",))
+            sh4 = {"w": NamedSharding(mesh4, P("data", None))}
+            got = restore_checkpoint(d, 1, tree, shardings=sh4)
+        np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+        assert len(got["w"].sharding.device_set) == 4
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_gradient_allreduce():
+    """int8-quantised all-reduce with error feedback under shard_map."""
+    out = run_py("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.optim.compression import compressed_psum_with_feedback
+
+        mesh = jax.make_mesh((8,), ("data",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+        err0 = jnp.zeros((8, 128))
+        out, err = compressed_psum_with_feedback(mesh, "data", x, err0)
+        want = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
+        rel = float(jnp.max(jnp.abs(out - want)) / (jnp.max(jnp.abs(want)) + 1e-9))
+        assert rel < 0.05, rel  # int8 quantisation error bound
+        # error feedback accumulates the residual for the next round
+        out2, err2 = compressed_psum_with_feedback(mesh, "data", x, err)
+        rel2 = float(jnp.max(jnp.abs(out2 + err2.sum(0) - want - err.sum(0))))
+        print("OK", rel)
+    """)
+    assert "OK" in out

@@ -1,0 +1,207 @@
+"""Lie groups, CF-EES, geometric baselines: manifold preservation, the flat
+collapse (Prop. D.1 consistency row), reversibility order, manifold adjoints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CrouchGrossman2,
+    Euclidean,
+    GeoEulerMaruyama,
+    ManifoldSDETerm,
+    Product,
+    RKMK2,
+    SDETerm,
+    SO3,
+    SOn,
+    SphereAction,
+    Torus,
+    brownian_path,
+    cfees25_solver,
+    cfees27_solver,
+    ees25_solver,
+    solve,
+)
+from repro.core.lie import rodrigues, skew_from_vec, vec_from_skew
+
+KEY = jax.random.PRNGKey(0)
+
+ALL_GEO_SOLVERS = [
+    cfees25_solver(),
+    cfees27_solver(),
+    GeoEulerMaruyama(),
+    CrouchGrossman2(),
+    RKMK2(),
+]
+
+
+def so3_term():
+    def xi(t, y, a):
+        return jnp.stack(
+            [0.1 + 0.3 * y[..., 2, 0], -(0.25 + 0.2 * y[..., 1, 2]), 0.9 + 0.2 * y[..., 0, 0]],
+            axis=-1,
+        )
+
+    def xig(t, y, a):
+        return jnp.stack(
+            [0.8 + 0.15 * y[..., 2, 2], 0.15 + 0.25 * y[..., 0, 1], 0.35 - 0.2 * y[..., 1, 1]],
+            axis=-1,
+        )
+
+    return ManifoldSDETerm(group=SO3(), drift=xi, diffusion=xig, noise="diagonal")
+
+
+class TestRodrigues:
+    def test_matches_expm(self):
+        w = jnp.array([0.3, -0.7, 0.5], dtype=jnp.float64)
+        np.testing.assert_allclose(
+            rodrigues(w), jax.scipy.linalg.expm(skew_from_vec(w)), atol=1e-12
+        )
+
+    def test_small_angle_stable(self):
+        w = jnp.array([1e-12, -1e-13, 1e-12], dtype=jnp.float64)
+        R = rodrigues(w)
+        assert not np.any(np.isnan(R))
+        np.testing.assert_allclose(R, np.eye(3), atol=1e-10)
+
+    def test_grad_no_nan_at_zero(self):
+        g = jax.grad(lambda w: rodrigues(w)[0, 1])(jnp.zeros(3, jnp.float64))
+        assert not np.any(np.isnan(g))
+
+    def test_skew_vec_roundtrip(self):
+        w = jnp.array([1.0, 2.0, 3.0])
+        np.testing.assert_allclose(vec_from_skew(skew_from_vec(w)), w)
+
+
+class TestFlatCollapse:
+    def test_cfees_equals_euclidean_ees(self):
+        """On Euclidean space CF-EES(2,5) is *identically* EES(2,5)-2N."""
+        f = lambda t, y, a: jnp.tanh(y) * a
+        g = lambda t, y, a: 0.2 * jnp.cos(y)
+        term_e = SDETerm(drift=f, diffusion=g, noise="diagonal")
+        term_m = ManifoldSDETerm(group=Euclidean(), drift=f, diffusion=g, noise="diagonal")
+        y0 = jnp.array([0.3, -1.2, 0.8])
+        dW = jnp.array([0.05, -0.02, 0.01])
+        ye = ees25_solver().step(term_e, y0, 0.0, 0.1, dW, jnp.float64(0.9))
+        ym = cfees25_solver().step(term_m, y0, 0.0, 0.1, dW, jnp.float64(0.9))
+        np.testing.assert_array_equal(ye, ym)
+
+
+class TestManifoldPreservation:
+    @pytest.mark.parametrize("solver", ALL_GEO_SOLVERS, ids=lambda s: s.name)
+    def test_so3_stays_orthogonal(self, solver):
+        term = so3_term()
+        bm = brownian_path(KEY, 0.0, 1.0, 100, shape=(3,), dtype=jnp.float64)
+        r = solve(solver, term, jnp.eye(3, dtype=jnp.float64), bm, None, adjoint="full")
+        assert float(term.group.distance_from_manifold(r.y_final)) < 1e-12
+
+    def test_sphere_stays_unit(self):
+        n = 4
+        m = n * (n - 1) // 2
+        iu = jnp.triu_indices(n, 1)
+
+        def skew_flat(v):
+            S = jnp.zeros(v.shape[:-1] + (n, n), v.dtype)
+            S = S.at[..., iu[0], iu[1]].set(v)
+            return S - jnp.swapaxes(S, -1, -2)
+
+        term = ManifoldSDETerm(
+            group=SphereAction(n),
+            drift=lambda t, y, a: skew_flat(jnp.tanh(a @ y)),
+            diffusion=lambda t, y, a: 0.2,
+            noise="general",
+            noise_apply=lambda sig, dw: skew_flat(sig * dw),
+        )
+        W = 0.3 * jax.random.normal(KEY, (m, n), jnp.float64)
+        y0 = jnp.zeros(n, jnp.float64).at[0].set(1.0)
+        bm = brownian_path(KEY, 0.0, 1.0, 50, shape=(m,), dtype=jnp.float64)
+        r = solve(cfees25_solver(), term, y0, bm, W, adjoint="full")
+        assert abs(float(jnp.linalg.norm(r.y_final)) - 1.0) < 1e-12
+
+    def test_torus_stays_wrapped(self):
+        grp = Torus()
+        term = ManifoldSDETerm(
+            group=grp,
+            drift=lambda t, y, a: 5.0 * jnp.ones_like(y),
+            diffusion=lambda t, y, a: jnp.ones_like(y),
+            noise="diagonal",
+        )
+        bm = brownian_path(KEY, 0.0, 5.0, 100, shape=(6,), dtype=jnp.float64)
+        r = solve(cfees25_solver(), term, jnp.zeros(6), bm, None, adjoint="full")
+        assert float(jnp.max(jnp.abs(r.y_final))) <= np.pi + 1e-9
+
+    def test_son_general(self):
+        n = 5
+        grp = SOn(n)
+        key1, key2 = jax.random.split(KEY)
+        M = jax.random.normal(key1, (n, n), jnp.float64)
+
+        def xi(t, y, a):
+            S = M @ y
+            return 0.3 * (S - S.T)
+
+        term = ManifoldSDETerm(group=grp, drift=xi, noise="none")
+        bm = brownian_path(key2, 0.0, 1.0, 20, shape=(), dtype=jnp.float64)
+        r = solve(cfees25_solver(), term, jnp.eye(n, dtype=jnp.float64), bm, None)
+        assert float(grp.distance_from_manifold(r.y_final)) < 1e-12
+
+
+class TestCFEESReversibility:
+    def test_reverse_order_on_so3(self):
+        """Theorem 3.2: CF-EES(2,5) recovers the initial condition to order 5
+        (error O(h^6) per step)."""
+        term = so3_term()
+        solver = cfees25_solver()
+        Y0 = jnp.eye(3, dtype=jnp.float64)
+        hs = np.array([0.1, 0.05, 0.025])
+        errs = []
+        for h in hs:
+            y1 = solver.step(term, Y0, 0.0, h, jnp.zeros(3), None)
+            y0b = solver.reverse(term, y1, 0.0, h, jnp.zeros(3), None)
+            errs.append(float(jnp.max(jnp.abs(y0b - Y0))))
+        slope = np.polyfit(np.log(hs), np.log(errs), 1)[0]
+        assert slope > 5.5
+
+    def test_geo_em_not_effectively_symmetric(self):
+        term = so3_term()
+        solver = GeoEulerMaruyama()
+        Y0 = jnp.eye(3, dtype=jnp.float64)
+        hs = np.array([0.1, 0.05, 0.025])
+        errs = []
+        for h in hs:
+            y1 = solver.step(term, Y0, 0.0, h, jnp.zeros(3), None)
+            y0b = solver.reverse(term, y1, 0.0, h, jnp.zeros(3), None)
+            errs.append(float(jnp.max(jnp.abs(y0b - Y0))))
+        slope = np.polyfit(np.log(hs), np.log(errs), 1)[0]
+        assert slope < 3.5  # order ~2 reverse error: *not* near-reversible
+
+
+class TestManifoldAdjoint:
+    def test_kuramoto_product_gradients(self):
+        N = 5
+        grp = Product([Torus(), Euclidean()])
+
+        def drift(t, y, p):
+            th, om = y
+            return (om, p["K"] * jnp.mean(jnp.sin(th[None, :] - th[:, None]), axis=1) - om)
+
+        def diff(t, y, p):
+            th, om = y
+            return (jnp.zeros_like(th), p["D"] * jnp.ones_like(om))
+
+        term = ManifoldSDETerm(group=grp, drift=drift, diffusion=diff, noise="diagonal")
+        y0 = (jnp.linspace(-1.0, 1.0, N), jnp.zeros(N))
+
+        def loss(p, adjoint):
+            bm = brownian_path(KEY, 0.0, 2.0, 200, shape=((N,), (N,)), dtype=jnp.float64)
+            r = solve(cfees25_solver(), term, y0, bm, p, adjoint=adjoint, save_every=50)
+            th, om = r.y_final
+            ths, oms = r.ys
+            return jnp.sum(jnp.cos(th)) + 0.1 * jnp.sum(om ** 2) + 0.01 * jnp.sum(ths ** 2)
+
+        p = {"K": jnp.float64(2.0), "D": jnp.float64(0.05)}
+        gf = jax.grad(lambda q: loss(q, "full"))(p)
+        gr = jax.grad(lambda q: loss(q, "reversible"))(p)
+        for k in p:
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-6)

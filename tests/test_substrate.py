@@ -1,0 +1,227 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, fault-tolerance,
+serving engine, MoE properties, EES residual stream."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticTokens, prefetch
+from repro.models import ModelOptions, init_params, loss_fn
+from repro.models.moe import moe_block
+from repro.models.reversible import ees_depth_solve, euler_depth_solve
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerTracker,
+    recovery_plan,
+)
+from repro.train.trainer import TrainLoopConfig, train_loop
+from repro.serving.engine import Engine, ServeConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestData:
+    def test_deterministic_by_step(self):
+        dc = DataConfig(global_batch=4, seq_len=16, vocab=100)
+        d = SyntheticTokens(dc)
+        a, b = d.batch_at(3), d.batch_at(3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        assert not np.array_equal(d.batch_at(3)["tokens"], d.batch_at(4)["tokens"])
+
+    def test_host_sharding_partitions_global_batch(self):
+        dc = DataConfig(global_batch=8, seq_len=8, vocab=50)
+        full = SyntheticTokens(dc).batch_at(5)["tokens"]
+        parts = [
+            SyntheticTokens(
+                DataConfig(global_batch=8, seq_len=8, vocab=50, num_hosts=4, host_id=h)
+            ).batch_at(5)["tokens"]
+            for h in range(4)
+        ]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+    def test_prefetch_preserves_order(self):
+        out = list(prefetch(iter(range(10)), depth=3))
+        assert out == list(range(10))
+
+    def test_labels_are_shifted_tokens(self):
+        dc = DataConfig(global_batch=2, seq_len=16, vocab=100)
+        b = SyntheticTokens(dc).batch_at(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestOptim:
+    def test_adamw_converges_quadratic(self):
+        opt = adamw(0.1, max_grad_norm=None)
+        params = {"x": jnp.array([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(300):
+            g = jax.grad(lambda p: jnp.sum((p["x"] - 1.0) ** 2))(params)
+            params, state, _ = opt.update(g, state, params)
+        np.testing.assert_allclose(params["x"], [1.0, 1.0], atol=1e-2)
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.ones(4) * 10.0}
+        clipped, gn = clip_by_global_norm(g, 1.0)
+        assert float(gn) == pytest.approx(20.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+    def test_cosine_schedule_shape(self):
+        lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+        assert float(lr(0)) == pytest.approx(0.0)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.1, rel=1e-2)
+
+    def test_bf16_params_f32_state(self):
+        opt = adamw(1e-2)
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = opt.init(params)
+        assert state.mu["w"].dtype == jnp.float32
+        g = {"w": jnp.ones((4,), jnp.bfloat16)}
+        p2, _, _ = opt.update(g, state, params)
+        assert p2["w"].dtype == jnp.bfloat16
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_atomicity(self):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 7, tree)
+            assert latest_step(d) == 7
+            got = restore_checkpoint(d, 7, tree)
+            for x, y in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(got)):
+                np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+                assert x.dtype == y.dtype
+
+    def test_resume_exact_training(self):
+        cfg = get_arch("olmo-1b").smoke()
+        key = jax.random.PRNGKey(42)
+        data = SyntheticTokens(DataConfig(global_batch=2, seq_len=16, vocab=cfg.vocab))
+        with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+            # uninterrupted 6 steps
+            outA = train_loop(
+                cfg, init_params(cfg, key), data, optimizer=adamw(1e-3),
+                loop=TrainLoopConfig(steps=6, ckpt_every=100, ckpt_dir=d1),
+            )
+            # interrupted at 3, resumed to 6
+            train_loop(
+                cfg, init_params(cfg, key), data, optimizer=adamw(1e-3),
+                loop=TrainLoopConfig(steps=3, ckpt_every=3, ckpt_dir=d2),
+            )
+            outB = train_loop(
+                cfg, init_params(cfg, key), data, optimizer=adamw(1e-3),
+                loop=TrainLoopConfig(steps=6, ckpt_every=100, ckpt_dir=d2),
+            )
+        for a, b in zip(
+            jax.tree_util.tree_leaves(outA["params"]),
+            jax.tree_util.tree_leaves(outB["params"]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+class TestFaultTolerance:
+    def test_heartbeat(self):
+        hb = HeartbeatMonitor(hosts=[0, 1, 2], deadline_s=10.0)
+        hb.beat(0, now=100.0)
+        hb.beat(1, now=100.0)
+        hb.beat(2, now=50.0)
+        assert hb.dead_hosts(now=105.0) == [2]
+
+    def test_straggler_detection(self):
+        tr = StragglerTracker(hosts=[0, 1, 2, 3], k=4.0)
+        for _ in range(16):
+            for h in range(3):
+                tr.record(h, 1.0 + 0.01 * h)
+            tr.record(3, 5.0)
+        assert tr.stragglers() == [3]
+
+    def test_recovery_plan_drops_whole_pod(self):
+        plan = recovery_plan((4, 16, 16), hosts_per_pod=32, dead_hosts=[40], latest_ckpt_step=1200)
+        assert plan.new_mesh_shape == (3, 16, 16)
+        assert plan.resume_step == 1200
+
+    def test_recovery_plan_all_dead_raises(self):
+        with pytest.raises(RuntimeError):
+            recovery_plan((1, 16, 16), 32, dead_hosts=[0], latest_ckpt_step=0)
+
+
+class TestServing:
+    def test_engine_continuous_batching(self):
+        cfg = get_arch("qwen3-1.7b").smoke()
+        eng = Engine(cfg, init_params(cfg, KEY), ServeConfig(slots=2, max_len=12))
+        rids = [eng.submit([3, 1, 4]) for _ in range(5)]  # more requests than slots
+        done = eng.run()
+        assert sorted(done) == sorted(rids)
+        assert all(len(v) <= 12 for v in done.values())
+
+    def test_encoder_only_rejected(self):
+        cfg = get_arch("hubert-xlarge").smoke()
+        with pytest.raises(ValueError):
+            Engine(cfg, init_params(cfg, KEY))
+
+
+class TestMoEProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_combine_weights_sum_to_one(self, seed):
+        """Router gate weights are renormalised over the top-k."""
+        key = jax.random.PRNGKey(seed)
+        logits = jax.random.normal(key, (16, 8))
+        probs = jax.nn.softmax(logits, -1)
+        vals, _ = jax.lax.top_k(probs, 2)
+        vals = vals / vals.sum(-1, keepdims=True)
+        np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0, rtol=1e-5)
+
+    def test_moe_matches_dense_single_expert(self):
+        """E=1, k=1, huge capacity == a plain SwiGLU MLP."""
+        import dataclasses as dc
+
+        from repro.models.layers import init_mlp, mlp_block
+        from repro.models.moe import init_moe
+
+        cfg = dc.replace(
+            get_arch("olmoe-1b-7b").smoke(), n_experts=1, moe_top_k=1,
+            capacity_factor=64.0, moe_d_ff=32,
+        )
+        p = init_moe(cfg, KEY, jnp.float32)
+        x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+        out, aux = moe_block(cfg, p, x, ModelOptions())
+        mlp_p = {"ln": p["ln"], "wg": p["wg"][0], "wu": p["wu"][0], "wd": p["wd"][0]}
+        cfg_sw = dc.replace(cfg, mlp="swiglu")
+        want = mlp_block(cfg_sw, mlp_p, x, ModelOptions())
+        np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+class TestEESResidualStream:
+    def _block(self):
+        def block_fn(lp, y):
+            return jnp.tanh(y @ lp["w"]) * 0.1
+
+        L, d = 6, 8
+        layers = {"w": 0.5 * jax.random.normal(KEY, (L, d, d))}
+        y0 = jax.random.normal(jax.random.fold_in(KEY, 1), (2, d))
+        return block_fn, layers, y0
+
+    def test_reversible_matches_full(self):
+        block_fn, layers, y0 = self._block()
+
+        def loss(layers, adjoint):
+            y = ees_depth_solve(block_fn, layers, y0, step=1.0, adjoint=adjoint)
+            return jnp.sum(y ** 2)
+
+        gf = jax.grad(lambda l: loss(l, "full"))(layers)
+        gr = jax.grad(lambda l: loss(l, "reversible"))(layers)
+        np.testing.assert_allclose(gf["w"], gr["w"], rtol=1e-4, atol=1e-7)
+
+    def test_small_step_approaches_euler(self):
+        block_fn, layers, y0 = self._block()
+        ye = euler_depth_solve(block_fn, layers, y0, step=0.01)
+        ys = ees_depth_solve(block_fn, layers, y0, step=0.01, adjoint="full")
+        np.testing.assert_allclose(ye, ys, atol=1e-4)
