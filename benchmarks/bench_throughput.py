@@ -1,0 +1,85 @@
+"""Monte-Carlo sampling throughput: trajectories/sec vs batch size.
+
+Times the jit'd batched ``sdeint`` fan-out (the serving engine's hot path)
+for registry solvers across batch sizes, and emits ``BENCH_throughput.json``
+next to the repo root with one record per (solver, batch size):
+
+    {"solver": "ees25", "batch_size": 256, "n_steps": 64,
+     "traj_per_sec": ..., "steps_per_sec": ..., "us_per_call": ...}
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_throughput [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SDETerm, sdeint
+
+from .common import emit, time_fn
+
+SOLVERS = ("ees25", "reversible_heun")
+BATCH_SIZES = (16, 64, 256, 1024)
+N_STEPS = 64
+DIM = 16
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_throughput.json",
+)
+
+
+def ou_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+def run(out_path: str = DEFAULT_OUT, *, batch_sizes=BATCH_SIZES,
+        solvers=SOLVERS, n_steps: int = N_STEPS, dim: int = DIM):
+    term = ou_term()
+    args = {"nu": jnp.float32(0.2), "mu": jnp.float32(0.1),
+            "sigma": jnp.float32(2.0)}
+    y0 = jnp.ones(dim, jnp.float32)
+    records = []
+    for solver in solvers:
+        for batch in batch_sizes:
+            fn = jax.jit(lambda keys, a, s=solver: sdeint(
+                term, s, 0.0, 1.0, n_steps, y0, None, args=a, batch_keys=keys
+            ).y_final)
+            keys = jax.random.split(jax.random.PRNGKey(0), batch)
+            us = time_fn(fn, keys, args, warmup=2, iters=5)
+            traj_per_sec = batch / (us * 1e-6)
+            records.append({
+                "solver": solver,
+                "batch_size": batch,
+                "n_steps": n_steps,
+                "dim": dim,
+                "us_per_call": us,
+                "traj_per_sec": traj_per_sec,
+                "steps_per_sec": traj_per_sec * n_steps,
+            })
+            emit(f"bench_throughput/{solver}/B{batch}", us,
+                 f"traj_per_sec={traj_per_sec:.0f}")
+    with open(out_path, "w") as f:
+        json.dump({"device": jax.devices()[0].platform, "records": records}, f,
+                  indent=2)
+    print(f"# wrote {out_path}")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit):
   table4_sphere    — Table 4 + Fig 6: sphere latent SDE + adjoint memory
   table7_gbm       — Table 7/H.1: stiff-GBM stability separation
   fig_convergence  — Figs 7/8 + App. G: strong/backward rates on fBm RDEs
+  bench_throughput — beyond-paper: batched sdeint trajectories/sec vs batch
 """
 import time
 import traceback
@@ -14,6 +15,7 @@ import traceback
 
 def main() -> None:
     from . import (
+        bench_throughput,
         fig_convergence,
         table1_ou,
         table2_vol,
@@ -24,7 +26,7 @@ def main() -> None:
 
     t00 = time.time()
     for mod in (table7_gbm, table1_ou, table2_vol, table3_kuramoto,
-                table4_sphere, fig_convergence):
+                table4_sphere, fig_convergence, bench_throughput):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()

@@ -5,6 +5,9 @@ a *fixed vector-field evaluation budget* per integration (paper's protocol:
 step sizes chosen so all solvers use the same number of f,g evaluations).
 Reported: terminal moment-MSE + wall time.  The paper's claim: EES(2,5)
 remains stable where Reversible Heun / MCF degrade in the high-vol regime.
+
+Solvers are registry spec strings and the Monte-Carlo batch runs through
+``make_sde_train_step`` / ``sdeint`` — the same path serving uses.
 """
 from __future__ import annotations
 
@@ -14,18 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    MCFSolver,
-    ReversibleHeun,
-    brownian_path,
-    ees25_solver,
-    euler,
-    midpoint,
-    solve,
-)
 from repro.nsde import init_lsde, lsde_readout, lsde_term, moment_mse
 from repro.nsde.data import ou_paths
 from repro.optim import adamw
+from repro.train.trainer import make_sde_train_step
 
 from .common import emit
 
@@ -35,41 +30,40 @@ EPOCHS, BATCH = 60, 256
 
 
 def solvers():
+    # (label, registry spec, steps at the common NFE budget)
     return [
-        ("RevHeun", ReversibleHeun(), NFE),
-        ("MCF-Euler", MCFSolver(euler), NFE // 2),
-        ("MCF-Midpoint", MCFSolver(midpoint), NFE // 4),
-        ("EES(2,5)", ees25_solver(), NFE // 3),
+        ("RevHeun", "reversible_heun", NFE),
+        ("MCF-Euler", "mcf-euler", NFE // 2),
+        ("MCF-Midpoint", "mcf-midpoint", NFE // 4),
+        ("EES(2,5)", "ees25", NFE // 3),
     ]
 
 
-def train_one(solver, n_steps, target, seed=0):
+def train_one(solver_spec, n_steps, target, seed=0):
     key = jax.random.PRNGKey(seed)
     params = init_lsde(key, D_OBS, D_Z, width=32)
-    term = lsde_term()
     opt = adamw(1e-2)
     state = opt.init(params)
     tgt = jnp.asarray(target, jnp.float32)
     n_saves = target.shape[1]
-    save_every = n_steps // n_saves
 
-    def loss_fn(p, k):
-        bm = brownian_path(k, 0.0, T, n_steps, shape=(BATCH, D_Z))
-        z0 = jnp.zeros((BATCH, D_Z)) + p["encoder"]["b"]
-        r = solve(solver, term, z0, bm, p, adjoint="reversible", save_every=save_every)
-        ys = lsde_readout(p, r.ys)[..., 0]  # (n_saves, batch)
-        return moment_mse(ys.T, tgt)
+    def loss_of_result(p, r):
+        ys = lsde_readout(p, r.ys)[..., 0]  # (n_paths, n_saves)
+        return moment_mse(ys, tgt)
 
-    step = jax.jit(
-        lambda p, s, k: (lambda l, g: (l, *opt.update(g, s, p)))(
-            *jax.value_and_grad(loss_fn)(p, k)
-        )
-    )
+    step = jax.jit(make_sde_train_step(
+        solver_spec, lsde_term(), opt,
+        y0_fn=lambda p: jnp.zeros(D_Z) + p["encoder"]["b"],
+        loss_fn_result=loss_of_result,
+        t0=0.0, t1=T, n_steps=n_steps, n_paths=BATCH,
+        adjoint="reversible", save_every=n_steps // n_saves,
+    ))
     t0 = time.time()
     loss = float("nan")
     for e in range(EPOCHS):
         key, sub = jax.random.split(key)
-        loss, params, state, _ = step(params, state, sub)
+        params, state, m = step(params, state, sub)
+        loss = m["loss"]
     return float(loss), time.time() - t0
 
 
@@ -78,8 +72,8 @@ def run():
     n_saves = 2  # common divisor of every solver's step count
     target_full = ou_paths(rng, 4096, n_saves, T=T)  # exact OU marginals
     target = target_full[:, 1:]  # drop t=0
-    for name, solver, n_steps in solvers():
-        loss, wall = train_one(solver, n_steps, target)
+    for name, spec, n_steps in solvers():
+        loss, wall = train_one(spec, n_steps, target)
         tag = "nan" if not np.isfinite(loss) else f"{loss:.4f}"
         emit(f"table1_ou/{name}", wall / EPOCHS * 1e6, f"terminal_mse={tag}")
 

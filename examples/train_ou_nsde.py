@@ -1,6 +1,11 @@
 """End-to-end driver: train a Neural Langevin SDE on high-volatility OU
 dynamics with the EES(2,5) reversible adjoint (paper Section 4, Table 1).
 
+The whole integration stack goes through the batched engine: the solver is a
+registry spec string (try ``--solver ees25:x=0.3`` or ``mcf-rk4``), and the
+Monte-Carlo batch is ``sdeint``'s per-key vmap fan-out via
+``make_sde_train_step``.
+
 Run:  PYTHONPATH=src python examples/train_ou_nsde.py [--epochs 150]
 """
 import argparse
@@ -10,10 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import brownian_path, ees25_solver, solve
 from repro.nsde import init_lsde, lsde_readout, lsde_term, moment_mse
 from repro.nsde.data import ou_paths
 from repro.optim import adamw, cosine_schedule
+from repro.train.trainer import make_sde_train_step
 
 
 def main():
@@ -21,6 +26,8 @@ def main():
     ap.add_argument("--epochs", type=int, default=150)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--solver", default="ees25",
+                    help="registry spec, e.g. ees25, ees25:x=0.3, mcf-rk4")
     args = ap.parse_args()
 
     T, n_saves = 2.0, 4
@@ -29,31 +36,27 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params = init_lsde(key, d_obs=1, d_z=32, width=32)
-    term = lsde_term()
-    solver = ees25_solver()
     opt = adamw(cosine_schedule(1e-2, 10, args.epochs))
     state = opt.init(params)
 
-    def loss_fn(p, k):
-        bm = brownian_path(k, 0.0, T, args.steps, shape=(args.batch, 32))
-        z0 = jnp.zeros((args.batch, 32)) + p["encoder"]["b"]
-        r = solve(solver, term, z0, bm, p, adjoint="reversible",
-                  save_every=args.steps // n_saves)
-        ys = lsde_readout(p, r.ys)[..., 0]
-        return moment_mse(ys.T, target)
+    def loss_of_result(p, r):
+        ys = lsde_readout(p, r.ys)[..., 0]  # (n_paths, n_saves)
+        return moment_mse(ys, target)
 
-    @jax.jit
-    def step(p, s, k):
-        l, g = jax.value_and_grad(loss_fn)(p, k)
-        p, s, gn = opt.update(g, s, p)
-        return l, p, s
+    step = jax.jit(make_sde_train_step(
+        args.solver, lsde_term(), opt,
+        y0_fn=lambda p: jnp.zeros(32) + p["encoder"]["b"],
+        loss_fn_result=loss_of_result,
+        t0=0.0, t1=T, n_steps=args.steps, n_paths=args.batch,
+        adjoint="reversible", save_every=args.steps // n_saves,
+    ))
 
     t0 = time.time()
     for e in range(args.epochs):
         key, sub = jax.random.split(key)
-        l, params, state = step(params, state, sub)
+        params, state, m = step(params, state, sub)
         if (e + 1) % 25 == 0:
-            print(f"epoch {e+1:4d}  moment-mse {float(l):.5f}  "
+            print(f"epoch {e+1:4d}  moment-mse {float(m['loss']):.5f}  "
                   f"({time.time()-t0:.1f}s)", flush=True)
     print("done.")
 

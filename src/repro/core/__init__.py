@@ -6,12 +6,23 @@ Public surface:
   brownian   — counter-based reconstructible Brownian paths
   solvers    — Euclidean SDE solvers (EES Butcher/2N, Reversible Heun, MCF)
   adjoint    — Full / Recursive / Reversible adjoints (Algorithms 1 & 2)
+  registry   — string-keyed solver registry ("ees25", "ees25:x=0.3", ...)
+  sdeint     — batched Monte-Carlo integration (vmap/shard_map fan-out)
   lie        — groups & homogeneous spaces (Torus, SO(3)/SO(n), S^{n-1}, products)
   cfees      — CF-EES and geometric baselines (GeoEM, CG2, RKMK2)
   stability  — linear & mean-square stability analysis
 """
 from .adjoint import SolveResult, solve
 from .brownian import BrownianPath, brownian_path
+from .registry import (
+    canonical_spec,
+    get_solver,
+    list_solvers,
+    parse_solver_spec,
+    register_solver,
+    solver_kind,
+)
+from .sdeint import sdeint
 from .cfees import (
     CFLowStorageSolver,
     CrouchGrossman2,
@@ -44,7 +55,14 @@ from .williamson import EES25_2N, EES27_2N, bazavov_residuals, butcher_from_2n, 
 
 __all__ = [
     "solve",
+    "sdeint",
     "SolveResult",
+    "get_solver",
+    "list_solvers",
+    "parse_solver_spec",
+    "register_solver",
+    "canonical_spec",
+    "solver_kind",
     "BrownianPath",
     "brownian_path",
     "SDETerm",

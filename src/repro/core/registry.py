@@ -1,0 +1,187 @@
+"""String-keyed solver registry: solvers selectable from configs and requests.
+
+Every entry point that integrates an SDE — benchmarks, training configs,
+serving requests, CLI flags — names its solver by a *spec string* instead of
+constructing solver objects by hand::
+
+    get_solver("ees25")                 # canonical EES(2,5; x=1/10)
+    get_solver("ees25:x=0.3")           # the one-parameter family member
+    get_solver("ees27")
+    get_solver("reversible_heun")
+    get_solver("mcf-rk4")               # reversible coupling of RK4
+    get_solver("mcf-midpoint:lam=0.99")
+    get_solver("euler"), ("heun"), ("midpoint"), ("rk3"), ("rk4"), ...
+
+A spec is ``name`` or ``name:key=val,key=val`` — the kwargs are passed to the
+registered factory, so any tunable of the underlying solver (the EES family
+parameter ``x``, the MCF contraction ``lam``, the fused-kernel toggle
+``use_kernel``) is reachable from a plain string.  ``get_solver`` is
+idempotent on non-strings: passing an already-constructed solver object
+returns it unchanged, so APIs can accept either form.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from . import tableaux
+from .solvers import ButcherSolver, MCFSolver, ReversibleHeun, ees25_solver, ees27_solver
+
+__all__ = ["register_solver", "get_solver", "list_solvers", "parse_solver_spec",
+           "canonical_spec", "solver_kind"]
+
+
+_REGISTRY: Dict[str, Tuple[Callable[..., Any], str]] = {}
+
+
+def register_solver(name: str, factory: Optional[Callable[..., Any]] = None,
+                    *, kind: str = "euclidean"):
+    """Register ``factory`` under ``name`` (usable as a decorator).
+
+    The factory is called with the kwargs parsed from the spec string; it must
+    return an object with the solver interface (init/step/reverse/extract).
+    ``kind`` declares which term type the solver integrates — ``"euclidean"``
+    (:class:`~repro.core.solvers.SDETerm`) or ``"manifold"``
+    (:class:`~repro.core.lie.ManifoldSDETerm`).  Re-registering an existing
+    name overwrites it (latest wins), so user code can shadow built-ins.
+    """
+    key = _canon(name)
+
+    def deco(f):
+        _REGISTRY[key] = (f, kind)
+        return f
+
+    if factory is not None:
+        return deco(factory)
+    return deco
+
+
+def list_solvers(kind: Optional[str] = None) -> Tuple[str, ...]:
+    """Registered solver names (optionally filtered by kind), sorted."""
+    return tuple(sorted(
+        n for n, (_, k) in _REGISTRY.items() if kind is None or k == kind
+    ))
+
+
+def _canon(name: str) -> str:
+    return name.strip().lower().replace("_", "-")
+
+
+def _parse_value(text: str):
+    try:
+        return ast.literal_eval(text)
+    except (ValueError, SyntaxError):
+        return text  # bare strings, e.g. "mode=fast"
+
+
+def parse_solver_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
+    """Split ``"name:k=v,k2=v2"`` into ``(name, kwargs)``."""
+    name, _, tail = spec.partition(":")
+    kwargs: Dict[str, Any] = {}
+    if tail:
+        for item in tail.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(
+                    f"malformed solver spec {spec!r}: expected key=value, got {item!r}"
+                )
+            k, _, v = item.partition("=")
+            kwargs[k.strip()] = _parse_value(v.strip())
+    return _canon(name), kwargs
+
+
+def _lookup(name: str) -> Tuple[Callable[..., Any], str]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver {name!r}; registered: {', '.join(list_solvers())}"
+        ) from None
+
+
+def canonical_spec(spec: str) -> str:
+    """Normal form of a spec string: canonical name, sorted repr'd kwargs.
+
+    Equivalent spellings (``"reversible_heun"`` / ``"Reversible-Heun"``,
+    kwarg order) map to one string, so caches keyed on specs don't split.
+    """
+    name, kwargs = parse_solver_spec(spec)
+    _lookup(name)
+    if not kwargs:
+        return name
+    return name + ":" + ",".join(f"{k}={kwargs[k]!r}" for k in sorted(kwargs))
+
+
+def solver_kind(spec: str) -> str:
+    """The registered kind ("euclidean" | "manifold") of a spec's solver."""
+    name, _ = parse_solver_spec(spec)
+    return _lookup(name)[1]
+
+
+def get_solver(spec, **overrides):
+    """Resolve a solver spec string (or pass a solver object through).
+
+    ``overrides`` take precedence over kwargs parsed from the spec, so
+    programmatic callers can pin e.g. ``use_kernel=True`` regardless of what
+    the config string says.
+    """
+    if not isinstance(spec, str):
+        if overrides:
+            raise ValueError(
+                "overrides only apply to spec strings; got an already-"
+                f"constructed solver {spec!r} with overrides {overrides}"
+            )
+        return spec  # already a solver object
+    name, kwargs = parse_solver_spec(spec)
+    factory, _ = _lookup(name)
+    kwargs.update(overrides)
+    return factory(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Built-in entries.
+# ---------------------------------------------------------------------------
+
+register_solver("ees25", ees25_solver)
+register_solver("ees27", ees27_solver)
+register_solver("reversible-heun", lambda: ReversibleHeun())
+
+
+def _butcher_factory(tab):
+    return lambda: ButcherSolver(tab)
+
+
+def _mcf_factory(tab):
+    return lambda lam=0.999: MCFSolver(tab, lam=lam)
+
+
+for _tab in (tableaux.euler, tableaux.midpoint, tableaux.heun,
+             tableaux.ralston3, tableaux.rk3, tableaux.rk4):
+    register_solver(_tab.name, _butcher_factory(_tab))
+    register_solver(f"mcf-{_tab.name}", _mcf_factory(_tab))
+
+
+def _ees25_butcher(x: float = 0.1):
+    return ButcherSolver(tableaux.ees25_tableau(x))
+
+
+register_solver("ees25-butcher", _ees25_butcher)
+register_solver("ees27-butcher", lambda: ButcherSolver(tableaux.ees27_tableau()))
+
+
+def _register_manifold():
+    # Imported here (not at module top) only to dodge an import cycle:
+    # cfees -> solvers would clash with solvers -> registry if registry ever
+    # grows a solvers-side hook.  It runs eagerly at import time below.
+    from .cfees import CrouchGrossman2, GeoEulerMaruyama, RKMK2, cfees25_solver, cfees27_solver
+
+    register_solver("cfees25", cfees25_solver, kind="manifold")
+    register_solver("cfees27", cfees27_solver, kind="manifold")
+    register_solver("geo-em", lambda: GeoEulerMaruyama(), kind="manifold")
+    register_solver("cg2", lambda: CrouchGrossman2(), kind="manifold")
+    register_solver("rkmk2", lambda: RKMK2(), kind="manifold")
+
+
+_register_manifold()

@@ -1,0 +1,16 @@
+"""repro.serving — batched engines.
+
+  engine     — LM continuous-batching decode engine (fixed-slot serve_step)
+  sde_engine — Monte-Carlo SDE sampling engine (fixed-slot batched sdeint)
+"""
+from .engine import Engine, ServeConfig
+from .sde_engine import SampleRequest, SampleResult, SDESampleConfig, SDESampleEngine
+
+__all__ = [
+    "Engine",
+    "ServeConfig",
+    "SDESampleEngine",
+    "SDESampleConfig",
+    "SampleRequest",
+    "SampleResult",
+]

@@ -1,0 +1,205 @@
+"""Batched Monte-Carlo sampling engine: fixed-slot batching over ``sdeint``.
+
+The SDE analogue of the LM :class:`~repro.serving.engine.Engine`: requests
+(solver name, horizon, number of paths) join a FIFO queue; every engine tick
+integrates one *fixed-size* batch of trajectories — ``slots`` paths — in a
+single jit'd ``sdeint`` call, filling the batch with paths from as many
+compatible queued requests as fit (continuous batching).  A request larger
+than ``slots`` is served across several ticks.
+
+Two properties make slicing safe:
+
+* path ``i`` of request ``r`` always uses ``fold_in(base_key_r, i)``, so the
+  sample a request receives is independent of slot assignment, tick
+  boundaries, and whatever else shares its batch;
+* ``sdeint``'s batch is bitwise equal to single-trajectory solves, so a
+  request's paths are reproducible offline from its seed alone.
+
+Compiled executables are cached per request *signature* (solver spec,
+horizon, step count, save cadence) — ticks re-use them, so steady-state
+serving never recompiles, exactly like the LM engine's single ``serve_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import canonical_spec, sdeint, solver_kind
+
+__all__ = ["SDESampleConfig", "SampleRequest", "SampleResult", "SDESampleEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SDESampleConfig:
+    slots: int = 64          # trajectories integrated per tick
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    request_id: int
+    solver: str
+    t0: float
+    t1: float
+    n_steps: int
+    n_paths: int
+    save_every: Optional[int]
+    seed: int
+
+    @property
+    def signature(self) -> Tuple:
+        """Requests with equal signatures can share one compiled batch."""
+        return (self.solver, self.t0, self.t1, self.n_steps, self.save_every)
+
+
+@dataclasses.dataclass
+class SampleResult:
+    """Stacked per-path outputs: ``y_final`` is (n_paths, ...); ``ys`` is
+    (n_paths, n_saves, ...) when the request asked for a saved trajectory."""
+
+    y_final: Any
+    ys: Optional[Any]
+
+
+@dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
+class _Pending:
+    request: SampleRequest
+    delivered: int = 0
+    y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
+    ys: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+class SDESampleEngine:
+    """Serve Monte-Carlo sampling requests against one SDE term.
+
+    ``term``/``y0``/``args`` define the process; each request picks a solver
+    from the registry by name and a horizon.  Results come back as stacked
+    numpy arrays per request id (like ``Engine.done``).
+    """
+
+    def __init__(self, term, y0, cfg: SDESampleConfig = SDESampleConfig(),
+                 args: Any = None, noise_shape=None):
+        self.term = term
+        self.y0 = y0
+        self.cfg = cfg
+        self.args = args
+        self.noise_shape = noise_shape
+        self.queue: deque = deque()
+        self.done: Dict[int, SampleResult] = {}
+        self._next_id = 0
+        self._compiled: Dict[Tuple, Any] = {}
+
+    def submit(self, solver: str, *, t1: float, n_steps: int, n_paths: int,
+               t0: float = 0.0, save_every: Optional[int] = None,
+               seed: Optional[int] = None) -> int:
+        # Reject bad requests here, not at the queue head where a crash
+        # would starve everything queued behind them.
+        if n_paths < 1:
+            raise ValueError(f"n_paths must be >= 1, got {n_paths}")
+        n_steps = int(n_steps)
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        if not float(t1) > float(t0):
+            raise ValueError(f"need t1 > t0, got t0={t0}, t1={t1}")
+        solver = canonical_spec(solver)  # raises on unknown names; one
+        # normal form per solver so equivalent spellings share a signature
+        want = "manifold" if hasattr(self.term, "algebra_increment") else "euclidean"
+        if solver_kind(solver) != want:
+            raise ValueError(
+                f"solver {solver!r} is {solver_kind(solver)}-kind but this "
+                f"engine's term needs a {want} solver"
+            )
+        if save_every is not None:
+            if int(save_every) != save_every or int(save_every) < 1:
+                raise ValueError(f"save_every must be a positive int, got {save_every}")
+            save_every = int(save_every)
+            if n_steps % save_every != 0:
+                raise ValueError(
+                    f"save_every={save_every} does not divide n_steps={n_steps}"
+                )
+        rid = self._next_id
+        self._next_id += 1
+        req = SampleRequest(
+            request_id=rid, solver=solver, t0=float(t0), t1=float(t1),
+            n_steps=n_steps, n_paths=int(n_paths),
+            save_every=save_every, seed=rid if seed is None else int(seed),
+        )
+        self.queue.append(_Pending(req))
+        return rid
+
+    # -- internals -----------------------------------------------------------
+
+    def _batch_fn(self, sig: Tuple):
+        if sig not in self._compiled:
+            solver, t0, t1, n_steps, save_every = sig
+
+            def batch(keys):
+                return sdeint(
+                    self.term, solver, t0, t1, n_steps, self.y0, None,
+                    args=self.args, save_every=save_every,
+                    noise_shape=self.noise_shape, dtype=self.cfg.dtype,
+                    batch_keys=keys,
+                )
+
+            self._compiled[sig] = jax.jit(batch)
+        return self._compiled[sig]
+
+    def _path_key(self, req: SampleRequest, i: int):
+        return jax.random.fold_in(jax.random.PRNGKey(req.seed), i)
+
+    def tick(self) -> bool:
+        """Integrate one fixed-slot batch; return False when idle."""
+        if not self.queue:
+            return False
+        head = self.queue[0]
+        sig = head.request.signature
+        # Fill the slot budget with paths from queued requests sharing the
+        # head's signature (FIFO over requests, contiguous over paths).
+        plan: List[Tuple[_Pending, int]] = []  # (pending, path index)
+        budget = self.cfg.slots
+        for pending in self.queue:
+            if budget == 0:
+                break
+            if pending.request.signature != sig:
+                continue
+            take = min(budget, pending.request.n_paths - pending.delivered)
+            plan.extend((pending, pending.delivered + j) for j in range(take))
+            budget -= take
+        # Fixed batch shape: pad unused slots with a dummy key so every tick
+        # of this signature hits the same compiled executable.
+        keys = [self._path_key(p.request, i) for p, i in plan]
+        keys += [jax.random.PRNGKey(0)] * (self.cfg.slots - len(keys))
+        result = self._batch_fn(sig)(jnp.stack(keys))
+        y_final = np.asarray(result.y_final)
+        ys = None if result.ys is None else np.asarray(result.ys)
+        for slot, (pending, _) in enumerate(plan):
+            pending.y_final.append(y_final[slot])
+            if ys is not None:
+                pending.ys.append(ys[slot])
+            pending.delivered += 1
+        # Retire fully-served requests, preserving queue order.
+        for pending in dict.fromkeys(p for p, _ in plan):
+            if pending.delivered == pending.request.n_paths:
+                self.queue.remove(pending)
+                self.done[pending.request.request_id] = SampleResult(
+                    y_final=np.stack(pending.y_final),
+                    ys=np.stack(pending.ys) if pending.ys else None,
+                )
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, SampleResult]:
+        for _ in range(max_ticks):
+            if not self.tick():
+                break
+        else:
+            if self.queue:
+                raise RuntimeError(
+                    f"max_ticks={max_ticks} exhausted with {len(self.queue)} "
+                    "request(s) still queued; raise max_ticks or slots"
+                )
+        return self.done

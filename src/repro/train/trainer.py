@@ -19,7 +19,8 @@ from repro.models import ModelOptions, loss_fn, make_train_step
 from repro.optim import adamw, cosine_schedule
 from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
-__all__ = ["TrainLoopConfig", "train_loop", "make_accum_train_step"]
+__all__ = ["TrainLoopConfig", "train_loop", "make_accum_train_step",
+           "make_sde_train_step"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +70,56 @@ def make_accum_train_step(cfg, optimizer, opts: ModelOptions, microbatches: int 
         grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
         params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
         return params, opt_state, {"loss": lsum / microbatches, "grad_norm": gnorm}
+
+    return step
+
+
+def make_sde_train_step(
+    solver,
+    term,
+    optimizer,
+    y0_fn: Callable,
+    loss_fn_result: Callable,
+    *,
+    t0: float,
+    t1: float,
+    n_steps: int,
+    n_paths: int,
+    adjoint: str = "reversible",
+    save_every: Optional[int] = None,
+    noise_shape=None,
+):
+    """Neural-SDE analogue of ``make_train_step``: one Monte-Carlo batch of
+    ``n_paths`` trajectories through ``sdeint``, a loss on the result, one
+    optimizer update.
+
+    ``solver`` is a registry spec string (``"ees25"``, ``"mcf-rk4"``, ...) or
+    a solver object; ``y0_fn(params)`` produces the (shared) initial state;
+    ``loss_fn_result(params, result)`` maps the batched
+    :class:`~repro.core.SolveResult` (leading axis ``n_paths``) to a scalar.
+    The returned step is ``(params, opt_state, key) -> (params, opt_state,
+    metrics)`` and is jit-compatible; each path derives its key by
+    ``fold_in``, matching the serving engine's convention.
+    """
+    from repro.core import get_solver, sdeint
+
+    solver = get_solver(solver)
+
+    def step(params, opt_state, key):
+        def loss(p):
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(n_paths)
+            )
+            r = sdeint(
+                term, solver, t0, t1, n_steps, y0_fn(p), None, args=p,
+                adjoint=adjoint, save_every=save_every,
+                noise_shape=noise_shape, batch_keys=keys,
+            )
+            return loss_fn_result(p, r)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt_state, gnorm = optimizer.update(g, opt_state, params)
+        return params, opt_state, {"loss": l, "grad_norm": gnorm}
 
     return step
 

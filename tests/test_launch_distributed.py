@@ -11,6 +11,10 @@ import textwrap
 
 import pytest
 
+# Every case spawns a fresh interpreter with 8 fake XLA devices — tens of
+# seconds of jax re-init each; slow lane only.
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -107,6 +111,45 @@ def test_elastic_checkpoint_reshard():
             got = restore_checkpoint(d, 1, tree, shardings=sh4)
         np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
         assert len(got["w"].sharding.device_set) == 4
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sdeint_mesh_fanout_matches_vmap():
+    """shard_map Monte-Carlo fan-out over a device axis: same samples as the
+    single-device vmap batch (sdeint's key-based batching is placement-free)."""
+    out = run_py("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import SDETerm, sdeint
+
+        term = SDETerm(
+            drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+            diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+            noise="diagonal",
+        )
+        args = {"nu": jnp.float32(0.2), "mu": jnp.float32(0.1),
+                "sigma": jnp.float32(2.0)}
+        y0 = jnp.ones(4)
+        keys = jax.random.split(jax.random.PRNGKey(0), 16)
+        r_vmap = sdeint(term, "ees25", 0.0, 1.0, 8, y0, None, args=args,
+                        save_every=4, batch_keys=keys)
+        mesh = jax.make_mesh((8,), ("data",))
+        r_sharded = sdeint(term, "ees25", 0.0, 1.0, 8, y0, None, args=args,
+                           save_every=4, batch_keys=keys,
+                           mesh=mesh, mesh_axis="data")
+        np.testing.assert_allclose(np.asarray(r_vmap.y_final),
+                                   np.asarray(r_sharded.y_final), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_vmap.ys),
+                                   np.asarray(r_sharded.ys), rtol=1e-5)
+        # ambient-mesh form: `with mesh:` supplies the mesh
+        with mesh:
+            r_ambient = sdeint(term, "ees25", 0.0, 1.0, 8, y0, None,
+                               args=args, batch_keys=keys, mesh_axis="data")
+        np.testing.assert_allclose(np.asarray(r_sharded.y_final),
+                                   np.asarray(r_ambient.y_final), rtol=1e-5)
         print("OK")
     """)
     assert "OK" in out

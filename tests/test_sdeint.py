@@ -1,0 +1,359 @@
+"""Batched Monte-Carlo engine: solver registry, `sdeint` key-batching
+(bitwise vs looped single-trajectory `solve`), adjoint gradient parity across
+every registry solver and noise mode, and the fixed-slot sampling engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SDETerm,
+    brownian_path,
+    get_solver,
+    list_solvers,
+    parse_solver_spec,
+    register_solver,
+    sdeint,
+    solve,
+)
+from repro.serving import SDESampleConfig, SDESampleEngine
+
+KEY = jax.random.PRNGKey(0)
+
+PARITY_SOLVERS = ["ees25", "ees27", "reversible_heun", "mcf-rk4"]
+NOISE_MODES = ["none", "diagonal", "general"]
+
+
+def ou_term(noise: str, d: int = 3, m: int = 2) -> SDETerm:
+    """Small OU-type problem in each noise mode, parameterised by args."""
+    drift = lambda t, y, a: a["nu"] * (a["mu"] - y)
+    if noise == "none":
+        return SDETerm(drift=drift, noise="none")
+    if noise == "diagonal":
+        diff = lambda t, y, a: a["sigma"] * (1.0 + 0.1 * jnp.tanh(y))
+        return SDETerm(drift=drift, diffusion=diff, noise="diagonal")
+    diff = lambda t, y, a: a["sigma"] * jnp.ones(y.shape + (m,), y.dtype)
+    return SDETerm(drift=drift, diffusion=diff, noise="general")
+
+
+ARGS = {
+    "nu": jnp.float64(0.7),
+    "mu": jnp.float64(0.2),
+    "sigma": jnp.float64(0.4),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_expected_names_present(self):
+        names = list_solvers()
+        for want in ("ees25", "ees27", "reversible-heun", "mcf-rk4",
+                     "mcf-euler", "euler", "heun", "midpoint", "rk4"):
+            assert want in names, names
+
+    def test_spec_parsing(self):
+        assert parse_solver_spec("ees25") == ("ees25", {})
+        assert parse_solver_spec("ees25:x=0.3") == ("ees25", {"x": 0.3})
+        assert parse_solver_spec("MCF-RK4: lam=0.99") == ("mcf-rk4", {"lam": 0.99})
+        name, kw = parse_solver_spec("reversible_heun")
+        assert name == "reversible-heun" and kw == {}
+
+    def test_family_parameter_reaches_solver(self):
+        canonical = get_solver("ees25")
+        member = get_solver("ees25:x=0.3")
+        assert canonical.ls.A != member.ls.A  # different 2N coefficients
+        assert get_solver("mcf-rk4:lam=0.99").lam == 0.99
+
+    def test_solver_objects_pass_through(self):
+        s = get_solver("ees27")
+        assert get_solver(s) is s
+
+    def test_overrides_rejected_for_solver_objects(self):
+        s = get_solver("ees27")
+        with pytest.raises(ValueError, match="overrides"):
+            get_solver(s, use_kernel=True)
+
+    def test_unknown_name_lists_options(self):
+        with pytest.raises(KeyError, match="ees25"):
+            get_solver("no_such_scheme")
+
+    def test_malformed_spec_raises(self):
+        with pytest.raises(ValueError, match="key=value"):
+            get_solver("ees25:0.3")
+
+    def test_register_decorator_and_override(self):
+        @register_solver("test-dummy")
+        def make(scale=2.0):
+            return ("dummy", scale)
+
+        assert get_solver("test-dummy") == ("dummy", 2.0)
+        assert get_solver("test-dummy:scale=5") == ("dummy", 5)
+        assert get_solver("test-dummy", scale=7) == ("dummy", 7)
+
+    def test_kind_filter(self):
+        assert "ees25" in list_solvers(kind="euclidean")
+        assert "cfees25" in list_solvers(kind="manifold")
+        assert "cfees25" not in list_solvers(kind="euclidean")
+
+    @pytest.mark.parametrize("spec", sorted(
+        s for s in list_solvers() if not s.startswith("test-")))
+    def test_every_registry_solver_steps_and_reverses(self, spec):
+        """reverse(step(state)) ~ state for every registered solver: exact for
+        algebraically reversible schemes, O(dX^{p+1}) for plain RK — the
+        Brownian component makes that O(h) for Euler, so h is kept tiny."""
+        if spec in list_solvers(kind="manifold"):
+            from repro.core import ManifoldSDETerm, Torus
+
+            term = ManifoldSDETerm(
+                group=Torus(),
+                drift=lambda t, y, a: a["nu"] * jnp.sin(y),
+                diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+                noise="diagonal",
+            )
+        else:
+            term = ou_term("diagonal")
+        solver = get_solver(spec)
+        y0 = jnp.array([0.4, -1.1, 0.8], dtype=jnp.float64)
+        state = solver.init(term, 0.0, y0, ARGS)
+        h = 1e-4
+        dW = jnp.sqrt(h) * jax.random.normal(KEY, y0.shape, jnp.float64)
+        s1 = solver.step(term, state, 0.0, h, dW, ARGS)
+        s0 = solver.reverse(term, s1, 0.0, h, dW, ARGS)
+        moved = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree_util.tree_leaves(s1),
+                            jax.tree_util.tree_leaves(state))
+        )
+        assert moved > 1e-6  # the step must actually do something
+        tol = 1e-12 if solver.is_reversible else 1e-4
+        for a, b in zip(jax.tree_util.tree_leaves(s0),
+                        jax.tree_util.tree_leaves(state)):
+            np.testing.assert_allclose(a, b, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# sdeint: batching semantics.
+# ---------------------------------------------------------------------------
+
+class TestSdeintBatching:
+    @pytest.mark.parametrize("spec", ["ees25", "reversible_heun", "mcf-rk4"])
+    def test_batch_bitwise_equals_looped_solve(self, spec):
+        """`batch_keys` fan-out is bitwise identical to a Python loop of
+        single-trajectory `solve` calls over the same keys."""
+        term = ou_term("diagonal")
+        y0 = jnp.ones(3, jnp.float64)
+        keys = jax.random.split(KEY, 5)
+        rb = sdeint(term, spec, 0.0, 1.0, 16, y0, None, args=ARGS,
+                    save_every=4, batch_keys=keys)
+        solver = get_solver(spec)
+        for i in range(5):
+            bm = brownian_path(keys[i], 0.0, 1.0, 16, shape=(3,),
+                               dtype=jnp.float64)
+            ri = solve(solver, term, y0, bm, ARGS, save_every=4)
+            np.testing.assert_array_equal(np.asarray(rb.y_final[i]),
+                                          np.asarray(ri.y_final))
+            np.testing.assert_array_equal(np.asarray(rb.ys[i]),
+                                          np.asarray(ri.ys))
+
+    def test_single_key_equals_solve(self):
+        term = ou_term("diagonal")
+        y0 = jnp.ones(3, jnp.float64)
+        r = sdeint(term, "ees25", 0.0, 1.0, 16, y0, KEY, args=ARGS)
+        bm = brownian_path(KEY, 0.0, 1.0, 16, shape=(3,), dtype=jnp.float64)
+        ref = solve(get_solver("ees25"), term, y0, bm, ARGS)
+        np.testing.assert_array_equal(np.asarray(r.y_final),
+                                      np.asarray(ref.y_final))
+
+    def test_general_noise_requires_noise_shape(self):
+        term = ou_term("general")
+        with pytest.raises(ValueError, match="noise_shape"):
+            sdeint(term, "ees25", 0.0, 1.0, 8, jnp.ones(3), KEY, args=ARGS)
+
+    def test_general_noise_batch_shapes(self):
+        term = ou_term("general", m=2)
+        keys = jax.random.split(KEY, 4)
+        r = sdeint(term, "ees25", 0.0, 1.0, 8, jnp.ones(3, jnp.float64), None,
+                   args=ARGS, noise_shape=(2,), batch_keys=keys)
+        assert r.y_final.shape == (4, 3)
+
+    def test_missing_key_raises(self):
+        with pytest.raises(ValueError, match="key"):
+            sdeint(ou_term("none"), "euler", 0.0, 1.0, 8, jnp.ones(2))
+
+    def test_mesh_without_batch_keys_raises(self):
+        with pytest.raises(ValueError, match="batch_keys"):
+            sdeint(ou_term("none"), "euler", 0.0, 1.0, 8, jnp.ones(2), KEY,
+                   mesh_axis="data")
+
+    def test_mesh_without_axis_raises(self):
+        with pytest.raises(ValueError, match="mesh_axis"):
+            sdeint(ou_term("none"), "euler", 0.0, 1.0, 8, jnp.ones(2), None,
+                   batch_keys=jax.random.split(KEY, 2), mesh=object())
+
+    def test_pytree_state_diagonal_noise(self):
+        """Noise-shape inference follows the state pytree (product states)."""
+        term = SDETerm(
+            drift=lambda t, y, a: (-y[0], -0.5 * y[1]),
+            diffusion=lambda t, y, a: (0.1 * jnp.ones_like(y[0]),
+                                       0.2 * jnp.ones_like(y[1])),
+            noise="diagonal",
+        )
+        y0 = (jnp.ones(3), jnp.ones(5))
+        keys = jax.random.split(KEY, 2)
+        r = sdeint(term, "ees25", 0.0, 1.0, 8, y0, None, batch_keys=keys)
+        assert r.y_final[0].shape == (2, 3) and r.y_final[1].shape == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# Adjoint gradient parity: every solver x every noise mode.
+# ---------------------------------------------------------------------------
+
+class TestAdjointParity:
+    @pytest.mark.parametrize("noise", NOISE_MODES)
+    @pytest.mark.parametrize("spec", PARITY_SOLVERS)
+    def test_reversible_matches_full(self, spec, noise):
+        """adjoint="reversible" gradients agree with adjoint="full" on a small
+        OU-type problem, for every registry solver and noise structure."""
+        term = ou_term(noise)
+        noise_shape = (2,) if noise == "general" else None
+        y0 = jnp.ones(3, jnp.float64)
+
+        def loss(a, adjoint):
+            r = sdeint(term, spec, 0.0, 1.0, 24, y0, KEY, args=a,
+                       adjoint=adjoint, save_every=8, noise_shape=noise_shape)
+            return jnp.sum(r.y_final ** 2) + jnp.sum(r.ys ** 2)
+
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "reversible"))(ARGS)
+        for k in ARGS:
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-5, atol=1e-12)
+
+    def test_batched_reversible_matches_full(self):
+        """Gradient parity survives the vmap fan-out (the training path)."""
+        term = ou_term("diagonal")
+        y0 = jnp.ones(3, jnp.float64)
+        keys = jax.random.split(KEY, 4)
+
+        def loss(a, adjoint):
+            r = sdeint(term, "ees25", 0.0, 1.0, 16, y0, None, args=a,
+                       adjoint=adjoint, batch_keys=keys)
+            return jnp.mean(r.y_final ** 2)
+
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "reversible"))(ARGS)
+        for k in ARGS:
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-6)
+
+    def test_recursive_matches_full_batched(self):
+        term = ou_term("diagonal")
+        y0 = jnp.ones(3, jnp.float64)
+        keys = jax.random.split(KEY, 3)
+
+        def loss(a, adjoint):
+            r = sdeint(term, "ees27", 0.0, 1.0, 16, y0, None, args=a,
+                       adjoint=adjoint, batch_keys=keys)
+            return jnp.mean(r.y_final ** 2)
+
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "recursive"))(ARGS)
+        for k in ARGS:
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-slot sampling engine.
+# ---------------------------------------------------------------------------
+
+def engine_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: -0.5 * y,
+        diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+class TestSDESampleEngine:
+    def test_serves_mixed_requests(self):
+        eng = SDESampleEngine(engine_term(), jnp.ones(3), SDESampleConfig(slots=4))
+        r1 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6)
+        r2 = eng.submit("reversible_heun", t1=1.0, n_steps=8, n_paths=3,
+                        save_every=4)
+        r3 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        done = eng.run()
+        assert sorted(done) == [r1, r2, r3]
+        assert done[r1].y_final.shape == (6, 3) and done[r1].ys is None
+        assert done[r2].y_final.shape == (3, 3)
+        assert done[r2].ys.shape == (3, 2, 3)
+        assert done[r3].y_final.shape == (2, 3)
+        assert np.isfinite(done[r1].y_final).all()
+
+    def test_results_reproducible_offline(self):
+        """Request paths equal a direct sdeint over fold_in(PRNGKey(seed), i)
+        — slot assignment and tick boundaries leave no trace."""
+        eng = SDESampleEngine(engine_term(), jnp.ones(3), SDESampleConfig(slots=4))
+        rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6, seed=7)
+        done = eng.run()
+        keys = jnp.stack(
+            [jax.random.fold_in(jax.random.PRNGKey(7), i) for i in range(6)]
+        )
+        # dtype pinned to the engine's (the suite runs with x64 enabled, so
+        # inference would otherwise draw float64 increments — different bits)
+        ref = sdeint(engine_term(), "ees25", 0.0, 1.0, 8, jnp.ones(3), None,
+                     batch_keys=keys, dtype=jnp.float32)
+        np.testing.assert_array_equal(done[rid].y_final,
+                                      np.asarray(ref.y_final))
+
+    def test_slot_count_does_not_change_samples(self):
+        outs = []
+        for slots in (2, 16):
+            eng = SDESampleEngine(engine_term(), jnp.ones(3),
+                                  SDESampleConfig(slots=slots))
+            rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=5, seed=3)
+            outs.append(eng.run()[rid].y_final)
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_compiles_once_per_signature(self):
+        eng = SDESampleEngine(engine_term(), jnp.ones(3), SDESampleConfig(slots=2))
+        for _ in range(3):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=3)
+        eng.submit("ees25", t1=2.0, n_steps=8, n_paths=1)  # new horizon
+        eng.run()
+        assert len(eng._compiled) == 2
+
+    def test_idle_engine_reports_idle(self):
+        eng = SDESampleEngine(engine_term(), jnp.ones(3))
+        assert eng.tick() is False
+        assert eng.run() == {}
+
+    def test_bad_requests_rejected_at_submit(self):
+        """Bad specs fail at submit(), not at the queue head where they would
+        block every request behind them."""
+        eng = SDESampleEngine(engine_term(), jnp.ones(3))
+        with pytest.raises(KeyError, match="unknown solver"):
+            eng.submit("ees2", t1=1.0, n_steps=8, n_paths=1)
+        with pytest.raises(ValueError, match="save_every"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=1, save_every=3)
+        with pytest.raises(ValueError, match="n_paths"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=0)
+        with pytest.raises(ValueError, match="manifold"):
+            eng.submit("geo-em", t1=1.0, n_steps=8, n_paths=1)
+        with pytest.raises(ValueError, match="save_every"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=1, save_every=4.7)
+        assert not eng.queue  # nothing poisoned the queue
+
+    def test_equivalent_spellings_share_signature_and_executable(self):
+        eng = SDESampleEngine(engine_term(), jnp.ones(3), SDESampleConfig(slots=4))
+        a = eng.submit("reversible_heun", t1=1.0, n_steps=8, n_paths=2, seed=0)
+        b = eng.submit("Reversible-Heun", t1=1.0, n_steps=8, n_paths=2, seed=0)
+        done = eng.run()
+        assert len(eng._compiled) == 1  # one canonical signature
+        np.testing.assert_array_equal(done[a].y_final, done[b].y_final)
+
+    def test_exhausted_max_ticks_raises(self):
+        eng = SDESampleEngine(engine_term(), jnp.ones(3), SDESampleConfig(slots=1))
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=3)
+        with pytest.raises(RuntimeError, match="max_ticks"):
+            eng.run(max_ticks=2)
