@@ -3,17 +3,24 @@
 Public surface:
   tableaux   — Butcher tableaux (EES(2,5;x), EES(2,7), classical RK)
   williamson — Williamson 2N coefficients + Bazavov conditions
-  brownian   — counter-based reconstructible Brownian paths
+  brownian   — counter-based Brownian drivers (fixed grid + Virtual Brownian Tree)
   solvers    — Euclidean SDE solvers (EES Butcher/2N, Reversible Heun, MCF)
   adjoint    — Full / Recursive / Reversible adjoints (Algorithms 1 & 2)
-  registry   — string-keyed solver registry ("ees25", "ees25:x=0.3", ...)
+  adaptive   — PI-controlled accept/reject stepping + save_at dense output
+  registry   — string-keyed solver registry ("ees25", "ees25:adaptive", ...)
   sdeint     — batched Monte-Carlo integration (vmap/shard_map fan-out)
   lie        — groups & homogeneous spaces (Torus, SO(3)/SO(n), S^{n-1}, products)
   cfees      — CF-EES and geometric baselines (GeoEM, CG2, RKMK2)
   stability  — linear & mean-square stability analysis
 """
+from .adaptive import AdaptiveResult, integrate_adaptive, integrate_fixed
 from .adjoint import SolveResult, solve
-from .brownian import BrownianPath, brownian_path
+from .brownian import (
+    BrownianPath,
+    VirtualBrownianTree,
+    brownian_path,
+    virtual_brownian_tree,
+)
 from .registry import (
     canonical_spec,
     get_solver,
@@ -65,6 +72,11 @@ __all__ = [
     "solver_kind",
     "BrownianPath",
     "brownian_path",
+    "VirtualBrownianTree",
+    "virtual_brownian_tree",
+    "AdaptiveResult",
+    "integrate_adaptive",
+    "integrate_fixed",
     "SDETerm",
     "ButcherSolver",
     "LowStorageSolver",

@@ -1,103 +1,312 @@
-"""Embedded error estimation + adaptive stepping for EES schemes.
+"""Adaptive (accept/reject) SDE stepping over arbitrary-time Brownian drivers.
 
-Appendix D: the 2N recurrences admit a *three-register* low-storage variant
-with a first-order embedded estimator — store the final internal stage
-(at c_s, e.g. c_3 = 5/6 for EES(2,5;1/10)) and advance it over the remaining
-fraction of the step with a single Euler update re-using the already-computed
-stage evaluation:
+The embedded estimator is Appendix D of the paper: the 2N recurrences admit a
+three-register variant with a first-order companion — store the final internal
+stage and advance it over the remaining fraction of the step with one Euler
+update re-using the already-computed stage evaluation (no extra vector-field
+evaluations).  Each solver exposes it as ``step_with_error`` (see
+:class:`~repro.core.solvers.LowStorageSolver` /
+:class:`~repro.core.solvers.ButcherSolver`).
 
-    y_low = Y_{s-1} + (1 - c_s) * K_s,        err = y_{n+1} - y_low.
+:func:`integrate_adaptive` drives that estimator with a PI step-size
+controller (Gustafsson) over any driver implementing the
+:class:`~repro.core.brownian.BrownianDriver` protocol.  Rejected steps
+re-query the driver over a *smaller* interval, which is exactly what the
+:class:`~repro.core.brownian.VirtualBrownianTree` makes consistent: every
+query resolves against one fixed underlying path, so accept/reject decisions
+never perturb the Brownian motion being integrated.
 
-No extra vector-field evaluations.  As the paper's Limitations section notes,
-step *rejection* requires restoring the previous state (a 3S* register), which
-is incompatible with the two-register reversible implementation — so adaptive
-stepping here is a forward-only integration mode (use the fixed-grid solver
-for reversible-adjoint training).
+Dense output: ``save_at=ts`` records the solution on an arbitrary time grid,
+linearly interpolated between accepted steps (first-order dense output —
+matched to the schemes' strong order for Brownian driving).
+
+As the paper's Limitations section notes, step rejection requires restoring
+the previous state (a 3S* register), which is incompatible with the
+two-register reversible implementation — so the reversible adjoint stays
+fixed-grid; :func:`repro.core.sdeint.sdeint` raises on the combination.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .solvers import SDETerm, tree_axpy, tree_scale, tree_zeros_like
+from .solvers import tree_sub
 from .williamson import LowStorage
 
-__all__ = ["step_with_error", "integrate_adaptive", "AdaptiveResult"]
+__all__ = ["step_with_error", "integrate_adaptive", "integrate_fixed",
+           "AdaptiveResult"]
+
+_ERR_FLOOR = 1e-10
 
 
-def step_with_error(ls: LowStorage, term: SDETerm, y, t, h, dW, args):
-    """One 2N step returning (y_next, embedded error pytree)."""
-    delta = tree_zeros_like(y)
-    y_prev = y
-    k_last = None
-    for l in range(ls.stages):
-        k = term.increment(t + ls.c[l] * h, y, args, h, dW)
-        delta = tree_axpy(ls.A[l], delta, k)
-        y_prev = y
-        k_last = k
-        y = tree_axpy(ls.B[l], delta, y)
-    c_last = ls.c[ls.stages - 1]
-    y_low = tree_axpy(1.0 - c_last, k_last, y_prev)
-    err = jax.tree_util.tree_map(jnp.subtract, y, y_low)
-    return y, err
+def step_with_error(ls: LowStorage, term, y, t, h, dW, args):
+    """One 2N step from raw coefficients, returning (y_next, embedded error).
+
+    Convenience wrapper over :meth:`LowStorageSolver.step_with_error`, for
+    callers holding a bare :class:`~repro.core.williamson.LowStorage`
+    (analysis scripts, tests).
+    """
+    from .solvers import LowStorageSolver
+
+    return LowStorageSolver(ls).step_with_error(term, y, t, h, dW, args)
 
 
 class AdaptiveResult(NamedTuple):
-    y: jnp.ndarray
-    t: jnp.ndarray
+    """Adaptive solve output.  ``y_final``/``ys`` mirror
+    :class:`~repro.core.adjoint.SolveResult`; the rest are controller stats."""
+
+    y_final: Any
+    ys: Any                  # (len(save_at), ...) pytree, or None
+    t_final: jnp.ndarray     # where integration actually stopped (== t1 normally)
+    h_final: jnp.ndarray     # last proposed step size
     n_accepted: jnp.ndarray
     n_rejected: jnp.ndarray
-    h_final: jnp.ndarray
+
+
+def _resolve_solver(solver):
+    if isinstance(solver, str):
+        from .registry import get_solver
+
+        solver = get_solver(solver)
+    if isinstance(solver, LowStorage):
+        from .solvers import LowStorageSolver
+
+        solver = LowStorageSolver(solver)
+    if not hasattr(solver, "step_with_error"):
+        raise ValueError(
+            f"solver {getattr(solver, 'name', solver)!r} has no embedded "
+            "error estimate (step_with_error); adaptive stepping supports "
+            "the EES 2N schemes and multi-stage Butcher-form RK — use a "
+            "fixed grid for reversible_heun / mcf-* solvers"
+        )
+    return solver
+
+
+def _tree_select(pred, a, b):
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
 def integrate_adaptive(
-    ls: LowStorage,
-    term: SDETerm,
+    solver,
+    term,
     y0,
-    t0: float,
-    t1: float,
-    args=None,
+    driver=None,
+    args: Any = None,
     *,
+    t0: Optional[float] = None,
+    t1: Optional[float] = None,
     rtol: float = 1e-4,
     atol: float = 1e-6,
-    h0: float = 1e-2,
+    h0: Optional[float] = None,
     safety: float = 0.9,
-    max_steps: int = 10_000,
-):
-    """ODE-mode adaptive integration (I-controller on the embedded error)."""
+    icoeff: float = 0.7,
+    pcoeff: float = 0.4,
+    max_steps: int = 1024,
+    save_at=None,
+    bounded: bool = True,
+    checkpoint_steps: bool = False,
+) -> AdaptiveResult:
+    """PI-controlled adaptive integration of ``term`` over ``[t0, t1]``.
 
-    def err_norm(err, y):
-        flat_e = jnp.concatenate([e.ravel() for e in jax.tree_util.tree_leaves(err)])
-        flat_y = jnp.concatenate([x.ravel() for x in jax.tree_util.tree_leaves(y)])
-        scale = atol + rtol * jnp.abs(flat_y)
-        return jnp.sqrt(jnp.mean((flat_e / scale) ** 2))
+    Parameters
+    ----------
+    solver:
+        Registry spec string, solver object with ``step_with_error``, or a
+        raw :class:`~repro.core.williamson.LowStorage` coefficient set.
+    driver:
+        A :class:`~repro.core.brownian.BrownianDriver` queryable at arbitrary
+        times — in practice a
+        :class:`~repro.core.brownian.VirtualBrownianTree`.  ``None`` runs in
+        ODE mode (``term.noise`` must be ``"none"``).
+    t0, t1:
+        Integration window; default to the driver's span.
+    rtol, atol:
+        The accept threshold: a step is accepted when the RMS of
+        ``err / (atol + rtol * max(|y|, |y_new|))`` is <= 1.
+    h0:
+        Initial step size (default ``(t1 - t0) / 16``).
+    safety, icoeff, pcoeff:
+        Gustafsson PI controller: on acceptance the next step is scaled by
+        ``safety * err^-(icoeff+pcoeff)/2 * err_prev^(pcoeff/2)`` (clipped to
+        [0.2, 2]); a rejected step retries with the pure-I shrink factor.
+        ``pcoeff=0`` recovers the classical I controller.
+    max_steps:
+        Trial-step budget (accepted + rejected).  With ``bounded=True`` this
+        is also the *compiled* loop length.
+    save_at:
+        Optional array of output times in ``[t0, t1]``; the solution is
+        linearly interpolated between accepted steps onto this grid
+        (``AdaptiveResult.ys`` gains a leading ``len(save_at)`` axis; entries
+        at or before ``t0`` hold ``y0``).
+    bounded:
+        ``True`` (default) runs a fixed-length masked ``lax.scan`` — fully
+        reverse-mode differentiable, so the full/recursive adjoints work.
+        ``False`` uses ``lax.while_loop`` — faster forward-only integration
+        (stops at ``t1`` instead of padding to ``max_steps``) but not
+        reverse-differentiable; use it for sampling and benchmarks.
+    checkpoint_steps:
+        Rematerialise each trial step on the backward pass
+        (``jax.checkpoint``) — the recursive adjoint of the adaptive path.
+        Requires ``bounded=True``.
 
-    order = ls.order  # embedded pair is (order, 1); exponent 1/(order)
-
-    def cond(state):
-        y, t, h, na, nr, i = state
-        return (t < t1) & (i < max_steps)
-
-    def body(state):
-        y, t, h, na, nr, i = state
-        h_eff = jnp.minimum(h, t1 - t)
-        y_new, err = step_with_error(ls, term, y, t, h_eff, None, args)
-        en = err_norm(err, y_new)
-        accept = en <= 1.0
-        factor = jnp.clip(safety * en ** (-1.0 / order), 0.2, 5.0)
-        h_next = h_eff * factor
-        y = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(accept, a, b), y_new, y
+    Example
+    -------
+    >>> vbt = virtual_brownian_tree(key, 0.0, 1.0, shape=(3,))
+    >>> out = integrate_adaptive("ees25", term, y0, vbt, args, rtol=1e-3)
+    >>> out.y_final, int(out.n_accepted), int(out.n_rejected)
+    """
+    solver = _resolve_solver(solver)
+    if t0 is None:
+        t0 = driver.t0 if driver is not None else 0.0
+    if t1 is None:
+        t1 = driver.t1 if driver is not None else 1.0
+    t0, t1 = float(t0), float(t1)
+    if not t1 > t0:
+        raise ValueError(f"need t1 > t0, got t0={t0}, t1={t1}")
+    span = t1 - t0
+    if h0 is None:
+        h0 = span / 16.0
+    has_noise = getattr(term, "noise", "diagonal") != "none"
+    if has_noise and driver is None:
+        raise ValueError(
+            "term has noise but no driver was given; pass a "
+            "VirtualBrownianTree (or set term.noise='none' for ODE mode)"
         )
-        t = jnp.where(accept, t + h_eff, t)
-        return (y, t, h_next, na + accept, nr + (1 - accept), i + 1)
+    if checkpoint_steps and not bounded:
+        raise ValueError("checkpoint_steps requires bounded=True")
 
-    y, t, h, na, nr, _ = jax.lax.while_loop(
-        cond,
-        body,
-        (y0, jnp.asarray(t0, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32),
-         jnp.asarray(h0), jnp.asarray(0), jnp.asarray(0), jnp.asarray(0)),
-    )
-    return AdaptiveResult(y=y, t=t, n_accepted=na, n_rejected=nr, h_final=h)
+    tdt = jnp.result_type(float)
+    eps_end = 1e-9 * span
+    h_floor = 1e-7 * span
+    k_exp = 2.0  # embedded pair is (order, 1): exponent 1/(q+1) with q = 1
+
+    if save_at is not None:
+        save_ts = jnp.asarray(save_at, tdt)
+        if save_ts.ndim != 1:
+            raise ValueError(f"save_at must be 1-D, got shape {save_ts.shape}")
+
+    def err_norm(err, y_old, y_new):
+        parts = []
+        for e, a, b in zip(jax.tree_util.tree_leaves(err),
+                           jax.tree_util.tree_leaves(y_old),
+                           jax.tree_util.tree_leaves(y_new)):
+            sc = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+            parts.append(((e / sc) ** 2).ravel())
+        ms = jnp.mean(jnp.concatenate(parts))
+        # Clamp inside the sqrt: the masked no-op trials after t reaches t1
+        # run with h_eff == 0 and err == 0, and d(sqrt)/dx at 0 is inf —
+        # which would leak NaN through the lax.scan select despite the
+        # branch being discarded (0 * inf).
+        return jnp.sqrt(jnp.maximum(ms, _ERR_FLOOR * _ERR_FLOOR))
+
+    def fill_saves(ys_out, accept, t_old, t_new, y_old, y_new):
+        frac = (save_ts - t_old) / jnp.maximum(t_new - t_old, h_floor)
+        mask = (save_ts > t_old) & (save_ts <= t_new + eps_end) & accept
+
+        def leaf(out, a, b):
+            f = jnp.clip(frac, 0.0, 1.0).reshape((-1,) + (1,) * a.ndim)
+            m = mask.reshape((-1,) + (1,) * a.ndim)
+            return jnp.where(m, a + f.astype(a.dtype) * (b - a), out)
+
+        return jax.tree_util.tree_map(leaf, ys_out, y_old, y_new)
+
+    def trial(carry):
+        y, t, h, w, en_prev, na, nr, ys_out = carry
+        h_eff = jnp.minimum(h, t1 - t)
+        if has_noise:
+            w_prop = driver.weval(t + h_eff)
+            dW = tree_sub(w_prop, w)
+        else:
+            w_prop, dW = w, None
+        y_new, err = solver.step_with_error(term, y, t, h_eff, dW, args)
+        # Detach the controller: the step-size sequence is treated as data,
+        # so gradients are those of the discrete scheme on the realized grid.
+        # Differentiating *through* the controller compounds pow-rule factors
+        # (and the Brownian tree's rough time-interpolation) across steps
+        # into astronomically ill-conditioned cotangents.
+        en = jax.lax.stop_gradient(err_norm(err, y, y_new))
+        accept = en <= 1.0
+        grow = safety * en ** (-(icoeff + pcoeff) / k_exp) \
+            * jnp.maximum(en_prev, _ERR_FLOOR) ** (pcoeff / k_exp)
+        shrink = safety * en ** (-1.0 / k_exp)
+        factor = jnp.where(accept, jnp.clip(grow, 0.2, 2.0),
+                           jnp.clip(shrink, 0.1, 1.0))
+        h_next = jnp.maximum(h_eff * factor, h_floor)
+        if save_at is not None:
+            ys_out = fill_saves(ys_out, accept, t, t + h_eff, y, y_new)
+        y = _tree_select(accept, y_new, y)
+        w = _tree_select(accept, w_prop, w)
+        t = jnp.where(accept, t + h_eff, t)
+        en_prev = jnp.where(accept, en, en_prev)
+        return (y, t, h_next, w, en_prev,
+                na + accept.astype(jnp.int32), nr + (~accept).astype(jnp.int32),
+                ys_out)
+
+    w0 = driver.weval(t0) if has_noise else 0.0  # exact zeros for a VBT
+    ys0 = None
+    if save_at is not None:
+        ys0 = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (save_ts.shape[0],) + jnp.shape(l)), y0
+        )
+    init = (y0, jnp.asarray(t0, tdt), jnp.asarray(h0, tdt), w0,
+            jnp.asarray(1.0, tdt), jnp.int32(0), jnp.int32(0), ys0)
+
+    def not_done(carry):
+        return (t1 - carry[1]) > eps_end
+
+    if bounded:
+        step = jax.checkpoint(trial) if checkpoint_steps else trial
+
+        def body(carry, _):
+            return _tree_select(not_done(carry), step(carry), carry), None
+
+        final, _ = jax.lax.scan(body, init, None, length=max_steps)
+    else:
+        def cond(carry):
+            return not_done(carry) & (carry[5] + carry[6] < max_steps)
+
+        final = jax.lax.while_loop(cond, trial, init)
+
+    y, t, h, _, _, na, nr, ys_out = final
+    return AdaptiveResult(y_final=y, ys=ys_out, t_final=t, h_final=h,
+                          n_accepted=na, n_rejected=nr)
+
+
+def integrate_fixed(solver, term, y0, driver=None, n_steps: int = 64,
+                    args: Any = None, *, t0: Optional[float] = None,
+                    t1: Optional[float] = None):
+    """Fixed-grid solve drawing increments from ``driver`` (matched-path runs).
+
+    Integrates with ``n_steps`` uniform steps, each increment queried via
+    ``driver.increment_over`` — so a fixed-grid solve and an adaptive solve
+    over the *same* :class:`~repro.core.brownian.VirtualBrownianTree` see the
+    same underlying Brownian path, which is what strong-error comparisons
+    require.  ``driver=None`` runs in ODE mode (``term.noise`` must be
+    ``"none"``; ``t0``/``t1`` default to 0/1).  Returns the final state only
+    (use :func:`repro.core.sdeint.sdeint` for saved trajectories on a fixed
+    grid).
+    """
+    solver = _resolve_solver(solver)
+    if t0 is None:
+        t0 = driver.t0 if driver is not None else 0.0
+    if t1 is None:
+        t1 = driver.t1 if driver is not None else 1.0
+    t0, t1 = float(t0), float(t1)
+    h = (t1 - t0) / n_steps
+    has_noise = getattr(term, "noise", "diagonal") != "none"
+    if has_noise and driver is None:
+        raise ValueError(
+            "term has noise but no driver was given; pass a Brownian driver "
+            "(or set term.noise='none' for ODE mode)"
+        )
+    state0 = solver.init(term, t0, y0, args)
+
+    def one(state, n):
+        t = t0 + n * h
+        dW = driver.increment_over(t, t + h) if has_noise else None
+        return solver.step(term, state, t, h, dW, args), None
+
+    state, _ = jax.lax.scan(one, state0, jnp.arange(n_steps))
+    return solver.extract(state)

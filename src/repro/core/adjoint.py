@@ -209,15 +209,45 @@ def solve(
 ) -> SolveResult:
     """Integrate ``term`` over the Brownian grid of ``bm`` with ``solver``.
 
+    Parameters
+    ----------
+    solver:
+        A solver *object* (``init`` / ``step`` / ``reverse`` / ``extract``)
+        — resolve spec strings first with
+        :func:`~repro.core.registry.get_solver`, or use
+        :func:`~repro.core.sdeint.sdeint`, which owns that plumbing.
+    term:
+        :class:`~repro.core.solvers.SDETerm` (or a manifold term for CF-EES
+        solvers).
+    y0:
+        Initial state pytree.
+    bm:
+        A fixed-grid :class:`~repro.core.brownian.BrownianPath`; its
+        ``n_steps`` / span define the integration grid.
+    args:
+        Passed to the drift/diffusion callables.
     adjoint:
       * ``"full"``       — O(n) memory, exact discrete gradients.
       * ``"recursive"``  — remat at ``remat_chunk`` granularity (default
         ~sqrt(segment)), O(sqrt n) memory.
       * ``"reversible"`` — O(1) memory via reverse reconstruction.
+    save_every:
+        Saves ``extract(state)`` every that many steps (must divide
+        ``n_steps``); the saved trajectory participates in autodiff under
+        every adjoint mode.
 
-    ``save_every`` saves ``extract(state)`` every that many steps (must divide
-    ``n_steps``); the saved trajectory participates in autodiff under every
-    adjoint mode.
+    Returns
+    -------
+    :class:`SolveResult` — ``y_final`` (state at ``t1``) and ``ys`` (the
+    ``(n_steps/save_every, ...)`` saved trajectory, or ``None``).
+
+    Example
+    -------
+    >>> bm = brownian_path(key, 0.0, 1.0, 1000, shape=(4,))
+    >>> out = solve(get_solver("ees25"), term, jnp.ones(4), bm, params,
+    ...             adjoint="reversible")
+    >>> out.y_final.shape
+    (4,)
     """
     if adjoint == "full":
         return _solve_scan(solver, term, y0, bm, args, save_every, None)

@@ -1,25 +1,61 @@
-"""Counter-based Brownian motion for reversible solvers.
+"""Counter-based Brownian drivers: fixed-grid paths and the Virtual Brownian Tree.
 
-Reversible adjoints must regenerate the *same* Brownian increment ``dW_n``
-during the backward reconstruction sweep without storing the path.  We use a
-counter-based construction (the fixed-grid analogue of a virtual Brownian
-tree): the increment over step ``n`` is a deterministic function of
-``fold_in(key, n)``, so any increment is recomputable in O(1) memory and O(1)
-time, in any order, on-device.
+Two constructions share one driver protocol (see :class:`BrownianDriver`):
+
+* :class:`BrownianPath` — fixed grid.  The increment over step ``n`` is a
+  deterministic function of ``fold_in(key, n)``, so any increment is
+  recomputable in O(1) memory and O(1) time, in any order, on-device.  This is
+  what the reversible adjoint's backward reconstruction sweep consumes.
+* :class:`VirtualBrownianTree` — arbitrary query times.  The Brownian-bridge
+  binary tree of Kidger et al., *Efficient and Accurate Gradients for Neural
+  SDEs* (2021): ``W(t)`` for any ``t`` in ``[t0, t1]`` is resolved by
+  descending a dyadic interval tree, sampling each midpoint from a bridge
+  whose key is ``fold_in(key, node_index)``.  Every query is a pure function
+  of ``(key, t)`` — bitwise-reproducible across calls, vmap lanes, and
+  devices — in O(depth) time and O(1) memory, with no stored path.  This is
+  what adaptive (accept/reject) stepping consumes: a rejected step re-queries
+  a *smaller* interval and stays consistent with the same underlying path.
+
+Both drivers accept a *pytree of shapes* (e.g. ``((N,), (N,))`` for a
+product-group state); increments then form the matching pytree, each leaf
+drawn from an independent stream.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+import math
+from typing import Any, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["BrownianPath", "brownian_path"]
+__all__ = [
+    "BrownianDriver",
+    "BrownianPath",
+    "brownian_path",
+    "VirtualBrownianTree",
+    "virtual_brownian_tree",
+]
 
 
 def _is_simple_shape(x) -> bool:
     return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+
+@runtime_checkable
+class BrownianDriver(Protocol):
+    """What a Brownian driver must provide: increments over time intervals.
+
+    ``increment_over(s, t)`` returns ``W(t) - W(s)`` as a pytree matching the
+    driver's ``shape``.  Fixed-grid drivers additionally expose the grid
+    (``n_steps`` / ``t_of`` / ``increment``); the Virtual Brownian Tree
+    additionally exposes point evaluation ``weval(t)``.
+    """
+
+    t0: float
+    t1: float
+
+    def increment_over(self, s, t): ...
 
 
 @jax.tree_util.register_pytree_node_class
@@ -72,6 +108,29 @@ class BrownianPath:
         outs = [scale * jax.random.normal(k, s, self.dtype) for k, s in zip(keys, leaves)]
         return jax.tree_util.tree_unflatten(treedef, outs)
 
+    def increment_over(self, s, t):
+        """W(t) - W(s) for *grid-aligned* s < t (driver-protocol entry point).
+
+        ``s`` and ``t`` are rounded to the nearest grid node; the increment is
+        the sum of the per-step increments in between (O(n1 - n0) — the
+        fixed-grid driver is built for step-indexed access; use
+        :class:`VirtualBrownianTree` for arbitrary-time queries in O(depth)).
+        """
+        n0 = jnp.round((s - self.t0) / self.h).astype(jnp.int32)
+        n1 = jnp.round((t - self.t0) / self.h).astype(jnp.int32)
+
+        def add(n, acc):
+            return jax.tree_util.tree_map(jnp.add, acc, self.increment(n))
+
+        if _is_simple_shape(self.shape):
+            zero = jnp.zeros(self.shape, self.dtype)
+        else:
+            zero = jax.tree_util.tree_map(
+                lambda sh: jnp.zeros(sh, self.dtype), self.shape,
+                is_leaf=_is_simple_shape,
+            )
+        return jax.lax.fori_loop(n0, n1, add, zero)
+
     def path(self) -> jax.Array:
         """Cumulative path W_{t_n}, shape (n_steps+1, *shape) — for analysis only."""
         incs = jax.vmap(self.increment)(jnp.arange(self.n_steps))
@@ -82,6 +141,119 @@ class BrownianPath:
 
 
 def brownian_path(key, t0, t1, n_steps, shape=(), dtype=jnp.float32) -> BrownianPath:
+    """Build a :class:`BrownianPath` (casts ``shape`` lists to tuples)."""
     if isinstance(shape, list):
         shape = tuple(shape)
     return BrownianPath(key, float(t0), float(t1), int(n_steps), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Virtual Brownian Tree.
+# ---------------------------------------------------------------------------
+
+# 2*node+1 must stay inside int32 for fold_in: node < 2^(depth+1).
+_MAX_DEPTH = 28
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class VirtualBrownianTree:
+    """Brownian motion queryable at arbitrary ``t`` in O(1) memory.
+
+    ``weval(t)`` descends ``depth`` levels of a dyadic bisection of
+    ``[t0, t1]``; the bridge sample at each visited midpoint is drawn from
+    ``fold_in(key, node)`` where ``node`` is the midpoint's heap index (root
+    = 1, children ``2n`` / ``2n+1``), so the value at any ``t`` is a pure
+    function of ``(key, t)``: re-queries, vmap lanes, and other devices all
+    see identical bits.  Below the leaf resolution ``(t1-t0) * 2^-depth``
+    (chosen from ``tol``) the path is completed by the bridge conditional
+    mean — linear interpolation between the leaf endpoints — so queries are
+    exact on the dyadic grid and accurate to ``tol`` in between.
+
+    Increments telescope to floating-point rounding: ``increment_over(s, u)
+    == increment_over(s, m) + increment_over(m, u)`` because all three resolve
+    point values from the same tree, which is what makes accept/reject
+    stepping (query a smaller interval after a rejection) consistent with one
+    fixed underlying path.
+    """
+
+    key: jax.Array
+    t0: float
+    t1: float
+    shape: Tuple[int, ...] = ()
+    dtype: Any = jnp.float32
+    tol: float = 2.0 ** -12
+
+    # -- pytree plumbing (key is a leaf; the rest is static) ----------------
+    def tree_flatten(self):
+        return (self.key,), (self.t0, self.t1, self.shape, self.dtype, self.tol)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (key,) = children
+        t0, t1, shape, dtype, tol = aux
+        return cls(key, t0, t1, shape, dtype, tol)
+
+    @property
+    def depth(self) -> int:
+        span = self.t1 - self.t0
+        return max(1, min(_MAX_DEPTH, int(math.ceil(math.log2(span / self.tol)))))
+
+    def _leaf_eval(self, key, shape, t):
+        """W(t) for one pytree leaf, from that leaf's independent key."""
+        span = self.t1 - self.t0
+        tdt = jnp.result_type(float)  # f64 when enabled: dyadic midpoints stay exact
+        tau = jnp.clip((jnp.asarray(t, tdt) - self.t0) / span, 0.0, 1.0)
+        w_end = jnp.sqrt(jnp.asarray(span, self.dtype)) * jax.random.normal(
+            jax.random.fold_in(key, 0), shape, self.dtype
+        )
+
+        def descend(carry, _):
+            s, u, ws, wu, node = carry
+            m = 0.5 * (s + u)
+            std = jnp.sqrt(jnp.asarray(0.25 * span, self.dtype)
+                           * (u - s).astype(self.dtype))
+            wm = 0.5 * (ws + wu) + std * jax.random.normal(
+                jax.random.fold_in(key, node), shape, self.dtype
+            )
+            right = tau > m
+            s2 = jnp.where(right, m, s)
+            u2 = jnp.where(right, u, m)
+            ws2 = jnp.where(right, wm, ws)
+            wu2 = jnp.where(right, wu, wm)
+            node2 = 2 * node + right.astype(jnp.int32)
+            return (s2, u2, ws2, wu2, node2), None
+
+        init = (jnp.asarray(0.0, tdt), jnp.asarray(1.0, tdt),
+                jnp.zeros(shape, self.dtype), w_end, jnp.int32(1))
+        (s, u, ws, wu, _), _ = jax.lax.scan(descend, init, None, length=self.depth)
+        frac = ((tau - s) / (u - s)).astype(self.dtype)
+        return ws + frac * (wu - ws)
+
+    def weval(self, t):
+        """W(t) - W(t0) as a pytree matching ``shape`` (``W(t0) == 0``)."""
+        if _is_simple_shape(self.shape):
+            return self._leaf_eval(self.key, self.shape, t)
+        leaves, treedef = jax.tree_util.tree_flatten(self.shape, is_leaf=_is_simple_shape)
+        keys = jax.random.split(self.key, len(leaves))
+        outs = [self._leaf_eval(k, s, t) for k, s in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def increment_over(self, s, t):
+        """W(t) - W(s) for arbitrary ``t0 <= s <= t <= t1`` (two tree descents)."""
+        ws, wt = self.weval(s), self.weval(t)
+        return jax.tree_util.tree_map(jnp.subtract, wt, ws)
+
+
+def virtual_brownian_tree(key, t0, t1, shape=(), dtype=jnp.float32,
+                          tol=None) -> VirtualBrownianTree:
+    """Build a :class:`VirtualBrownianTree` over ``[t0, t1]``.
+
+    ``tol`` is the leaf resolution in time units (default ``(t1-t0)/4096``);
+    queries less than ``tol`` apart share bridge samples and interpolate.
+    """
+    if isinstance(shape, list):
+        shape = tuple(shape)
+    if tol is None:
+        tol = (float(t1) - float(t0)) * 2.0 ** -12
+    return VirtualBrownianTree(key, float(t0), float(t1), shape, dtype, float(tol))

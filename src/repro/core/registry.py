@@ -15,9 +15,15 @@ constructing solver objects by hand::
 A spec is ``name`` or ``name:key=val,key=val`` — the kwargs are passed to the
 registered factory, so any tunable of the underlying solver (the EES family
 parameter ``x``, the MCF contraction ``lam``, the fused-kernel toggle
-``use_kernel``) is reachable from a plain string.  ``get_solver`` is
-idempotent on non-strings: passing an already-constructed solver object
-returns it unchanged, so APIs can accept either form.
+``use_kernel``) is reachable from a plain string.  A bare word in the kwarg
+tail is a boolean flag (``"ees25:adaptive"`` == ``"ees25:adaptive=True"``).
+``get_solver`` is idempotent on non-strings: passing an already-constructed
+solver object returns it unchanged, so APIs can accept either form.
+
+``adaptive`` is a *mode flag*, not a factory kwarg: ``get_solver`` strips it
+and marks the returned solver (``solver.adaptive == True``), which
+:func:`repro.core.sdeint.sdeint` reads to route the solve through
+:func:`repro.core.adaptive.integrate_adaptive` instead of the fixed grid.
 """
 from __future__ import annotations
 
@@ -57,7 +63,13 @@ def register_solver(name: str, factory: Optional[Callable[..., Any]] = None,
 
 
 def list_solvers(kind: Optional[str] = None) -> Tuple[str, ...]:
-    """Registered solver names (optionally filtered by kind), sorted."""
+    """Registered solver names, sorted.
+
+    ``kind`` filters to ``"euclidean"`` or ``"manifold"`` entries.
+
+    >>> "ees25" in list_solvers(kind="euclidean")
+    True
+    """
     return tuple(sorted(
         n for n, (_, k) in _REGISTRY.items() if kind is None or k == kind
     ))
@@ -75,7 +87,15 @@ def _parse_value(text: str):
 
 
 def parse_solver_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
-    """Split ``"name:k=v,k2=v2"`` into ``(name, kwargs)``."""
+    """Split ``"name:k=v,k2=v2"`` into ``(name, kwargs)``.
+
+    A bare identifier in the tail is a boolean flag: ``"ees25:adaptive"``
+    parses to ``("ees25", {"adaptive": True})``.  Anything else without an
+    ``=`` (e.g. a stray number) is malformed.
+
+    >>> parse_solver_spec("MCF-RK4: lam=0.99")
+    ('mcf-rk4', {'lam': 0.99})
+    """
     name, _, tail = spec.partition(":")
     kwargs: Dict[str, Any] = {}
     if tail:
@@ -84,8 +104,12 @@ def parse_solver_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
             if not item:
                 continue
             if "=" not in item:
+                if item.isidentifier():
+                    kwargs[item] = True  # bare flag, e.g. "ees25:adaptive"
+                    continue
                 raise ValueError(
-                    f"malformed solver spec {spec!r}: expected key=value, got {item!r}"
+                    f"malformed solver spec {spec!r}: expected key=value or a "
+                    f"bare flag, got {item!r}"
                 )
             k, _, v = item.partition("=")
             kwargs[k.strip()] = _parse_value(v.strip())
@@ -106,6 +130,12 @@ def canonical_spec(spec: str) -> str:
 
     Equivalent spellings (``"reversible_heun"`` / ``"Reversible-Heun"``,
     kwarg order) map to one string, so caches keyed on specs don't split.
+    Raises ``KeyError`` for unregistered names.
+
+    >>> canonical_spec("Reversible_Heun")
+    'reversible-heun'
+    >>> canonical_spec("ees25: adaptive, x=0.3")
+    'ees25:adaptive=True,x=0.3'
     """
     name, kwargs = parse_solver_spec(spec)
     _lookup(name)
@@ -123,9 +153,28 @@ def solver_kind(spec: str) -> str:
 def get_solver(spec, **overrides):
     """Resolve a solver spec string (or pass a solver object through).
 
-    ``overrides`` take precedence over kwargs parsed from the spec, so
-    programmatic callers can pin e.g. ``use_kernel=True`` regardless of what
-    the config string says.
+    Parameters
+    ----------
+    spec:
+        Registry spec string (``"ees25"``, ``"ees25:x=0.3"``,
+        ``"ees25:adaptive"``, ``"mcf-rk4:lam=0.99"``) or an
+        already-constructed solver object (returned unchanged).
+    overrides:
+        Take precedence over kwargs parsed from the spec, so programmatic
+        callers can pin e.g. ``use_kernel=True`` regardless of what the
+        config string says.
+
+    Returns
+    -------
+    A solver object (``init`` / ``step`` / ``reverse`` / ``extract``).  The
+    ``adaptive`` flag is not passed to the factory; it marks the returned
+    object (``solver.adaptive = True``) so :func:`repro.core.sdeint.sdeint`
+    routes the solve through the adaptive stepper.
+
+    Example
+    -------
+    >>> get_solver("ees25:x=0.3").ls.name
+    'EES(2,5;0.3)-2N'
     """
     if not isinstance(spec, str):
         if overrides:
@@ -137,7 +186,16 @@ def get_solver(spec, **overrides):
     name, kwargs = parse_solver_spec(spec)
     factory, _ = _lookup(name)
     kwargs.update(overrides)
-    return factory(**kwargs)
+    adaptive = bool(kwargs.pop("adaptive", False))
+    solver = factory(**kwargs)
+    if adaptive:
+        try:
+            solver.adaptive = True
+        except AttributeError:
+            raise ValueError(
+                f"solver {name!r} does not support the adaptive flag"
+            ) from None
+    return solver
 
 
 # ---------------------------------------------------------------------------

@@ -1,17 +1,20 @@
 """Batched Monte-Carlo SDE integration: one call, many trajectories, any device.
 
 ``sdeint`` is the single entry point above the solver layer.  It owns the
-plumbing every caller used to hand-roll — Brownian-path construction, solver
+plumbing every caller used to hand-roll — Brownian-driver construction, solver
 resolution by registry name, ``jax.vmap`` fan-out over per-trajectory PRNG
 keys, and (optionally) ``shard_map`` fan-out over a device-mesh axis — while
-delegating the actual integration to :func:`repro.core.adjoint.solve`, so all
-three adjoints (full / recursive / reversible) work unchanged, batched or not.
+delegating the actual integration to :func:`repro.core.adjoint.solve` (fixed
+grid) or :func:`repro.core.adaptive.integrate_adaptive` (tolerance-driven
+steps on a :class:`~repro.core.brownian.VirtualBrownianTree`, selected by
+``adaptive=True`` or an ``"ees25:adaptive"``-style spec).
 
 Batching is *by key*: each trajectory draws its own counter-based Brownian
-path from its own key, so the batched result is bitwise identical to a Python
-loop of single-trajectory ``solve`` calls over the same keys (tested).  That
-property is what lets serving slice a request's paths across engine ticks, or
-a benchmark compare batch sizes, without changing a single sample.
+driver from its own key, so the batched result is bitwise identical to a
+Python loop of single-trajectory calls over the same keys (tested, for both
+the fixed-grid and the adaptive path).  That property is what lets serving
+slice a request's paths across engine ticks, or a benchmark compare batch
+sizes, without changing a single sample.
 """
 from __future__ import annotations
 
@@ -20,8 +23,9 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from .adaptive import integrate_adaptive
 from .adjoint import SolveResult, solve
-from .brownian import brownian_path
+from .brownian import brownian_path, virtual_brownian_tree
 from .registry import get_solver
 
 __all__ = ["sdeint"]
@@ -75,19 +79,38 @@ def sdeint(
     adjoint: str = "full",
     save_every: Optional[int] = None,
     remat_chunk: Optional[int] = None,
+    adaptive: bool = False,
+    save_at=None,
+    rtol: Optional[float] = None,
+    atol: Optional[float] = None,
+    h0: Optional[float] = None,
+    bm_tol: Optional[float] = None,
+    bounded: bool = True,
     noise_shape=None,
     dtype=None,
     batch_keys: Optional[jax.Array] = None,
     mesh=None,
     mesh_axis: Optional[str] = None,
-) -> SolveResult:
-    """Integrate ``term`` over [t0, t1] in ``n_steps`` fixed steps.
+):
+    """Integrate ``term`` over ``[t0, t1]``, fixed-grid or adaptively.
 
     Parameters
     ----------
+    term:
+        An :class:`~repro.core.solvers.SDETerm` (drift, diffusion, declared
+        noise structure).
     solver:
         A registry spec string (``"ees25"``, ``"ees25:x=0.3"``,
-        ``"reversible_heun"``, ``"mcf-rk4"``, ...) or a solver object.
+        ``"ees25:adaptive"``, ``"reversible_heun"``, ``"mcf-rk4"``, ...) or a
+        solver object.  The ``adaptive`` spec flag is equivalent to passing
+        ``adaptive=True``.
+    t0, t1:
+        Integration window.
+    n_steps:
+        Fixed grid: the number of uniform steps.  Adaptive: the *trial-step
+        budget* (accepted + rejected; also the compiled loop length under the
+        differentiable bounded stepper) — if the controller exhausts it the
+        result stops short of ``t1`` (check ``result.t_final``).
     y0:
         Initial state (pytree).  With ``batch_keys`` it is *shared* across
         trajectories; batch it yourself with an outer ``vmap`` if each
@@ -95,15 +118,51 @@ def sdeint(
     key:
         PRNG key for a single trajectory.  Ignored when ``batch_keys`` is
         given.
+    args:
+        Passed through to the drift/diffusion callables (typically the
+        parameter pytree being trained).
     adjoint:
         ``"full"`` | ``"recursive"`` | ``"reversible"`` — see
-        :func:`repro.core.adjoint.solve`.
+        :func:`repro.core.adjoint.solve`.  ``"reversible"`` requires a fixed
+        grid: step rejection needs a third register to restore the previous
+        state, which the two-register reversible implementation does not have
+        (the paper's Limitations section), so combining it with ``adaptive``
+        raises.
     save_every:
-        Save ``extract(state)`` every that many steps (must divide
-        ``n_steps``); saved states land in ``SolveResult.ys``.
+        Fixed grid only: save ``extract(state)`` every that many steps (must
+        divide ``n_steps``); saved states land in ``result.ys``.
+    remat_chunk:
+        Fixed grid, ``adjoint="recursive"``: checkpoint granularity.
+    adaptive:
+        Integrate with PI-controlled accept/reject steps on a
+        :class:`~repro.core.brownian.VirtualBrownianTree` instead of a fixed
+        grid.  Returns an :class:`~repro.core.adaptive.AdaptiveResult`
+        (``y_final`` / ``ys`` plus controller statistics).
+    save_at:
+        Adaptive only: 1-D array of output times in ``[t0, t1]``; the
+        solution is interpolated between accepted steps onto this grid and
+        returned as ``result.ys`` with a leading ``len(save_at)`` axis.
+    rtol, atol, h0:
+        Adaptive only: tolerances (defaults 1e-4 / 1e-6) and initial step for
+        the controller (see
+        :func:`repro.core.adaptive.integrate_adaptive`).  Setting any of
+        them without ``adaptive`` raises — a tolerance request must not
+        silently run a fixed grid.
+    bm_tol:
+        Adaptive only: leaf resolution of the Virtual Brownian Tree (default
+        ``(t1 - t0) / 4096``).
+    bounded:
+        Adaptive only.  ``True`` (default): fixed-length masked scan —
+        reverse-mode differentiable, but always executes ``n_steps`` trial
+        iterations.  ``False``: ``lax.while_loop`` that stops when every
+        path reaches ``t1`` — faster forward-only sampling (the serving
+        engine uses this), not reverse-differentiable.  Results are bitwise
+        identical between the two modes.
     noise_shape:
         Shape of one Brownian increment.  Defaults to the state's shape for
         diagonal noise; required for ``noise="general"``.
+    dtype:
+        Brownian-increment dtype (defaults to the state's).
     batch_keys:
         ``(B, ...)`` stack of per-trajectory keys.  The result gains a
         leading ``B`` axis on every leaf and is bitwise equal to looping
@@ -113,19 +172,99 @@ def sdeint(
         (multi-device Monte Carlo).  ``mesh`` defaults to the ambient
         ``with mesh:`` context; the axis size must divide ``B``.  Requires
         ``batch_keys``.
+
+    Returns
+    -------
+    :class:`~repro.core.adjoint.SolveResult` ``(y_final, ys)`` on a fixed
+    grid; :class:`~repro.core.adaptive.AdaptiveResult` (same two fields plus
+    ``t_final`` / ``h_final`` / ``n_accepted`` / ``n_rejected``) when
+    adaptive.
+
+    Example
+    -------
+    >>> keys = jax.random.split(jax.random.PRNGKey(0), 1024)
+    >>> r = sdeint(term, "ees25", 0.0, 2.0, 64, y0, None, args=params,
+    ...            adjoint="reversible", batch_keys=keys)   # (1024, ...) outputs
+    >>> ts = jnp.linspace(0.0, 2.0, 33)
+    >>> a = sdeint(term, "ees25:adaptive", 0.0, 2.0, 256, y0, None,
+    ...            args=params, rtol=1e-3, save_at=ts, batch_keys=keys)
+    >>> a.ys  # (1024, 33, ...) dense output on the save_at grid
     """
     solver = get_solver(solver)
+    adaptive = adaptive or getattr(solver, "adaptive", False)
+    if adaptive and adjoint == "reversible":
+        raise ValueError(
+            "adjoint='reversible' requires a fixed grid: step rejection needs "
+            "a third register to restore the previous state, which the "
+            "two-register reversible implementation does not have.  Use "
+            "adjoint='full' or 'recursive' with adaptive=True, or drop "
+            "adaptive for reversible-adjoint training."
+        )
+    if adaptive and adjoint not in ("full", "recursive"):
+        raise ValueError(f"unknown adjoint {adjoint!r}")
+    if adaptive and not bounded and adjoint == "recursive":
+        raise ValueError(
+            "bounded=False (while-loop stepper) is forward-only and cannot "
+            "host the recursive adjoint; use bounded=True for gradients"
+        )
+    if adaptive and save_every is not None:
+        raise ValueError(
+            "save_every indexes a fixed grid; with adaptive=True pass "
+            "save_at=<array of times> instead"
+        )
+    if save_at is not None and not adaptive:
+        raise ValueError(
+            "save_at (arbitrary-time dense output) requires adaptive=True / "
+            "an ':adaptive' solver spec; on a fixed grid use save_every"
+        )
+    if not adaptive:
+        for opt_name, bad in (("rtol", rtol is not None),
+                              ("atol", atol is not None),
+                              ("h0", h0 is not None),
+                              ("bm_tol", bm_tol is not None),
+                              ("bounded", bounded is not True)):
+            if bad:
+                raise ValueError(
+                    f"{opt_name} only applies to adaptive solves; pass "
+                    "adaptive=True or an ':adaptive' solver spec — a "
+                    "tolerance request must not silently run a fixed grid"
+                )
+    elif remat_chunk is not None:
+        raise ValueError(
+            "remat_chunk configures the fixed-grid recursive adjoint; the "
+            "adaptive path checkpoints per trial step (adjoint='recursive') "
+            "instead"
+        )
     if noise_shape is None:
         noise_shape = _infer_noise_shape(term, y0)
     if dtype is None:
         dtype = _infer_dtype(y0)
 
-    def one(k) -> SolveResult:
-        bm = brownian_path(k, t0, t1, n_steps, shape=noise_shape, dtype=dtype)
-        return solve(
-            solver, term, y0, bm, args,
-            adjoint=adjoint, save_every=save_every, remat_chunk=remat_chunk,
-        )
+    if adaptive:
+        tols = {}
+        if rtol is not None:
+            tols["rtol"] = rtol
+        if atol is not None:
+            tols["atol"] = atol
+
+        def one(k):
+            vbt = virtual_brownian_tree(
+                k, t0, t1, shape=noise_shape, dtype=dtype, tol=bm_tol
+            )
+            return integrate_adaptive(
+                solver, term, y0, vbt, args, t0=t0, t1=t1,
+                h0=h0, max_steps=int(n_steps), save_at=save_at,
+                bounded=bounded,
+                checkpoint_steps=(adjoint == "recursive"),
+                **tols,
+            )
+    else:
+        def one(k):
+            bm = brownian_path(k, t0, t1, n_steps, shape=noise_shape, dtype=dtype)
+            return solve(
+                solver, term, y0, bm, args,
+                adjoint=adjoint, save_every=save_every, remat_chunk=remat_chunk,
+            )
 
     if batch_keys is None:
         if mesh_axis is not None or mesh is not None:

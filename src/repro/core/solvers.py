@@ -129,7 +129,8 @@ class ButcherSolver:
     def extract(self, state):
         return state
 
-    def step(self, term, state, t, h, dW, args):
+    def _stages(self, term, state, t, h, dW, args):
+        """Run the stage loop once; return (y_next, stage increments)."""
         tab = self.tab
         y = state
         incrs = []
@@ -143,7 +144,29 @@ class ButcherSolver:
         for i in range(tab.stages):
             if tab.b[i] != 0.0:
                 out = tree_axpy(tab.b[i], incrs[i], out)
-        return out
+        return out, incrs
+
+    def step(self, term, state, t, h, dW, args):
+        return self._stages(term, state, t, h, dW, args)[0]
+
+    def step_with_error(self, term, state, t, h, dW, args):
+        """One step plus an embedded first-order error estimate.
+
+        The low-order companion is the Euler step built from the (already
+        computed) first stage increment, so the estimate costs no extra
+        vector-field evaluations; ``err = y_high - y_euler`` is an O(|dX|^2)
+        local-error proxy (the (p, 1) embedded pair).
+        """
+        if self.tab.stages < 2:
+            raise ValueError(
+                f"{self.name} has a single stage: the high- and low-order "
+                "solutions coincide, so there is no embedded error estimate "
+                "(pick a >=2-stage scheme for adaptive stepping)"
+            )
+        out, incrs = self._stages(term, state, t, h, dW, args)
+        y_low = tree_add(state, incrs[0])
+        err = tree_sub(out, y_low)
+        return out, err
 
     def reverse(self, term, state, t, h, dW, args):
         # Near-reversible reconstruction: the same scheme with negated driver
@@ -188,14 +211,43 @@ class LowStorageSolver:
         y2 = tree_axpy(b, delta2, y)
         return delta2, y2
 
-    def step(self, term, state, t, h, dW, args):
+    def _sweep(self, term, state, t, h, dW, args):
+        """Run the 2N recurrence once; return (y_next, Y_{s-1}, K_s).
+
+        The trailing pair costs nothing in ``step`` (Python references, no
+        extra computation) and is what the embedded estimator consumes.
+        """
         ls = self.ls
         y = state
         delta = tree_zeros_like(y)
+        y_prev = y
+        k = None
         for l in range(ls.stages):
             k = term.increment(t + ls.c[l] * h, y, args, h, dW)
+            y_prev = y
             delta, y = self._update(ls.A[l], ls.B[l], delta, k, y)
-        return y
+        return y, y_prev, k
+
+    def step(self, term, state, t, h, dW, args):
+        return self._sweep(term, state, t, h, dW, args)[0]
+
+    def step_with_error(self, term, state, t, h, dW, args):
+        """One 2N step plus the Appendix-D embedded first-order estimate.
+
+        Store the second-to-last register state ``Y_{s-1}`` and advance it
+        over the remaining fraction of the step with a single Euler update
+        re-using the final stage evaluation::
+
+            y_low = Y_{s-1} + (1 - c_s) * K_s,      err = y_{n+1} - y_low.
+
+        No extra vector-field evaluations (the three-register variant of the
+        paper's Limitations section).
+        """
+        y, y_prev, k_last = self._sweep(term, state, t, h, dW, args)
+        c_last = self.ls.c[self.ls.stages - 1]
+        y_low = tree_axpy(1.0 - c_last, k_last, y_prev)
+        err = tree_sub(y, y_low)
+        return y, err
 
     def reverse(self, term, state, t, h, dW, args):
         return self.step(term, state, t + h, -h, tree_scale(-1.0, dW), args)

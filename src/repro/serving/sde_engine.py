@@ -16,8 +16,12 @@ Two properties make slicing safe:
   request's paths are reproducible offline from its seed alone.
 
 Compiled executables are cached per request *signature* (solver spec,
-horizon, step count, save cadence) — ticks re-use them, so steady-state
-serving never recompiles, exactly like the LM engine's single ``serve_step``.
+horizon, step count, save cadence, adaptive tolerances / output grid) —
+ticks re-use them, so steady-state serving never recompiles, exactly like
+the LM engine's single ``serve_step``.  Adaptive requests (an
+``"ees25:adaptive"``-style spec) integrate on a Virtual Brownian Tree with
+per-path accept/reject stepping — paths in one batch each walk their own
+step sequence under vmap — and remain reproducible offline from the seed.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import canonical_spec, sdeint, solver_kind
+from repro.core import canonical_spec, parse_solver_spec, sdeint, solver_kind
 
 __all__ = ["SDESampleConfig", "SampleRequest", "SampleResult", "SDESampleEngine"]
 
@@ -50,20 +54,34 @@ class SampleRequest:
     n_paths: int
     save_every: Optional[int]
     seed: int
+    # Adaptive-solve options (solver spec carries an "adaptive" flag):
+    # tolerances for the PI controller and an arbitrary-time output grid.
+    rtol: Optional[float] = None
+    atol: Optional[float] = None
+    save_at: Optional[Tuple[float, ...]] = None
 
     @property
     def signature(self) -> Tuple:
         """Requests with equal signatures can share one compiled batch."""
-        return (self.solver, self.t0, self.t1, self.n_steps, self.save_every)
+        return (self.solver, self.t0, self.t1, self.n_steps, self.save_every,
+                self.rtol, self.atol, self.save_at)
 
 
 @dataclasses.dataclass
 class SampleResult:
     """Stacked per-path outputs: ``y_final`` is (n_paths, ...); ``ys`` is
-    (n_paths, n_saves, ...) when the request asked for a saved trajectory."""
+    (n_paths, n_saves, ...) when the request asked for a saved trajectory.
+
+    ``t_final`` (adaptive requests only) is the (n_paths,) time each path
+    actually reached — equal to the request's ``t1`` unless the trial-step
+    budget ``n_steps`` was exhausted first, in which case the path stopped
+    short and its ``y_final`` is NOT a sample at ``t1``.  Check it (or just
+    ``(t_final == t1).all()``) before trusting adaptive results from
+    aggressive tolerance/budget combinations."""
 
     y_final: Any
     ys: Optional[Any]
+    t_final: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
@@ -72,6 +90,7 @@ class _Pending:
     delivered: int = 0
     y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
     ys: List[np.ndarray] = dataclasses.field(default_factory=list)
+    t_final: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 class SDESampleEngine:
@@ -96,7 +115,44 @@ class SDESampleEngine:
 
     def submit(self, solver: str, *, t1: float, n_steps: int, n_paths: int,
                t0: float = 0.0, save_every: Optional[int] = None,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None, rtol: Optional[float] = None,
+               atol: Optional[float] = None, save_at=None) -> int:
+        """Queue a sampling request; returns its request id.
+
+        Parameters
+        ----------
+        solver:
+            Registry spec string — ``"ees25"``, ``"mcf-rk4:lam=0.99"``,
+            ``"ees25:adaptive"``, ...  An ``adaptive`` flag switches the
+            request to tolerance-driven stepping on a Virtual Brownian Tree;
+            ``n_steps`` then bounds trial steps instead of fixing a grid.
+        t0, t1:
+            Integration window (``t1 > t0``).
+        n_steps:
+            Grid size (fixed) or trial-step budget (adaptive).
+        n_paths:
+            Trajectories to sample; large requests are served across ticks.
+        save_every:
+            Fixed grid only: save the state every that many steps (must
+            divide ``n_steps``); results gain a ``(n_paths, n_saves, ...)``
+            ``ys``.
+        seed:
+            Base seed; path ``i`` uses ``fold_in(PRNGKey(seed), i)``, so
+            results are reproducible offline regardless of batching.
+            Defaults to the request id.
+        rtol, atol:
+            Adaptive only: controller tolerances (defaults 1e-4 / 1e-6).
+        save_at:
+            Adaptive only: sequence of output times in ``[t0, t1]`` — dense
+            output interpolated between accepted steps.
+
+        Example
+        -------
+        >>> rid = eng.submit("ees25:adaptive", t1=2.0, n_steps=256,
+        ...                  n_paths=1000, rtol=1e-3, save_at=[0.5, 1.0, 2.0])
+        >>> eng.run()[rid].ys.shape
+        (1000, 3, ...)
+        """
         # Reject bad requests here, not at the queue head where a crash
         # would starve everything queued behind them.
         if n_paths < 1:
@@ -114,6 +170,25 @@ class SDESampleEngine:
                 f"solver {solver!r} is {solver_kind(solver)}-kind but this "
                 f"engine's term needs a {want} solver"
             )
+        adaptive = parse_solver_spec(solver)[1].get("adaptive", False)
+        if not adaptive:
+            for name, val in (("rtol", rtol), ("atol", atol), ("save_at", save_at)):
+                if val is not None:
+                    raise ValueError(
+                        f"{name} only applies to adaptive solves; request an "
+                        f"':adaptive' solver spec (got {solver!r})"
+                    )
+        if adaptive and save_every is not None:
+            raise ValueError(
+                "save_every indexes a fixed grid; adaptive requests take "
+                "save_at=<sequence of times> instead"
+            )
+        if save_at is not None:
+            save_at = tuple(float(t) for t in save_at)
+            if not save_at:
+                raise ValueError("save_at must be a non-empty sequence of times")
+            if not all(float(t0) <= t <= float(t1) for t in save_at):
+                raise ValueError(f"save_at times must lie in [{t0}, {t1}]")
         if save_every is not None:
             if int(save_every) != save_every or int(save_every) < 1:
                 raise ValueError(f"save_every must be a positive int, got {save_every}")
@@ -128,6 +203,9 @@ class SDESampleEngine:
             request_id=rid, solver=solver, t0=float(t0), t1=float(t1),
             n_steps=n_steps, n_paths=int(n_paths),
             save_every=save_every, seed=rid if seed is None else int(seed),
+            rtol=None if rtol is None else float(rtol),
+            atol=None if atol is None else float(atol),
+            save_at=save_at,
         )
         self.queue.append(_Pending(req))
         return rid
@@ -136,14 +214,27 @@ class SDESampleEngine:
 
     def _batch_fn(self, sig: Tuple):
         if sig not in self._compiled:
-            solver, t0, t1, n_steps, save_every = sig
+            solver, t0, t1, n_steps, save_every, rtol, atol, save_at = sig
+            extra = {}
+            if rtol is not None:
+                extra["rtol"] = rtol
+            if atol is not None:
+                extra["atol"] = atol
+            if save_at is not None:
+                extra["save_at"] = jnp.asarray(save_at)
+
+            if parse_solver_spec(solver)[1].get("adaptive", False):
+                # Serving is forward-only: the while-loop stepper stops when
+                # every path reaches t1 instead of padding to the n_steps
+                # budget (bitwise-identical results).
+                extra["bounded"] = False
 
             def batch(keys):
                 return sdeint(
                     self.term, solver, t0, t1, n_steps, self.y0, None,
                     args=self.args, save_every=save_every,
                     noise_shape=self.noise_shape, dtype=self.cfg.dtype,
-                    batch_keys=keys,
+                    batch_keys=keys, **extra,
                 )
 
             self._compiled[sig] = jax.jit(batch)
@@ -177,10 +268,16 @@ class SDESampleEngine:
         result = self._batch_fn(sig)(jnp.stack(keys))
         y_final = np.asarray(result.y_final)
         ys = None if result.ys is None else np.asarray(result.ys)
+        # Adaptive results carry where each path actually stopped; surface it
+        # so budget-exhausted (truncated) paths are detectable by the caller.
+        t_final = getattr(result, "t_final", None)
+        t_final = None if t_final is None else np.asarray(t_final)
         for slot, (pending, _) in enumerate(plan):
             pending.y_final.append(y_final[slot])
             if ys is not None:
                 pending.ys.append(ys[slot])
+            if t_final is not None:
+                pending.t_final.append(t_final[slot])
             pending.delivered += 1
         # Retire fully-served requests, preserving queue order.
         for pending in dict.fromkeys(p for p, _ in plan):
@@ -189,6 +286,8 @@ class SDESampleEngine:
                 self.done[pending.request.request_id] = SampleResult(
                     y_final=np.stack(pending.y_final),
                     ys=np.stack(pending.ys) if pending.ys else None,
+                    t_final=(np.stack(pending.t_final)
+                             if pending.t_final else None),
                 )
         return True
 

@@ -87,23 +87,39 @@ def make_sde_train_step(
     n_paths: int,
     adjoint: str = "reversible",
     save_every: Optional[int] = None,
+    save_at=None,
+    rtol: Optional[float] = None,
+    atol: Optional[float] = None,
     noise_shape=None,
 ):
     """Neural-SDE analogue of ``make_train_step``: one Monte-Carlo batch of
     ``n_paths`` trajectories through ``sdeint``, a loss on the result, one
     optimizer update.
 
-    ``solver`` is a registry spec string (``"ees25"``, ``"mcf-rk4"``, ...) or
-    a solver object; ``y0_fn(params)`` produces the (shared) initial state;
-    ``loss_fn_result(params, result)`` maps the batched
-    :class:`~repro.core.SolveResult` (leading axis ``n_paths``) to a scalar.
-    The returned step is ``(params, opt_state, key) -> (params, opt_state,
-    metrics)`` and is jit-compatible; each path derives its key by
-    ``fold_in``, matching the serving engine's convention.
+    ``solver`` is a registry spec string (``"ees25"``, ``"mcf-rk4"``,
+    ``"ees25:adaptive"``, ...) or a solver object; ``y0_fn(params)`` produces
+    the (shared) initial state; ``loss_fn_result(params, result)`` maps the
+    batched result (leading axis ``n_paths``) to a scalar.  The returned step
+    is ``(params, opt_state, key) -> (params, opt_state, metrics)`` and is
+    jit-compatible; each path derives its key by ``fold_in``, matching the
+    serving engine's convention.
+
+    Adaptive solves (an ``:adaptive`` spec) take ``rtol``/``atol`` and a
+    ``save_at`` output grid, with ``n_steps`` as the trial-step budget; they
+    require ``adjoint="full"`` or ``"recursive"`` — the default
+    ``"reversible"`` adjoint is fixed-grid only (``sdeint`` raises on the
+    combination, per the paper's Limitations section).
     """
     from repro.core import get_solver, sdeint
 
     solver = get_solver(solver)
+    extra = {}
+    if rtol is not None:
+        extra["rtol"] = rtol
+    if atol is not None:
+        extra["atol"] = atol
+    if save_at is not None:
+        extra["save_at"] = jnp.asarray(save_at)
 
     def step(params, opt_state, key):
         def loss(p):
@@ -113,7 +129,7 @@ def make_sde_train_step(
             r = sdeint(
                 term, solver, t0, t1, n_steps, y0_fn(p), None, args=p,
                 adjoint=adjoint, save_every=save_every,
-                noise_shape=noise_shape, batch_keys=keys,
+                noise_shape=noise_shape, batch_keys=keys, **extra,
             )
             return loss_fn_result(p, r)
 

@@ -52,9 +52,11 @@ class TestEmbeddedEstimator:
         """Adaptive EES on y' = -5y hits the analytic solution."""
         term = SDETerm(drift=lambda t, y, a: -5.0 * y, noise="none")
         y0 = jnp.array([1.0], dtype=jnp.float64)
-        out = integrate_adaptive(EES25_2N, term, y0, 0.0, 1.0, rtol=1e-6, atol=1e-9)
-        assert float(out.t) == pytest.approx(1.0)
-        np.testing.assert_allclose(float(out.y[0]), np.exp(-5.0), rtol=1e-4)
+        out = integrate_adaptive(EES25_2N, term, y0, None, t0=0.0, t1=1.0,
+                                 rtol=1e-6, atol=1e-9, max_steps=4096,
+                                 bounded=False)
+        assert float(out.t_final) == pytest.approx(1.0)
+        np.testing.assert_allclose(float(out.y_final[0]), np.exp(-5.0), rtol=1e-4)
         assert int(out.n_accepted) > 5
 
     def test_adaptive_rejects_on_stiffness(self):
@@ -63,7 +65,9 @@ class TestEmbeddedEstimator:
             drift=lambda t, y, a: jnp.where(t > 0.5, -200.0, -1.0) * y, noise="none"
         )
         y0 = jnp.array([1.0], dtype=jnp.float64)
-        out = integrate_adaptive(EES25_2N, term, y0, 0.0, 1.0, h0=0.2, rtol=1e-5)
+        out = integrate_adaptive(EES25_2N, term, y0, None, t0=0.0, t1=1.0,
+                                 h0=0.2, rtol=1e-5, max_steps=4096,
+                                 bounded=False)
         assert int(out.n_rejected) >= 1
         assert float(out.h_final) < 0.05  # controller shrank into stability
 

@@ -1,0 +1,43 @@
+"""Docs must execute: every ```python block in README.md / docs/*.md runs.
+
+Each file's blocks run concatenated in a subprocess via
+``tools/run_doc_examples.py`` — the same entry point as CI's docs lane.
+Marked slow (full jit compiles per file); the quick CI lane calls the tool
+directly as its own step.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(REPO, "tools", "run_doc_examples.py")
+
+sys.path.insert(0, os.path.join(REPO, "tools"))
+import run_doc_examples  # noqa: E402
+
+
+def test_doc_files_discovered():
+    files = run_doc_examples.doc_files()
+    names = {os.path.relpath(f, REPO) for f in files}
+    for want in ("README.md", "docs/sdeint.md", "docs/solvers.md",
+                 "docs/adjoints.md", "docs/adaptive.md"):
+        assert want in names, names
+
+
+def test_extractor_finds_blocks():
+    src = run_doc_examples.extract(os.path.join(REPO, "README.md"))
+    assert "sdeint" in src and "```" not in src
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "relpath", ["README.md", "docs/sdeint.md", "docs/solvers.md",
+                "docs/adjoints.md", "docs/adaptive.md"])
+def test_doc_blocks_execute(relpath):
+    proc = subprocess.run(
+        [sys.executable, TOOL, os.path.join(REPO, relpath)],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,364 @@
+"""Virtual Brownian Tree + adaptive solve path: query reproducibility,
+refinement consistency, adaptive-vs-fixed strong error on a matched driver,
+gradients through the bounded stepper, and the sdeint/engine wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SDETerm,
+    get_solver,
+    integrate_adaptive,
+    integrate_fixed,
+    parse_solver_spec,
+    sdeint,
+    virtual_brownian_tree,
+)
+from repro.serving import SDESampleConfig, SDESampleEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def ou_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * (1.0 + 0.1 * jnp.tanh(y)),
+        noise="diagonal",
+    )
+
+
+ARGS = {
+    "nu": jnp.float64(0.7),
+    "mu": jnp.float64(0.2),
+    "sigma": jnp.float64(0.4),
+}
+
+
+def vbt(key=KEY, t0=0.0, t1=1.0, shape=(3,), tol=None):
+    return virtual_brownian_tree(key, t0, t1, shape=shape, dtype=jnp.float64,
+                                 tol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Virtual Brownian Tree.
+# ---------------------------------------------------------------------------
+
+class TestVirtualBrownianTree:
+    def test_same_query_is_bitwise_equal(self):
+        """W(t) and increments are pure functions of (key, s, t)."""
+        b = vbt()
+        for s, t in [(0.0, 0.5), (0.3, 0.7), (0.123, 0.891)]:
+            a1 = np.asarray(b.increment_over(s, t))
+            a2 = np.asarray(b.increment_over(s, t))
+            np.testing.assert_array_equal(a1, a2)
+        # distinct keys give distinct paths
+        other = vbt(jax.random.PRNGKey(1))
+        assert not np.array_equal(np.asarray(b.increment_over(0.3, 0.7)),
+                                  np.asarray(other.increment_over(0.3, 0.7)))
+
+    def test_vmap_lane_bitwise_equals_solo_query(self):
+        keys = jax.random.split(KEY, 8)
+        t = 0.637
+        batched = jax.vmap(lambda k: vbt(k).weval(t))(keys)
+        for i in range(8):
+            np.testing.assert_array_equal(np.asarray(vbt(keys[i]).weval(t)),
+                                          np.asarray(batched[i]))
+
+    def test_consistency_under_interval_refinement(self):
+        """Refining [s, u] at any midpoint leaves the total increment fixed:
+        the accept/reject property — a rejected step re-queries smaller
+        intervals of the *same* path."""
+        b = vbt()
+        for (s, m, u) in [(0.0, 0.5, 1.0), (0.25, 0.375, 0.5),
+                          (0.2, 0.33, 0.81)]:
+            whole = np.asarray(b.increment_over(s, u))
+            parts = np.asarray(b.increment_over(s, m)) + np.asarray(
+                b.increment_over(m, u))
+            np.testing.assert_allclose(whole, parts, rtol=0, atol=1e-12)
+
+    def test_w_t0_is_exactly_zero(self):
+        assert np.all(np.asarray(vbt().weval(0.0)) == 0.0)
+
+    def test_increment_statistics(self):
+        """Var[W(t) - W(s)] == t - s, independent increments (bridge sanity)."""
+        keys = jax.random.split(KEY, 2000)
+        f = jax.vmap(lambda k: vbt(k, shape=()).weval(jnp.array(1.0)))
+        g = jax.vmap(lambda k: vbt(k, shape=()).increment_over(0.31, 0.55))
+        w1, inc = f(keys), g(keys)
+        assert abs(float(jnp.var(w1)) - 1.0) < 0.1
+        assert abs(float(jnp.var(inc)) - 0.24) < 0.05
+        # increment over [0.31, 0.55] independent of W up to 0.31
+        w_pre = jax.vmap(lambda k: vbt(k, shape=()).weval(0.31))(keys)
+        assert abs(float(jnp.mean(w_pre * inc))) < 0.03
+
+    def test_pytree_shapes(self):
+        b = vbt(shape=((2,), (4,)))
+        inc = b.increment_over(0.2, 0.7)
+        assert inc[0].shape == (2,) and inc[1].shape == (4,)
+        # leaves come from independent streams
+        b1 = vbt(shape=(2,))
+        assert not np.array_equal(np.asarray(inc[0]),
+                                  np.asarray(b1.increment_over(0.2, 0.7)))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive vs fixed grid on a matched driver.
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveStrongError:
+    @pytest.mark.parametrize("spec", ["ees25", "ees27"])
+    def test_adaptive_matches_fixed_grid_strong_error(self, spec):
+        """At matched tolerance the adaptive solve's strong error (vs a fine
+        reference on the SAME driver) is comparable to a fixed grid of the
+        same step count, and tightening rtol tightens the error."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        keys = jax.random.split(KEY, 16)
+
+        def tree(k):
+            return vbt(k, tol=2.0 ** -14)
+
+        ref = jax.jit(jax.vmap(
+            lambda k: integrate_fixed(spec, term, y0, tree(k), 1024, ARGS)
+        ))(keys)
+
+        def serr(y):
+            return float(jnp.sqrt(jnp.mean(jnp.sum((y - ref) ** 2, axis=-1))))
+
+        errs, steps = [], []
+        for rtol in (1e-2, 1e-3):
+            out = jax.jit(jax.vmap(lambda k: integrate_adaptive(
+                spec, term, y0, tree(k), ARGS, rtol=rtol, atol=rtol * 1e-2,
+                max_steps=512, bounded=False,
+            )))(keys)
+            np.testing.assert_allclose(np.asarray(out.t_final), 1.0)
+            errs.append(serr(out.y_final))
+            steps.append(float(jnp.mean(out.n_accepted)))
+        assert errs[1] < errs[0], (errs, steps)  # tolerance actually controls
+        fixed = jax.jit(jax.vmap(
+            lambda k: integrate_fixed(spec, term, y0, tree(k),
+                                      int(round(steps[1])), ARGS)
+        ))(keys)
+        # same step budget, same ballpark error (within 4x either way)
+        assert errs[1] < 4.0 * serr(fixed) + 1e-12, (errs, serr(fixed))
+
+    def test_rejected_steps_do_not_perturb_the_path(self):
+        """Runs with different initial h (different reject patterns) converge
+        to the same pathwise solution — the VBT keeps the Brownian path fixed
+        under re-queries."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        b = vbt(tol=2.0 ** -14)
+        outs = [
+            integrate_adaptive("ees25", term, y0, b, ARGS, rtol=1e-4,
+                               atol=1e-6, h0=h0, max_steps=1024,
+                               bounded=False).y_final
+            for h0 in (0.5, 0.01)
+        ]
+        # different accepted grids → discretisation-level differences only
+        # (a driver that resampled on rejection would diverge at O(1))
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                                   atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Gradients through the adaptive path.
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveGradients:
+    def test_full_adjoint_matches_matched_grid_gradient(self):
+        """Adaptive full-adjoint gradients agree with the fixed-grid gradient
+        on the same driver at tight tolerance (both approximate the same
+        continuous adjoint)."""
+        term = ou_term()
+        y0 = jnp.ones(2, jnp.float64)
+        b = vbt(shape=(2,), tol=2.0 ** -14)
+
+        def aloss(a):
+            out = integrate_adaptive("ees25", term, y0, b, a, rtol=1e-5,
+                                     atol=1e-7, max_steps=1024)
+            return jnp.sum(out.y_final ** 2)
+
+        def floss(a):
+            return jnp.sum(integrate_fixed("ees25", term, y0, b, 1024, a) ** 2)
+
+        ga = jax.grad(aloss)(ARGS)
+        gf = jax.grad(floss)(ARGS)
+        for k in ARGS:
+            np.testing.assert_allclose(ga[k], gf[k], rtol=2e-2)
+
+    def test_recursive_adjoint_matches_full(self):
+        """checkpoint_steps (the recursive adjoint of the adaptive path) is a
+        pure remat: same gradients up to XLA re-fusion, less memory."""
+        term = ou_term()
+        y0 = jnp.ones(2, jnp.float64)
+        keys = jax.random.split(KEY, 3)
+
+        def loss(a, adjoint):
+            r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 128, y0, None,
+                       args=a, adjoint=adjoint, rtol=1e-3, batch_keys=keys)
+            return jnp.mean(r.y_final ** 2)
+
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "recursive"))(ARGS)
+        for k in ARGS:
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-9)
+
+    def test_ode_gradient_matches_analytic(self):
+        """d/da of e^{-a} through the adaptive loop, vs the analytic value."""
+        def loss(a):
+            term = SDETerm(drift=lambda t, y, p: -p * y, noise="none")
+            out = integrate_adaptive("ees25", term, jnp.array([1.0]), None,
+                                     args=a, t0=0.0, t1=1.0, rtol=1e-5,
+                                     atol=1e-8, max_steps=1024)
+            return out.y_final[0]
+
+        g = float(jax.grad(loss)(jnp.float64(1.0)))
+        np.testing.assert_allclose(g, -np.exp(-1.0), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# sdeint wiring: spec flags, save_at dense output, batch fan-out, errors.
+# ---------------------------------------------------------------------------
+
+class TestSdeintAdaptive:
+    def test_spec_flag_parses_and_marks_solver(self):
+        assert parse_solver_spec("ees25:adaptive") == ("ees25", {"adaptive": True})
+        s = get_solver("ees25:adaptive")
+        assert getattr(s, "adaptive", False) is True
+        assert not getattr(get_solver("ees25"), "adaptive", False)
+
+    def test_save_at_dense_output_shapes_and_batch_bitwise(self):
+        """Acceptance criterion: sdeint(term, "ees25:adaptive", ...,
+        save_at=ts) returns trajectories on an arbitrary grid, bitwise equal
+        across batch fan-out to the single-key solve."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        ts = jnp.array([0.0, 0.1, 0.25, 0.5, 0.9, 1.0])
+        keys = jax.random.split(KEY, 4)
+        r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 256, y0, None, args=ARGS,
+                   save_at=ts, batch_keys=keys)
+        assert r.ys.shape == (4, 6, 3) and r.y_final.shape == (4, 3)
+        np.testing.assert_allclose(np.asarray(r.t_final), 1.0)
+        np.testing.assert_array_equal(np.asarray(r.ys[:, 0]),
+                                      np.ones((4, 3)))  # save at t0 holds y0
+        solo = sdeint(term, "ees25:adaptive", 0.0, 1.0, 256, y0, keys[1],
+                      args=ARGS, save_at=ts)
+        np.testing.assert_array_equal(np.asarray(solo.ys), np.asarray(r.ys[1]))
+        np.testing.assert_array_equal(np.asarray(solo.y_final),
+                                      np.asarray(r.y_final[1]))
+        # final save point coincides with y_final
+        np.testing.assert_allclose(np.asarray(r.ys[:, -1]),
+                                   np.asarray(r.y_final), atol=1e-12)
+
+    def test_dense_output_tracks_solution(self):
+        """save_at values match the analytic solution at off-step times (ODE
+        mode, where the interpolation error is deterministic; the SDE wiring
+        is pinned bitwise by the batch-fan-out test above)."""
+        term = SDETerm(drift=lambda t, y, a: -5.0 * y, noise="none")
+        y0 = jnp.array([1.0], dtype=jnp.float64)
+        ts = jnp.array([0.0, 0.137, 0.25, 0.612, 0.9, 1.0])
+        r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 2048, y0, KEY,
+                   rtol=1e-5, atol=1e-8, save_at=ts)
+        np.testing.assert_allclose(np.asarray(r.t_final), 1.0)
+        np.testing.assert_allclose(np.asarray(r.ys[:, 0]),
+                                   np.exp(-5.0 * np.asarray(ts)), atol=2e-4)
+
+    def test_reversible_plus_adaptive_raises(self):
+        term = ou_term()
+        with pytest.raises(ValueError, match="fixed grid"):
+            sdeint(term, "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(3), KEY,
+                   args=ARGS, adjoint="reversible")
+
+    def test_save_at_without_adaptive_raises(self):
+        with pytest.raises(ValueError, match="adaptive"):
+            sdeint(ou_term(), "ees25", 0.0, 1.0, 64, jnp.ones(3), KEY,
+                   args=ARGS, save_at=jnp.array([0.5]))
+
+    def test_tolerances_without_adaptive_raise(self):
+        """A tolerance request must not silently run a fixed grid."""
+        for kw in ({"rtol": 1e-3}, {"atol": 1e-5}, {"h0": 0.1},
+                   {"bm_tol": 1e-3}):
+            with pytest.raises(ValueError, match="adaptive"):
+                sdeint(ou_term(), "ees25", 0.0, 1.0, 64, jnp.ones(3), KEY,
+                       args=ARGS, **kw)
+
+    def test_bounded_modes_bitwise_equal(self):
+        """The while-loop stepper (forward-only) and the masked bounded scan
+        walk identical trial sequences — bitwise-equal outputs."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        ts = jnp.array([0.5, 1.0])
+        a = sdeint(term, "ees25:adaptive", 0.0, 1.0, 256, y0, KEY, args=ARGS,
+                   rtol=1e-3, save_at=ts)
+        b = sdeint(term, "ees25:adaptive", 0.0, 1.0, 256, y0, KEY, args=ARGS,
+                   rtol=1e-3, save_at=ts, bounded=False)
+        np.testing.assert_array_equal(np.asarray(a.y_final),
+                                      np.asarray(b.y_final))
+        np.testing.assert_array_equal(np.asarray(a.ys), np.asarray(b.ys))
+        assert int(a.n_accepted) == int(b.n_accepted)
+
+    def test_recursive_with_unbounded_raises(self):
+        with pytest.raises(ValueError, match="forward-only"):
+            sdeint(ou_term(), "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(3),
+                   KEY, args=ARGS, adjoint="recursive", bounded=False)
+
+    def test_save_every_with_adaptive_raises(self):
+        with pytest.raises(ValueError, match="save_at"):
+            sdeint(ou_term(), "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(3), KEY,
+                   args=ARGS, save_every=8)
+
+    def test_solver_without_estimator_raises(self):
+        with pytest.raises(ValueError, match="embedded"):
+            sdeint(ou_term(), "reversible_heun", 0.0, 1.0, 64, jnp.ones(3),
+                   KEY, args=ARGS, adaptive=True)
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine adaptive requests.
+# ---------------------------------------------------------------------------
+
+class TestEngineAdaptive:
+    def term(self):
+        return SDETerm(
+            drift=lambda t, y, a: -0.5 * y,
+            diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+            noise="diagonal",
+        )
+
+    def test_adaptive_request_served_with_save_at(self):
+        eng = SDESampleEngine(self.term(), jnp.ones(3), SDESampleConfig(slots=4))
+        rid = eng.submit("ees25:adaptive", t1=1.0, n_steps=128, n_paths=6,
+                         rtol=1e-3, save_at=[0.5, 1.0], seed=11)
+        done = eng.run()
+        assert done[rid].y_final.shape == (6, 3)
+        assert done[rid].ys.shape == (6, 2, 3)
+        assert np.isfinite(done[rid].ys).all()
+        # truncation is detectable: every path reports where it stopped
+        assert done[rid].t_final.shape == (6,)
+        np.testing.assert_allclose(done[rid].t_final, 1.0)
+        # reproducible offline from the seed, like fixed-grid requests
+        keys = jnp.stack(
+            [jax.random.fold_in(jax.random.PRNGKey(11), i) for i in range(6)]
+        )
+        ref = sdeint(self.term(), "ees25:adaptive", 0.0, 1.0, 128,
+                     jnp.ones(3), None, rtol=1e-3,
+                     save_at=jnp.array([0.5, 1.0]), batch_keys=keys,
+                     dtype=jnp.float32)
+        np.testing.assert_array_equal(done[rid].y_final,
+                                      np.asarray(ref.y_final))
+
+    def test_adaptive_options_validated_at_submit(self):
+        eng = SDESampleEngine(self.term(), jnp.ones(3))
+        with pytest.raises(ValueError, match="adaptive"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=1, rtol=1e-3)
+        with pytest.raises(ValueError, match="adaptive"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=1, save_at=[0.5])
+        with pytest.raises(ValueError, match="save_at"):
+            eng.submit("ees25:adaptive", t1=1.0, n_steps=8, n_paths=1,
+                       save_every=4)
+        with pytest.raises(ValueError, match="save_at"):
+            eng.submit("ees25:adaptive", t1=1.0, n_steps=8, n_paths=1,
+                       save_at=[2.5])  # outside [t0, t1]
+        assert not eng.queue

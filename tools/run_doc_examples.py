@@ -1,0 +1,85 @@
+"""Execute every ```python block in README.md and docs/*.md.
+
+The docs lane of CI runs this so quickstarts can never rot: each markdown
+file's blocks are concatenated (in order, so later blocks may use earlier
+definitions) into one script and run in a fresh subprocess with
+``PYTHONPATH=src`` and 8 faked XLA host devices (the multi-device fan-out
+examples need a mesh; everything else ignores it).
+
+Run:  python tools/run_doc_examples.py [files...]
+Exit status is non-zero if any file's blocks fail.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BLOCK = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def doc_files():
+    docs = sorted(
+        os.path.join(REPO, "docs", f)
+        for f in os.listdir(os.path.join(REPO, "docs"))
+        if f.endswith(".md")
+    )
+    return [os.path.join(REPO, "README.md")] + docs
+
+
+def extract(path: str) -> str:
+    with open(path) as f:
+        text = f.read()
+    blocks = [m.group(1) for m in _BLOCK.finditer(text)]
+    return "\n\n".join(blocks)
+
+
+def run_file(path: str) -> bool:
+    source = extract(path)
+    rel = os.path.relpath(path, REPO)
+    if not source.strip():
+        print(f"-- {rel}: no python blocks")
+        return True
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    # The mesh examples want >1 device; faking host devices is safe here
+    # because each file runs in its own subprocess (unlike the test suite,
+    # which must see the real device).
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as tmp:
+        tmp.write(source)
+        script = tmp.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, script], env=env, cwd=REPO,
+            capture_output=True, text=True, timeout=900,
+        )
+    finally:
+        os.unlink(script)
+    if proc.returncode != 0:
+        print(f"FAIL {rel}\n--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+        return False
+    print(f"ok   {rel} ({source.count(chr(10)) + 1} lines)")
+    return True
+
+
+def main(argv):
+    files = [os.path.abspath(a) for a in argv] or doc_files()
+    failed = [f for f in files if not run_file(f)]
+    if failed:
+        print(f"\n{len(failed)} doc file(s) failed: "
+              + ", ".join(os.path.relpath(f, REPO) for f in failed))
+        return 1
+    print(f"\nall {len(files)} doc file(s) green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
