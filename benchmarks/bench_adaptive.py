@@ -25,7 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SDETerm, integrate_adaptive, integrate_fixed, virtual_brownian_tree
+from repro.core import (
+    SDETerm,
+    TimeGrid,
+    get_solver,
+    integrate_adaptive,
+    solve,
+    virtual_brownian_tree,
+)
 
 from .common import emit, time_fn
 
@@ -65,6 +72,12 @@ def transient_term() -> SDETerm:
     )
 
 
+def fixed_solve(spec, term, y0, driver, n_steps, args):
+    """Uniform-grid solve on a matched driver through the unified solve()."""
+    grid = TimeGrid.uniform(driver.t0, driver.t1, n_steps, driver)
+    return solve(get_solver(spec), term, y0, grid, args).y_final
+
+
 def run(out_path: str = DEFAULT_OUT):
     term = transient_term()
     args = {"nu": jnp.float64(0.7), "mu": jnp.float64(0.2),
@@ -79,7 +92,7 @@ def run(out_path: str = DEFAULT_OUT):
     # One fine fixed-grid reference per path, on the SAME driver every other
     # run queries — strong error is an apples-to-apples pathwise comparison.
     ref = jax.jit(jax.vmap(
-        lambda k: integrate_fixed("ees25", term, y0, tree(k), REF_STEPS, args)
+        lambda k: fixed_solve("ees25", term, y0, tree(k), REF_STEPS, args)
     ))(keys)
 
     def strong_err(y):
@@ -88,7 +101,7 @@ def run(out_path: str = DEFAULT_OUT):
     records = {"adaptive": [], "fixed": []}
     for n in FIXED_STEPS:
         fn = jax.jit(jax.vmap(
-            lambda k: integrate_fixed("ees25", term, y0, tree(k), n, args)
+            lambda k: fixed_solve("ees25", term, y0, tree(k), n, args)
         ))
         err = strong_err(fn(keys))
         records["fixed"].append({"n_steps": n, "strong_err": err})

@@ -1,0 +1,138 @@
+"""Reversible-adjoint training on adaptive grids: memory + wall-clock.
+
+The workload the realized-grid refactor unlocked: a training step whose
+forward pass places steps adaptively (PI controller on a Virtual Brownian
+Tree, stiff-transient drift) and whose backward pass runs the O(1)-memory
+reversible adjoint over the realized grid.  Compares the three adjoints on
+one jit'd loss-gradient computation:
+
+* ``temp_bytes`` — peak XLA scratch of the compiled step (the paper's memory
+  metric; full grows O(n_steps), recursive O(sqrt), reversible stays flat);
+* ``us_per_step`` — median wall-clock per gradient evaluation;
+* ``grad_rel_err_vs_full`` — max relative gradient deviation from the full
+  adjoint on the same realized grids (recursive is a pure remat ~1e-16;
+  reversible pays only the O(h^{m+1}) reconstruction drift).
+
+Emits ``BENCH_reversible_adaptive.json`` next to the repo root (referenced
+from ROADMAP.md).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_reversible_adaptive
+      [--out PATH] [--max-steps N] [--paths B] [--dim D]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SDETerm, sdeint
+
+from .common import emit, temp_bytes, time_fn
+
+jax.config.update("jax_enable_x64", True)
+
+ADJOINTS = ("full", "recursive", "reversible")
+RTOL = 1e-3
+T1 = 2.0
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_reversible_adaptive.json",
+)
+
+
+def transient_term() -> SDETerm:
+    """Mean-reverting process with a sharp stiff transient around t = 1
+    (same workload class as bench_adaptive: the tolerance-driven grid earns
+    its keep only where step placement matters)."""
+    def rate(t, a):
+        return a["nu"] * (1.0 + 40.0 * jnp.exp(-(((t - 1.0) / 0.08) ** 2)))
+
+    return SDETerm(
+        drift=lambda t, y, a: rate(t, a) * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * (1.0 + 0.1 * jnp.tanh(y)),
+        noise="diagonal",
+    )
+
+
+def run(out_path: str = DEFAULT_OUT, max_steps: int = 512, n_paths: int = 32,
+        dim: int = 16):
+    term = transient_term()
+    args = {"nu": jnp.float64(0.7), "mu": jnp.float64(0.2),
+            "sigma": jnp.float64(0.4)}
+    y0 = jnp.ones(dim, jnp.float64)
+    keys = jax.random.split(jax.random.PRNGKey(0), n_paths)
+
+    def make_grad(adjoint):
+        def loss(a):
+            r = sdeint(term, "ees25:adaptive", 0.0, T1, max_steps, y0, None,
+                       args=a, adjoint=adjoint, rtol=RTOL, batch_keys=keys)
+            return jnp.mean((r.y_final - 0.2) ** 2)
+
+        return jax.jit(jax.value_and_grad(loss))
+
+    records = []
+    grads = {}
+    for adjoint in ADJOINTS:
+        fn = make_grad(adjoint)
+        mem = temp_bytes(fn, args)
+        us = time_fn(fn, args, warmup=1, iters=3)
+        loss, g = fn(args)
+        grads[adjoint] = {k: float(v) for k, v in g.items()}
+        records.append({
+            "adjoint": adjoint,
+            "temp_bytes": mem,
+            "us_per_step": us,
+            "loss": float(loss),
+        })
+        emit(f"bench_reversible_adaptive/{adjoint}", us,
+             f"temp_bytes={mem},loss={float(loss):.6f}")
+
+    for rec in records:
+        rel = max(
+            abs(grads[rec["adjoint"]][k] - grads["full"][k])
+            / (abs(grads["full"][k]) + 1e-30)
+            for k in grads["full"]
+        )
+        rec["grad_rel_err_vs_full"] = rel
+        emit(f"bench_reversible_adaptive/graderr/{rec['adjoint']}", 0.0,
+             f"rel={rel:.3e}")
+
+    by = {r["adjoint"]: r for r in records}
+    if by["full"]["temp_bytes"] and by["reversible"]["temp_bytes"]:
+        ratio = by["full"]["temp_bytes"] / by["reversible"]["temp_bytes"]
+        emit("bench_reversible_adaptive/mem_ratio_full_over_reversible", 0.0,
+             f"{ratio:.1f}x")
+
+    payload = {
+        "device": jax.devices()[0].platform,
+        "n_paths": n_paths,
+        "dim": dim,
+        "t1": T1,
+        "rtol": RTOL,
+        "max_steps": max_steps,
+        "records": records,
+        "grads": grads,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--max-steps", type=int, default=512)
+    ap.add_argument("--paths", type=int, default=32)
+    ap.add_argument("--dim", type=int, default=16)
+    args = ap.parse_args()
+    run(args.out, args.max_steps, args.paths, args.dim)
+
+
+if __name__ == "__main__":
+    main()

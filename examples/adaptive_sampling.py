@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import SDETerm, integrate_fixed, sdeint, virtual_brownian_tree
+from repro.core import (SDETerm, TimeGrid, get_solver, sdeint, solve,
+                        virtual_brownian_tree)
 
 T1 = 2.0
 
@@ -46,8 +47,9 @@ def tree(k):
     return virtual_brownian_tree(k, 0.0, T1, shape=(4,), dtype=jnp.float64,
                                  tol=T1 * 2.0 ** -14)
 
-ref = jax.jit(jax.vmap(lambda k: integrate_fixed("ees25", term, y0, tree(k),
-                                                 4096, args)))(keys)
+ref = jax.jit(jax.vmap(lambda k: solve(
+    get_solver("ees25"), term, y0,
+    TimeGrid.uniform(0.0, T1, 4096, tree(k)), args).y_final))(keys)
 err = float(jnp.sqrt(jnp.mean(jnp.sum((out.y_final - ref) ** 2, axis=-1))))
 budget = float(jnp.mean(out.n_accepted + out.n_rejected))
 print(f"strong error vs matched 4096-step reference: {err:.2e} "

@@ -4,16 +4,18 @@ Public surface:
   tableaux   — Butcher tableaux (EES(2,5;x), EES(2,7), classical RK)
   williamson — Williamson 2N coefficients + Bazavov conditions
   brownian   — counter-based Brownian drivers (fixed grid + Virtual Brownian Tree)
+  grid       — the realized-grid abstraction (TimeGrid: uniform or adaptive)
+  pytree     — shared pytree linear algebra + solver-spec resolution
   solvers    — Euclidean SDE solvers (EES Butcher/2N, Reversible Heun, MCF)
-  adjoint    — Full / Recursive / Reversible adjoints (Algorithms 1 & 2)
-  adaptive   — PI-controlled accept/reject stepping + save_at dense output
+  adjoint    — ONE solve() over any TimeGrid, under all three adjoints
+  adaptive   — PI accept/reject grid realization + save_at dense output
   registry   — string-keyed solver registry ("ees25", "ees25:adaptive", ...)
   sdeint     — batched Monte-Carlo integration (vmap/shard_map fan-out)
   lie        — groups & homogeneous spaces (Torus, SO(3)/SO(n), S^{n-1}, products)
   cfees      — CF-EES and geometric baselines (GeoEM, CG2, RKMK2)
   stability  — linear & mean-square stability analysis
 """
-from .adaptive import AdaptiveResult, integrate_adaptive, integrate_fixed
+from .adaptive import AdaptiveResult, RealizedGrid, integrate_adaptive, realize_grid
 from .adjoint import SolveResult, solve
 from .brownian import (
     BrownianPath,
@@ -21,6 +23,7 @@ from .brownian import (
     brownian_path,
     virtual_brownian_tree,
 )
+from .grid import TimeGrid
 from .registry import (
     canonical_spec,
     get_solver,
@@ -74,9 +77,11 @@ __all__ = [
     "brownian_path",
     "VirtualBrownianTree",
     "virtual_brownian_tree",
+    "TimeGrid",
     "AdaptiveResult",
+    "RealizedGrid",
     "integrate_adaptive",
-    "integrate_fixed",
+    "realize_grid",
     "SDETerm",
     "ButcherSolver",
     "LowStorageSolver",

@@ -1,4 +1,4 @@
-"""Adaptive (accept/reject) SDE stepping over arbitrary-time Brownian drivers.
+"""Adaptive grid *realization*: PI-controlled accept/reject over any driver.
 
 The embedded estimator is Appendix D of the paper: the 2N recurrences admit a
 three-register variant with a first-order companion — store the final internal
@@ -8,22 +8,30 @@ evaluations).  Each solver exposes it as ``step_with_error`` (see
 :class:`~repro.core.solvers.LowStorageSolver` /
 :class:`~repro.core.solvers.ButcherSolver`).
 
-:func:`integrate_adaptive` drives that estimator with a PI step-size
-controller (Gustafsson) over any driver implementing the
-:class:`~repro.core.brownian.BrownianDriver` protocol.  Rejected steps
-re-query the driver over a *smaller* interval, which is exactly what the
-:class:`~repro.core.brownian.VirtualBrownianTree` makes consistent: every
-query resolves against one fixed underlying path, so accept/reject decisions
-never perturb the Brownian motion being integrated.
+Since PR 3 the adaptive path is **realize-then-solve**:
 
-Dense output: ``save_at=ts`` records the solution on an arbitrary time grid,
-linearly interpolated between accepted steps (first-order dense output —
-matched to the schemes' strong order for Brownian driving).
+* :func:`realize_grid` (phase 1) drives the estimator with a PI step-size
+  controller (Gustafsson) in a forward-only ``while_loop`` with gradients
+  stopped, and emits the accepted-step grid as a
+  :class:`~repro.core.grid.TimeGrid` (padded to the static trial budget with
+  zero-length steps).  Rejected steps re-query the driver over a *smaller*
+  interval, which is exactly what the
+  :class:`~repro.core.brownian.VirtualBrownianTree` makes consistent: every
+  query resolves against one fixed underlying path, so accept/reject
+  decisions never perturb the Brownian motion being integrated.
+* :func:`repro.core.adjoint.solve` (phase 2) then integrates over the
+  realized grid — with **any** solver and **any** adjoint, including the
+  O(1)-memory reversible adjoint: nothing about reversibility requires
+  uniform steps, only that the backward pass replays the same realized step
+  sequence, and rejection already happened in phase 1, so the two-register
+  reverse sweep needs no third (3S*) register.
 
-As the paper's Limitations section notes, step rejection requires restoring
-the previous state (a 3S* register), which is incompatible with the
-two-register reversible implementation — so the reversible adjoint stays
-fixed-grid; :func:`repro.core.sdeint.sdeint` raises on the combination.
+:func:`integrate_adaptive` composes the two phases (or runs a single
+forward-only pass for sampling — ``bounded=False`` — which is bitwise
+identical to realize-then-solve).  Dense output: ``save_at=ts`` records the
+solution on an arbitrary time grid, linearly interpolated between accepted
+steps (first-order dense output — matched to the schemes' strong order for
+Brownian driving).
 """
 from __future__ import annotations
 
@@ -32,11 +40,12 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .solvers import tree_sub
+from .grid import TimeGrid, fill_saves
+from .pytree import resolve_solver, tree_select, tree_sub
 from .williamson import LowStorage
 
-__all__ = ["step_with_error", "integrate_adaptive", "integrate_fixed",
-           "AdaptiveResult"]
+__all__ = ["step_with_error", "realize_grid", "RealizedGrid",
+           "integrate_adaptive", "AdaptiveResult"]
 
 _ERR_FLOOR = 1e-10
 
@@ -65,27 +74,195 @@ class AdaptiveResult(NamedTuple):
     n_rejected: jnp.ndarray
 
 
-def _resolve_solver(solver):
-    if isinstance(solver, str):
-        from .registry import get_solver
+class RealizedGrid(NamedTuple):
+    """Phase-1 output: the accepted-step grid plus controller statistics.
 
-        solver = get_solver(solver)
-    if isinstance(solver, LowStorage):
-        from .solvers import LowStorageSolver
+    ``grid.ts`` holds ``n_accepted + 1`` accepted times followed by
+    ``t_final`` padding; ``grid.hs`` the matching step sizes (0 on padding).
+    ``y_final`` is the realization's own terminal state — gradient-stopped
+    (the grid is data), so use it for sampling/diagnostics and run
+    :func:`~repro.core.adjoint.solve` over ``grid`` when you need gradients.
+    """
 
-        solver = LowStorageSolver(solver)
-    if not hasattr(solver, "step_with_error"):
-        raise ValueError(
-            f"solver {getattr(solver, 'name', solver)!r} has no embedded "
-            "error estimate (step_with_error); adaptive stepping supports "
-            "the EES 2N schemes and multi-stage Butcher-form RK — use a "
-            "fixed grid for reversible_heun / mcf-* solvers"
+    grid: TimeGrid
+    y_final: Any
+    t_final: jnp.ndarray
+    h_final: jnp.ndarray
+    n_accepted: jnp.ndarray
+    n_rejected: jnp.ndarray
+
+
+def _controller_loop(solver, term, y0, driver, args, *, t0, t1, rtol, atol,
+                     h0, safety, icoeff, pcoeff, max_steps, save_at,
+                     record_grid):
+    """The one accept/reject loop: a ``while_loop`` over trial steps.
+
+    ``record_grid=True`` additionally writes accepted ``(t, h)`` pairs into
+    fixed ``max_steps``-sized buffers (grid realization); ``save_at`` fills a
+    dense-output buffer at accept time (single-pass sampling).  Both modes
+    walk the identical trial sequence, so their solutions agree bitwise.
+    """
+    span = t1 - t0
+    has_noise = getattr(term, "noise", "diagonal") != "none"
+    tdt = jnp.result_type(float)
+    eps_end = 1e-9 * span
+    h_floor = 1e-7 * span
+    k_exp = 2.0  # embedded pair is (order, 1): exponent 1/(q+1) with q = 1
+
+    if save_at is not None:
+        save_ts = jnp.asarray(save_at, tdt)
+        if save_ts.ndim != 1:
+            raise ValueError(f"save_at must be 1-D, got shape {save_ts.shape}")
+
+    def err_norm(err, y_old, y_new):
+        parts = []
+        for e, a, b in zip(jax.tree_util.tree_leaves(err),
+                           jax.tree_util.tree_leaves(y_old),
+                           jax.tree_util.tree_leaves(y_new)):
+            sc = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+            parts.append(((e / sc) ** 2).ravel())
+        ms = jnp.mean(jnp.concatenate(parts))
+        # Clamp inside the sqrt: trial steps for vmap lanes that already
+        # reached t1 run with h_eff == 0 and err == 0, and d(sqrt)/dx at 0 is
+        # inf — which would leak NaN through the masking select (0 * inf).
+        return jnp.sqrt(jnp.maximum(ms, _ERR_FLOOR * _ERR_FLOOR))
+
+    def trial(carry):
+        y, t, h, w, en_prev, na, nr, ys_out, ts_buf, hs_buf = carry
+        h_eff = jnp.minimum(h, t1 - t)
+        if has_noise:
+            w_prop = driver.weval(t + h_eff)
+            dW = tree_sub(w_prop, w)
+        else:
+            w_prop, dW = w, None
+        y_new, err = solver.step_with_error(term, y, t, h_eff, dW, args)
+        # Detach the controller: the step-size sequence is treated as data,
+        # so gradients are those of the discrete scheme on the realized grid.
+        en = jax.lax.stop_gradient(err_norm(err, y, y_new))
+        accept = en <= 1.0
+        grow = safety * en ** (-(icoeff + pcoeff) / k_exp) \
+            * jnp.maximum(en_prev, _ERR_FLOOR) ** (pcoeff / k_exp)
+        shrink = safety * en ** (-1.0 / k_exp)
+        factor = jnp.where(accept, jnp.clip(grow, 0.2, 2.0),
+                           jnp.clip(shrink, 0.1, 1.0))
+        h_next = jnp.maximum(h_eff * factor, h_floor)
+        if save_at is not None:
+            ys_out = fill_saves(ys_out, save_ts, accept, t, t + h_eff,
+                                y, y_new, t1, eps_end, h_floor)
+        if record_grid:
+            ts_buf = ts_buf.at[na + 1].set(
+                jnp.where(accept, t + h_eff, ts_buf[na + 1]))
+            hs_buf = hs_buf.at[na].set(jnp.where(accept, h_eff, hs_buf[na]))
+        y = tree_select(accept, y_new, y)
+        w = tree_select(accept, w_prop, w)
+        t = jnp.where(accept, t + h_eff, t)
+        en_prev = jnp.where(accept, en, en_prev)
+        return (y, t, h_next, w, en_prev,
+                na + accept.astype(jnp.int32), nr + (~accept).astype(jnp.int32),
+                ys_out, ts_buf, hs_buf)
+
+    w0 = driver.weval(t0) if has_noise else 0.0  # exact zeros for a VBT
+    ys0 = None
+    if save_at is not None:
+        ys0 = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (save_ts.shape[0],) + jnp.shape(l)), y0
         )
-    return solver
+    ts0 = jnp.full((max_steps + 1,), t0, tdt) if record_grid else None
+    hs0 = jnp.zeros((max_steps,), tdt) if record_grid else None
+    init = (y0, jnp.asarray(t0, tdt), jnp.asarray(h0, tdt), w0,
+            jnp.asarray(1.0, tdt), jnp.int32(0), jnp.int32(0), ys0, ts0, hs0)
+
+    def cond(carry):
+        return ((t1 - carry[1]) > eps_end) & (carry[5] + carry[6] < max_steps)
+
+    return jax.lax.while_loop(cond, trial, init)
 
 
-def _tree_select(pred, a, b):
-    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+def _window(driver, t0, t1):
+    if t0 is None:
+        t0 = driver.t0 if driver is not None else 0.0
+    if t1 is None:
+        t1 = driver.t1 if driver is not None else 1.0
+    t0, t1 = float(t0), float(t1)
+    if not t1 > t0:
+        raise ValueError(f"need t1 > t0, got t0={t0}, t1={t1}")
+    return t0, t1
+
+
+def _check_driver(term, driver):
+    if getattr(term, "noise", "diagonal") != "none" and driver is None:
+        raise ValueError(
+            "term has noise but no driver was given; pass a "
+            "VirtualBrownianTree (or set term.noise='none' for ODE mode)"
+        )
+
+
+def realize_grid(
+    solver,
+    term,
+    y0,
+    driver=None,
+    args: Any = None,
+    *,
+    t0: Optional[float] = None,
+    t1: Optional[float] = None,
+    rtol: float = 1e-4,
+    atol: float = 1e-6,
+    h0: Optional[float] = None,
+    safety: float = 0.9,
+    icoeff: float = 0.7,
+    pcoeff: float = 0.4,
+    max_steps: int = 1024,
+) -> RealizedGrid:
+    """Phase 1: run the accept/reject controller once and emit the grid.
+
+    Gradients are stopped at entry — the realized step sequence is *data*
+    (differentiating through the controller compounds pow-rule factors and
+    the Brownian tree's rough time-interpolation into astronomically
+    ill-conditioned cotangents), so the ``while_loop`` realization is safe
+    inside ``jax.grad``: phase 2
+    (:func:`~repro.core.adjoint.solve` over ``result.grid``) carries all the
+    gradients.
+
+    Parameters mirror the classic controller: a step is accepted when the
+    RMS of ``err / (atol + rtol * max(|y|, |y_new|))`` is <= 1; on acceptance
+    the next step is scaled by the Gustafsson PI factor
+    ``safety * err^-(icoeff+pcoeff)/2 * err_prev^(pcoeff/2)`` (clipped to
+    [0.2, 2]); a rejection retries with the pure-I shrink factor.
+    ``max_steps`` bounds *trial* steps (accepted + rejected) and is the
+    static length of the emitted grid — unused tail entries are zero-length
+    padding that every solve masks out.  If the budget is exhausted the grid
+    stops short of ``t1`` (check ``result.t_final``).
+
+    ``solver`` must expose ``step_with_error`` (EES 2N schemes, multi-stage
+    Butcher RK).  Solvers without it — ``reversible_heun``, ``mcf-*`` — can
+    still *solve over* the realized grid in phase 2.
+
+    Example
+    -------
+    >>> rg = realize_grid("ees25", term, y0, vbt, args, rtol=1e-3)
+    >>> out = solve(get_solver("reversible_heun"), term, y0, rg.grid, args,
+    ...             adjoint="reversible")
+    """
+    solver = resolve_solver(solver, require_error_estimate=True)
+    t0, t1 = _window(driver, t0, t1)
+    _check_driver(term, driver)
+    if h0 is None:
+        h0 = (t1 - t0) / 16.0
+    y0, args = jax.lax.stop_gradient((y0, args))
+    final = _controller_loop(
+        solver, term, y0, driver, args, t0=t0, t1=t1, rtol=rtol, atol=atol,
+        h0=h0, safety=safety, icoeff=icoeff, pcoeff=pcoeff,
+        max_steps=int(max_steps), save_at=None, record_grid=True,
+    )
+    y, t, h, _, _, na, nr, _, ts_buf, hs_buf = final
+    # Entries past the last accept still hold their initial t0: pad with the
+    # final time so padded steps are zero-length at the grid's end.
+    idx = jnp.arange(ts_buf.shape[0])
+    ts = jnp.where(idx <= na, ts_buf, t)
+    grid = TimeGrid(ts, hs_buf, driver, t0, t1)
+    return RealizedGrid(grid=grid, y_final=y, t_final=t, h_final=h,
+                        n_accepted=na, n_rejected=nr)
 
 
 def integrate_adaptive(
@@ -106,9 +283,15 @@ def integrate_adaptive(
     max_steps: int = 1024,
     save_at=None,
     bounded: bool = True,
-    checkpoint_steps: bool = False,
+    adjoint: str = "full",
+    remat_chunk: Optional[int] = None,
 ) -> AdaptiveResult:
     """PI-controlled adaptive integration of ``term`` over ``[t0, t1]``.
+
+    Realize-then-solve: :func:`realize_grid` emits the accepted-step grid,
+    then :func:`~repro.core.adjoint.solve` integrates over it under
+    ``adjoint`` — ``"full"`` | ``"recursive"`` | ``"reversible"`` (the
+    O(1)-memory reversible adjoint now runs on adaptive grids).
 
     Parameters
     ----------
@@ -122,191 +305,69 @@ def integrate_adaptive(
         ODE mode (``term.noise`` must be ``"none"``).
     t0, t1:
         Integration window; default to the driver's span.
-    rtol, atol:
-        The accept threshold: a step is accepted when the RMS of
-        ``err / (atol + rtol * max(|y|, |y_new|))`` is <= 1.
-    h0:
-        Initial step size (default ``(t1 - t0) / 16``).
-    safety, icoeff, pcoeff:
-        Gustafsson PI controller: on acceptance the next step is scaled by
-        ``safety * err^-(icoeff+pcoeff)/2 * err_prev^(pcoeff/2)`` (clipped to
-        [0.2, 2]); a rejected step retries with the pure-I shrink factor.
-        ``pcoeff=0`` recovers the classical I controller.
-    max_steps:
-        Trial-step budget (accepted + rejected).  With ``bounded=True`` this
-        is also the *compiled* loop length.
+    rtol, atol, h0, safety, icoeff, pcoeff, max_steps:
+        Controller knobs — see :func:`realize_grid`.
     save_at:
         Optional array of output times in ``[t0, t1]``; the solution is
         linearly interpolated between accepted steps onto this grid
         (``AdaptiveResult.ys`` gains a leading ``len(save_at)`` axis; entries
         at or before ``t0`` hold ``y0``).
     bounded:
-        ``True`` (default) runs a fixed-length masked ``lax.scan`` — fully
-        reverse-mode differentiable, so the full/recursive adjoints work.
-        ``False`` uses ``lax.while_loop`` — faster forward-only integration
-        (stops at ``t1`` instead of padding to ``max_steps``) but not
-        reverse-differentiable; use it for sampling and benchmarks.
-    checkpoint_steps:
-        Rematerialise each trial step on the backward pass
-        (``jax.checkpoint``) — the recursive adjoint of the adaptive path.
-        Requires ``bounded=True``.
+        ``True`` (default): realize-then-solve — reverse-mode differentiable
+        under every adjoint.  ``False``: one forward-only controller pass
+        (no second sweep — the fastest way to *sample*; the serving engine
+        uses it), not reverse-differentiable.  Results are bitwise identical
+        between the two modes.
+    adjoint:
+        Phase-2 adjoint (``bounded=True``): ``"full"`` (O(n) activations),
+        ``"recursive"`` (remat at ``remat_chunk`` granularity), or
+        ``"reversible"`` (O(1) memory — backward reconstruction along the
+        realized grid).  Gradients are those of the discrete scheme on the
+        realized grid (the controller is detached).
 
     Example
     -------
     >>> vbt = virtual_brownian_tree(key, 0.0, 1.0, shape=(3,))
-    >>> out = integrate_adaptive("ees25", term, y0, vbt, args, rtol=1e-3)
+    >>> out = integrate_adaptive("ees25", term, y0, vbt, args, rtol=1e-3,
+    ...                          adjoint="reversible")
     >>> out.y_final, int(out.n_accepted), int(out.n_rejected)
     """
-    solver = _resolve_solver(solver)
-    if t0 is None:
-        t0 = driver.t0 if driver is not None else 0.0
-    if t1 is None:
-        t1 = driver.t1 if driver is not None else 1.0
-    t0, t1 = float(t0), float(t1)
-    if not t1 > t0:
-        raise ValueError(f"need t1 > t0, got t0={t0}, t1={t1}")
-    span = t1 - t0
+    solver = resolve_solver(solver, require_error_estimate=True)
+    if adjoint not in ("full", "recursive", "reversible"):
+        raise ValueError(f"unknown adjoint {adjoint!r}")
+    if not bounded and adjoint != "full":
+        raise ValueError(
+            f"bounded=False is the single forward-only controller pass and "
+            f"cannot host the {adjoint!r} adjoint; use bounded=True "
+            "(realize-then-solve) for gradients"
+        )
+    t0, t1 = _window(driver, t0, t1)
+    _check_driver(term, driver)
     if h0 is None:
-        h0 = span / 16.0
-    has_noise = getattr(term, "noise", "diagonal") != "none"
-    if has_noise and driver is None:
-        raise ValueError(
-            "term has noise but no driver was given; pass a "
-            "VirtualBrownianTree (or set term.noise='none' for ODE mode)"
+        h0 = (t1 - t0) / 16.0
+
+    if not bounded:
+        # Single pass: the controller loop IS the solve (gradients not
+        # stopped, so an accidental jax.grad fails loudly at the while_loop
+        # instead of silently returning zeros).
+        final = _controller_loop(
+            solver, term, y0, driver, args, t0=t0, t1=t1, rtol=rtol,
+            atol=atol, h0=h0, safety=safety, icoeff=icoeff, pcoeff=pcoeff,
+            max_steps=int(max_steps), save_at=save_at, record_grid=False,
         )
-    if checkpoint_steps and not bounded:
-        raise ValueError("checkpoint_steps requires bounded=True")
+        y, t, h, _, _, na, nr, ys_out, _, _ = final
+        return AdaptiveResult(y_final=y, ys=ys_out, t_final=t, h_final=h,
+                              n_accepted=na, n_rejected=nr)
 
-    tdt = jnp.result_type(float)
-    eps_end = 1e-9 * span
-    h_floor = 1e-7 * span
-    k_exp = 2.0  # embedded pair is (order, 1): exponent 1/(q+1) with q = 1
+    from .adjoint import solve
 
-    if save_at is not None:
-        save_ts = jnp.asarray(save_at, tdt)
-        if save_ts.ndim != 1:
-            raise ValueError(f"save_at must be 1-D, got shape {save_ts.shape}")
-
-    def err_norm(err, y_old, y_new):
-        parts = []
-        for e, a, b in zip(jax.tree_util.tree_leaves(err),
-                           jax.tree_util.tree_leaves(y_old),
-                           jax.tree_util.tree_leaves(y_new)):
-            sc = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
-            parts.append(((e / sc) ** 2).ravel())
-        ms = jnp.mean(jnp.concatenate(parts))
-        # Clamp inside the sqrt: the masked no-op trials after t reaches t1
-        # run with h_eff == 0 and err == 0, and d(sqrt)/dx at 0 is inf —
-        # which would leak NaN through the lax.scan select despite the
-        # branch being discarded (0 * inf).
-        return jnp.sqrt(jnp.maximum(ms, _ERR_FLOOR * _ERR_FLOOR))
-
-    def fill_saves(ys_out, accept, t_old, t_new, y_old, y_new):
-        frac = (save_ts - t_old) / jnp.maximum(t_new - t_old, h_floor)
-        mask = (save_ts > t_old) & (save_ts <= t_new + eps_end) & accept
-
-        def leaf(out, a, b):
-            f = jnp.clip(frac, 0.0, 1.0).reshape((-1,) + (1,) * a.ndim)
-            m = mask.reshape((-1,) + (1,) * a.ndim)
-            return jnp.where(m, a + f.astype(a.dtype) * (b - a), out)
-
-        return jax.tree_util.tree_map(leaf, ys_out, y_old, y_new)
-
-    def trial(carry):
-        y, t, h, w, en_prev, na, nr, ys_out = carry
-        h_eff = jnp.minimum(h, t1 - t)
-        if has_noise:
-            w_prop = driver.weval(t + h_eff)
-            dW = tree_sub(w_prop, w)
-        else:
-            w_prop, dW = w, None
-        y_new, err = solver.step_with_error(term, y, t, h_eff, dW, args)
-        # Detach the controller: the step-size sequence is treated as data,
-        # so gradients are those of the discrete scheme on the realized grid.
-        # Differentiating *through* the controller compounds pow-rule factors
-        # (and the Brownian tree's rough time-interpolation) across steps
-        # into astronomically ill-conditioned cotangents.
-        en = jax.lax.stop_gradient(err_norm(err, y, y_new))
-        accept = en <= 1.0
-        grow = safety * en ** (-(icoeff + pcoeff) / k_exp) \
-            * jnp.maximum(en_prev, _ERR_FLOOR) ** (pcoeff / k_exp)
-        shrink = safety * en ** (-1.0 / k_exp)
-        factor = jnp.where(accept, jnp.clip(grow, 0.2, 2.0),
-                           jnp.clip(shrink, 0.1, 1.0))
-        h_next = jnp.maximum(h_eff * factor, h_floor)
-        if save_at is not None:
-            ys_out = fill_saves(ys_out, accept, t, t + h_eff, y, y_new)
-        y = _tree_select(accept, y_new, y)
-        w = _tree_select(accept, w_prop, w)
-        t = jnp.where(accept, t + h_eff, t)
-        en_prev = jnp.where(accept, en, en_prev)
-        return (y, t, h_next, w, en_prev,
-                na + accept.astype(jnp.int32), nr + (~accept).astype(jnp.int32),
-                ys_out)
-
-    w0 = driver.weval(t0) if has_noise else 0.0  # exact zeros for a VBT
-    ys0 = None
-    if save_at is not None:
-        ys0 = jax.tree_util.tree_map(
-            lambda l: jnp.broadcast_to(l, (save_ts.shape[0],) + jnp.shape(l)), y0
-        )
-    init = (y0, jnp.asarray(t0, tdt), jnp.asarray(h0, tdt), w0,
-            jnp.asarray(1.0, tdt), jnp.int32(0), jnp.int32(0), ys0)
-
-    def not_done(carry):
-        return (t1 - carry[1]) > eps_end
-
-    if bounded:
-        step = jax.checkpoint(trial) if checkpoint_steps else trial
-
-        def body(carry, _):
-            return _tree_select(not_done(carry), step(carry), carry), None
-
-        final, _ = jax.lax.scan(body, init, None, length=max_steps)
-    else:
-        def cond(carry):
-            return not_done(carry) & (carry[5] + carry[6] < max_steps)
-
-        final = jax.lax.while_loop(cond, trial, init)
-
-    y, t, h, _, _, na, nr, ys_out = final
-    return AdaptiveResult(y_final=y, ys=ys_out, t_final=t, h_final=h,
-                          n_accepted=na, n_rejected=nr)
-
-
-def integrate_fixed(solver, term, y0, driver=None, n_steps: int = 64,
-                    args: Any = None, *, t0: Optional[float] = None,
-                    t1: Optional[float] = None):
-    """Fixed-grid solve drawing increments from ``driver`` (matched-path runs).
-
-    Integrates with ``n_steps`` uniform steps, each increment queried via
-    ``driver.increment_over`` — so a fixed-grid solve and an adaptive solve
-    over the *same* :class:`~repro.core.brownian.VirtualBrownianTree` see the
-    same underlying Brownian path, which is what strong-error comparisons
-    require.  ``driver=None`` runs in ODE mode (``term.noise`` must be
-    ``"none"``; ``t0``/``t1`` default to 0/1).  Returns the final state only
-    (use :func:`repro.core.sdeint.sdeint` for saved trajectories on a fixed
-    grid).
-    """
-    solver = _resolve_solver(solver)
-    if t0 is None:
-        t0 = driver.t0 if driver is not None else 0.0
-    if t1 is None:
-        t1 = driver.t1 if driver is not None else 1.0
-    t0, t1 = float(t0), float(t1)
-    h = (t1 - t0) / n_steps
-    has_noise = getattr(term, "noise", "diagonal") != "none"
-    if has_noise and driver is None:
-        raise ValueError(
-            "term has noise but no driver was given; pass a Brownian driver "
-            "(or set term.noise='none' for ODE mode)"
-        )
-    state0 = solver.init(term, t0, y0, args)
-
-    def one(state, n):
-        t = t0 + n * h
-        dW = driver.increment_over(t, t + h) if has_noise else None
-        return solver.step(term, state, t, h, dW, args), None
-
-    state, _ = jax.lax.scan(one, state0, jnp.arange(n_steps))
-    return solver.extract(state)
+    rg = realize_grid(
+        solver, term, y0, driver, args, t0=t0, t1=t1, rtol=rtol, atol=atol,
+        h0=h0, safety=safety, icoeff=icoeff, pcoeff=pcoeff,
+        max_steps=int(max_steps),
+    )
+    out = solve(solver, term, y0, rg.grid, args, adjoint=adjoint,
+                save_at=save_at, remat_chunk=remat_chunk)
+    return AdaptiveResult(y_final=out.y_final, ys=out.ys, t_final=rg.t_final,
+                          h_final=rg.h_final, n_accepted=rg.n_accepted,
+                          n_rejected=rg.n_rejected)

@@ -1,4 +1,5 @@
-"""The three adjoints of the paper.
+"""One generalized ``solve()`` over any :class:`~repro.core.grid.TimeGrid`,
+under the paper's three adjoints.
 
 * **Full** (discretise-then-optimise): plain autodiff through ``lax.scan``;
   exact gradients of the discrete computation, O(n) activation memory.
@@ -11,13 +12,24 @@
   on a manifold, Algorithm 2: the stage adjoints live on the cotangent bundle
   automatically because every group action is an ordinary JAX computation).
 
-All three share one calling convention built around segments of
-``save_every`` steps, so the saved trajectory is identical bitwise across
-adjoints (the solver steps are the same computation).
+All three run over the *same* grid abstraction: a uniform grid (the classic
+fixed-grid solve — the static step size compiles to exactly the computation
+this module always ran) or an adaptively **realized** grid from
+:func:`repro.core.adaptive.realize_grid` — per-step ``(t, h[n], dW[n])``
+triples with zero-length padding steps masked out.  Reversibility never
+needed uniform steps, only that the backward pass replays the same step
+sequence; the grid's ``ts`` array pins that down, and the bitwise-
+reproducible drivers make every ``dW[n]`` recomputable in O(1) memory during
+the backward sweep.  Step rejection happened at realization time, so the
+two-register reverse step needs no third (3S*) register.
+
+Saved trajectories come in two forms, identical bitwise across adjoints:
+``save_every`` (every k-th step, fixed grids) and ``save_at`` (dense output
+linearly interpolated onto an arbitrary time grid — any grid, with the
+cotangents of each save point injected along the reversible backward sweep).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, NamedTuple, Optional
 
@@ -26,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .brownian import BrownianPath
-from .solvers import tree_add, tree_scale
+from .grid import TimeGrid, fill_saves, save_mask
+from .pytree import tree_add, tree_select
 
 __all__ = ["SolveResult", "solve"]
 
@@ -56,6 +69,17 @@ def _ct_add(a, b):
     return jax.tree_util.tree_map(add, a, b)
 
 
+def _ct_mask(live, ct):
+    """Zero a cotangent pytree where ``live`` is False (float0 passes through)."""
+
+    def m(x):
+        if hasattr(x, "dtype") and x.dtype == jax.dtypes.float0:
+            return x
+        return jnp.where(live, x, jnp.zeros_like(x))
+
+    return jax.tree_util.tree_map(m, ct)
+
+
 def _segment_counts(n_steps: int, save_every: Optional[int]):
     if save_every is None:
         return 1, n_steps
@@ -64,42 +88,159 @@ def _segment_counts(n_steps: int, save_every: Optional[int]):
     return n_steps // save_every, save_every
 
 
+def _as_grid(grid) -> TimeGrid:
+    if isinstance(grid, TimeGrid):
+        return grid
+    if isinstance(grid, BrownianPath):
+        return TimeGrid.from_path(grid)
+    raise TypeError(
+        f"solve() integrates over a TimeGrid (or a BrownianPath, wrapped "
+        f"automatically); got {type(grid).__name__} — build one with "
+        "TimeGrid.uniform(...) or realize_grid(...)"
+    )
+
+
+def _save_consts(grid: TimeGrid, save_at):
+    """(save_ts, eps_end, h_floor) — same constants the realization loop uses,
+    so realized-grid dense output is bitwise-identical to the single-pass
+    accept/reject fill."""
+    save_ts = jnp.asarray(save_at, jnp.result_type(float))
+    if save_ts.ndim != 1:
+        raise ValueError(f"save_at must be 1-D, got shape {save_ts.shape}")
+    span = grid.t1 - grid.t0
+    return save_ts, 1e-9 * span, 1e-7 * span
+
+
+def _broadcast_saves(y0, n_saves: int):
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (n_saves,) + jnp.shape(l)), y0
+    )
+
+
+def _make_stepper(solver, term, grid: TimeGrid, args, masked):
+    """One grid step ``((state, w), n) -> ((new_state, w_next), (t, h))``;
+    zero-length padding steps of a realized grid are a no-op.
+
+    When the driver supports point evaluation (a Virtual Brownian Tree), the
+    forward sweeps *stream* the path: ``w`` carries ``W(ts[n])`` so each step
+    costs one tree descent instead of the two a fresh ``increment_over``
+    query pays — bitwise-identical increments, since ``weval`` is a pure
+    function of ``(key, t)``.  (The reversible *backward* sweep keeps the
+    per-step ``grid.increment(n)`` recompute: it needs increments in
+    arbitrary order with no carried state.)  Returns ``(init_w, step)``;
+    ``init_w()`` builds the initial carry element.
+    """
+    driver = grid.driver
+    stream = driver is not None and hasattr(driver, "weval")
+
+    if stream:
+        def init_w():
+            return driver.weval(grid.ts[0])
+
+        def step(carry, n):
+            state, w = carry
+            t, h = grid.t_of(n), grid.h_of(n)
+            w_next = driver.weval(grid.ts[n + 1])
+            dW = jax.tree_util.tree_map(jnp.subtract, w_next, w)
+            new = solver.step(term, state, t, h, dW, args)
+            if masked:
+                new = tree_select(h > 0, new, state)
+            return (new, w_next), (t, h)
+    else:
+        def init_w():
+            return None
+
+        def step(carry, n):
+            state, w = carry
+            t, h, dW = grid.t_of(n), grid.h_of(n), grid.increment(n)
+            new = solver.step(term, state, t, h, dW, args)
+            if masked:
+                new = tree_select(h > 0, new, state)
+            return (new, w), (t, h)
+
+    return init_w, step
+
+
+def _saving_step(solver, term, grid: TimeGrid, args, masked, save_ts,
+                 eps_end, h_floor):
+    """Scan body over ``((state, w), ys)`` carrying the dense-output buffer —
+    the ONE spelling of the step+fill invariant every adjoint's forward
+    pass shares (bitwise-identical ``ys`` across adjoints)."""
+    init_w, step = _make_stepper(solver, term, grid, args, masked)
+
+    def one(carry, n):
+        sw, ys = carry
+        new_sw, (t, h) = step(sw, n)
+        live = (h > 0) if masked else True
+        ys = fill_saves(ys, save_ts, live, t, grid.ts[n + 1],
+                        solver.extract(sw[0]), solver.extract(new_sw[0]),
+                        grid.t1, eps_end, h_floor)
+        return (new_sw, ys), None
+
+    return init_w, one
+
+
 # ---------------------------------------------------------------------------
 # Full & recursive adjoints: scan-of-scans, optionally rematerialised.
 # ---------------------------------------------------------------------------
 
-def _solve_scan(solver, term, y0, bm: BrownianPath, args, save_every, remat_chunk):
-    n_seg, seg_len = _segment_counts(bm.n_steps, save_every)
-    h = bm.h
+def _solve_scan(solver, term, y0, grid: TimeGrid, args, save_every, remat_chunk,
+                save_at=None):
+    masked = not grid.is_uniform
 
-    def one_step(state, n):
-        return (
-            solver.step(term, state, bm.t_of(n), h, bm.increment(n), args),
-            None,
-        )
+    if save_at is not None:
+        # Dense output on an arbitrary time grid: one flat scan carrying the
+        # save buffer, filled by whichever step covers each save time.
+        save_ts, eps_end, h_floor = _save_consts(grid, save_at)
+        init_w, one = _saving_step(solver, term, grid, args, masked, save_ts,
+                                   eps_end, h_floor)
+        carry0 = ((solver.init(term, grid.t0, y0, args), init_w()),
+                  _broadcast_saves(y0, len(save_at)))
+
+        if remat_chunk is not None:
+            if grid.n_steps % remat_chunk != 0:
+                raise ValueError("n_steps must be divisible by remat_chunk")
+
+            @jax.checkpoint
+            def chunk(carry, c0):
+                carry, _ = jax.lax.scan(one, carry, c0 + jnp.arange(remat_chunk))
+                return carry, None
+
+            starts = remat_chunk * jnp.arange(grid.n_steps // remat_chunk)
+            ((state_f, _), ys), _ = jax.lax.scan(chunk, carry0, starts)
+        else:
+            ((state_f, _), ys), _ = jax.lax.scan(
+                one, carry0, jnp.arange(grid.n_steps))
+        return SolveResult(solver.extract(state_f), ys)
+
+    n_seg, seg_len = _segment_counts(grid.n_steps, save_every)
+    init_w, step = _make_stepper(solver, term, grid, args, masked)
+
+    def one_step(carry, n):
+        return step(carry, n)[0], None
 
     if remat_chunk is None:
-        def segment(state, n0):
-            state, _ = jax.lax.scan(one_step, state, n0 + jnp.arange(seg_len))
-            return state, (solver.extract(state) if save_every else None)
+        def segment(carry, n0):
+            carry, _ = jax.lax.scan(one_step, carry, n0 + jnp.arange(seg_len))
+            return carry, (solver.extract(carry[0]) if save_every else None)
     else:
         if seg_len % remat_chunk != 0:
             raise ValueError("segment length must be divisible by remat_chunk")
 
         @jax.checkpoint
-        def chunk(state, c0):
-            state, _ = jax.lax.scan(one_step, state, c0 + jnp.arange(remat_chunk))
-            return state, None
+        def chunk(carry, c0):
+            carry, _ = jax.lax.scan(one_step, carry, c0 + jnp.arange(remat_chunk))
+            return carry, None
 
-        def segment(state, n0):
-            state, _ = jax.lax.scan(
-                chunk, state, n0 + remat_chunk * jnp.arange(seg_len // remat_chunk)
+        def segment(carry, n0):
+            carry, _ = jax.lax.scan(
+                chunk, carry, n0 + remat_chunk * jnp.arange(seg_len // remat_chunk)
             )
-            return state, (solver.extract(state) if save_every else None)
+            return carry, (solver.extract(carry[0]) if save_every else None)
 
-    state0 = solver.init(term, bm.t0, y0, args)
+    carry0 = (solver.init(term, grid.t0, y0, args), init_w())
     starts = seg_len * jnp.arange(n_seg)
-    state_f, ys = jax.lax.scan(segment, state0, starts)
+    (state_f, _), ys = jax.lax.scan(segment, carry0, starts)
     return SolveResult(solver.extract(state_f), ys if save_every else None)
 
 
@@ -107,39 +248,49 @@ def _solve_scan(solver, term, y0, bm: BrownianPath, args, save_every, remat_chun
 # Reversible adjoint (Algorithm 1 / 2).
 # ---------------------------------------------------------------------------
 
-def _solve_reversible(solver, term, y0, bm: BrownianPath, args, save_every):
-    n_steps = bm.n_steps
+def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
+                      save_at=None):
+    n_steps = grid.n_steps
     n_seg, seg_len = _segment_counts(n_steps, save_every)
-    h = bm.h
-    bm_static = dataclasses.replace(bm, key=None)  # template; key passed explicitly
+    masked = not grid.is_uniform
+    if save_at is not None:
+        save_ts, eps_end, h_floor = _save_consts(grid, save_at)
 
-    def forward(key, y0, args):
-        b = dataclasses.replace(bm_static, key=key)
+    def forward(grid, y0, args):
+        state0 = solver.init(term, grid.t0, y0, args)
 
-        def one_step(state, n):
-            return solver.step(term, state, b.t_of(n), h, b.increment(n), args), None
+        if save_at is not None:
+            init_w, one = _saving_step(solver, term, grid, args, masked,
+                                       save_ts, eps_end, h_floor)
+            ((state_f, _), ys), _ = jax.lax.scan(
+                one, ((state0, init_w()), _broadcast_saves(y0, len(save_at))),
+                jnp.arange(n_steps))
+            return state_f, ys
 
-        def segment(state, n0):
-            state, _ = jax.lax.scan(one_step, state, n0 + jnp.arange(seg_len))
-            return state, (solver.extract(state) if save_every else None)
+        init_w, step = _make_stepper(solver, term, grid, args, masked)
 
-        state0 = solver.init(term, b.t0, y0, args)
-        state_f, ys = jax.lax.scan(segment, state0, seg_len * jnp.arange(n_seg))
+        def segment(carry, n0):
+            carry, _ = jax.lax.scan(
+                lambda c, n: (step(c, n)[0], None),
+                carry, n0 + jnp.arange(seg_len))
+            return carry, (solver.extract(carry[0]) if save_every else None)
+
+        (state_f, _), ys = jax.lax.scan(segment, (state0, init_w()),
+                                        seg_len * jnp.arange(n_seg))
         return state_f, (ys if save_every else None)
 
     @jax.custom_vjp
-    def run(key, y0, args):
-        state_f, ys = forward(key, y0, args)
+    def run(grid, y0, args):
+        state_f, ys = forward(grid, y0, args)
         return SolveResult(solver.extract(state_f), ys)
 
-    def run_fwd(key, y0, args):
-        state_f, ys = forward(key, y0, args)
-        return SolveResult(solver.extract(state_f), ys), (key, state_f, y0, args)
+    def run_fwd(grid, y0, args):
+        state_f, ys = forward(grid, y0, args)
+        return SolveResult(solver.extract(state_f), ys), (grid, state_f, args)
 
     def run_bwd(res, ct):
-        key, state_f, y0, args = res
+        grid, state_f, args = res
         ct_yf, ct_ys = ct.y_final, ct.ys
-        b = dataclasses.replace(bm_static, key=key)
 
         # Inject the terminal cotangent through `extract`.
         _, vjp_ex = jax.vjp(solver.extract, state_f)
@@ -148,12 +299,16 @@ def _solve_reversible(solver, term, y0, bm: BrownianPath, args, save_every):
 
         def body(carry, n):
             state, ct_state, ct_args = carry
-            t = b.t_of(n)
-            dW = b.increment(n)
+            t, h, dW = grid.t_of(n), grid.h_of(n), grid.increment(n)
+            live = (h > 0) if masked else True
             # 1. Reconstruct the pre-step state (O(h^{m+1}) drift for EES;
-            #    exact for algebraically reversible solvers).
+            #    exact for algebraically reversible solvers).  Padding steps
+            #    were no-ops forward, so they are no-ops backward.
             prev = solver.reverse(term, state, t, h, dW, args)
-            # 2. If step n produced a saved output, add its cotangent now.
+            if masked:
+                prev = tree_select(live, prev, state)
+            # 2. Cotangents of saved outputs produced by this step.
+            pick_old = None
             if save_every is not None:
                 is_save = (n + 1) % seg_len == 0
                 idx = jnp.clip((n + 1) // seg_len - 1, 0, n_seg - 1)
@@ -163,12 +318,41 @@ def _solve_reversible(solver, term, y0, bm: BrownianPath, args, save_every):
                 _, vex = jax.vjp(solver.extract, state)
                 (inc,) = vex(picked)
                 ct_state = tree_add(ct_state, inc)
+            if save_at is not None:
+                # Forward wrote ys[j] = y_old + frac_j (y_new − y_old) at the
+                # saves covered by this step (save_mask is disjoint across
+                # steps, so exactly one step injects each save's cotangent);
+                # split it into its y_new part (through the post-step state,
+                # now) and its y_old part (directly onto the reconstructed
+                # state, below).
+                t_new = grid.ts[n + 1]
+                m = save_mask(save_ts, live, t, t_new, grid.t1, eps_end)
+                frac = jnp.clip(
+                    (save_ts - t) / jnp.maximum(t_new - t, h_floor), 0.0, 1.0)
+                w_new, w_old = m * frac, m * (1.0 - frac)
+
+                def pick(w, c):
+                    return jnp.einsum("s,s...->...", w.astype(c.dtype), c)
+
+                _, vex = jax.vjp(solver.extract, state)
+                (inc,) = vex(jax.tree_util.tree_map(
+                    lambda c: pick(w_new, c), ct_ys))
+                ct_state = tree_add(ct_state, inc)
+                pick_old = jax.tree_util.tree_map(
+                    lambda c: pick(w_old, c), ct_ys)
             # 3. Re-play the step under vjp for exact local cotangents.
             def step_fn(s, a):
                 return solver.step(term, s, t, h, dW, a)
 
             _, vjp = jax.vjp(step_fn, prev, args)
             ct_prev, ct_args_inc = vjp(ct_state)
+            if masked:
+                ct_prev = tree_select(live, ct_prev, ct_state)
+                ct_args_inc = _ct_mask(live, ct_args_inc)
+            if pick_old is not None:
+                _, vex_prev = jax.vjp(solver.extract, prev)
+                (inc_prev,) = vex_prev(pick_old)
+                ct_prev = tree_add(ct_prev, inc_prev)
             return (prev, ct_prev, _ct_add(ct_args, ct_args_inc)), None
 
         (state0_rec, ct_state0, ct_args), _ = jax.lax.scan(
@@ -180,16 +364,29 @@ def _solve_reversible(solver, term, y0, bm: BrownianPath, args, save_every):
         y0_rec = solver.extract(state0_rec)
 
         def init_fn(y, a):
-            return solver.init(term, b.t0, y, a)
+            return solver.init(term, grid.t0, y, a)
 
         _, vjp0 = jax.vjp(init_fn, y0_rec, args)
         ct_y0, ct_args_inc = vjp0(ct_state0)
         ct_args = _ct_add(ct_args, ct_args_inc)
-        ct_key = np.zeros(jnp.shape(key), dtype=jax.dtypes.float0)
-        return (ct_key, ct_y0, ct_args)
+        if save_at is not None:
+            # Save entries no step covered (at/before t0, or past where a
+            # budget-exhausted realization stopped) still hold the broadcast
+            # initial state — their cotangents flow straight to y0.  Exact
+            # complement of the per-step save_mask coverage: the eps slack
+            # exists only when the grid actually reached t1.
+            t_final = grid.ts[-1]
+            slack = jnp.where(t_final >= grid.t1 - eps_end, eps_end, 0.0)
+            w0 = (save_ts <= grid.t0) | (save_ts > t_final + slack)
+            ct_y0 = jax.tree_util.tree_map(
+                lambda cy, c: cy + jnp.einsum(
+                    "s,s...->...", w0.astype(c.dtype), c),
+                ct_y0, ct_ys)
+        # The grid is data: zero cotangents for ts/hs and the driver's key.
+        return (_float0_like(grid), ct_y0, ct_args)
 
     run.defvjp(run_fwd, run_bwd)
-    return run(bm.key, y0, args)
+    return run(grid, y0, args)
 
 
 # ---------------------------------------------------------------------------
@@ -200,14 +397,20 @@ def solve(
     solver,
     term,
     y0,
-    bm: BrownianPath,
+    grid,
     args=None,
     *,
     adjoint: str = "full",
     save_every: Optional[int] = None,
+    save_at=None,
     remat_chunk: Optional[int] = None,
 ) -> SolveResult:
-    """Integrate ``term`` over the Brownian grid of ``bm`` with ``solver``.
+    """Integrate ``term`` over ``grid`` with ``solver`` — THE solve loop.
+
+    Every integration in the repo bottoms out here: fixed uniform grids,
+    matched-driver grids over a Virtual Brownian Tree, and adaptively
+    realized (non-uniform) grids all run the same scan, under the same three
+    adjoints.
 
     Parameters
     ----------
@@ -221,43 +424,70 @@ def solve(
         solvers).
     y0:
         Initial state pytree.
-    bm:
-        A fixed-grid :class:`~repro.core.brownian.BrownianPath`; its
-        ``n_steps`` / span define the integration grid.
+    grid:
+        A :class:`~repro.core.grid.TimeGrid` — uniform
+        (``TimeGrid.uniform(t0, t1, n, driver)``) or realized
+        (:func:`~repro.core.adaptive.realize_grid`); a fixed-grid
+        :class:`~repro.core.brownian.BrownianPath` is accepted directly and
+        wrapped.  Zero-length padding steps of a realized grid are masked to
+        no-ops in every adjoint.
     args:
         Passed to the drift/diffusion callables.
     adjoint:
       * ``"full"``       — O(n) memory, exact discrete gradients.
       * ``"recursive"``  — remat at ``remat_chunk`` granularity (default
         ~sqrt(segment)), O(sqrt n) memory.
-      * ``"reversible"`` — O(1) memory via reverse reconstruction.
+      * ``"reversible"`` — O(1) memory via reverse reconstruction along the
+        grid — uniform or realized alike (the backward sweep replays the
+        same ``(t, h[n], dW[n])`` sequence; rejection already happened at
+        realization time, so no third register is needed).
     save_every:
         Saves ``extract(state)`` every that many steps (must divide
-        ``n_steps``); the saved trajectory participates in autodiff under
-        every adjoint mode.
+        ``n_steps``; on a realized grid this counts padded trial slots, so
+        prefer ``save_at`` there).  Mutually exclusive with ``save_at``.
+    save_at:
+        1-D array of output times: dense output linearly interpolated
+        between the grid steps covering each time, under every adjoint
+        (reversible injects each save cotangent during the backward sweep).
+        Entries at or before ``t0`` (or beyond a budget-exhausted grid's
+        end) hold ``y0``.
 
     Returns
     -------
-    :class:`SolveResult` — ``y_final`` (state at ``t1``) and ``ys`` (the
-    ``(n_steps/save_every, ...)`` saved trajectory, or ``None``).
+    :class:`SolveResult` — ``y_final`` (state at the grid's end) and ``ys``
+    (the saved trajectory: ``(n_steps/save_every, ...)`` or
+    ``(len(save_at), ...)``, or ``None``).
 
     Example
     -------
-    >>> bm = brownian_path(key, 0.0, 1.0, 1000, shape=(4,))
-    >>> out = solve(get_solver("ees25"), term, jnp.ones(4), bm, params,
+    >>> grid = TimeGrid.uniform(0.0, 1.0, 1000, brownian_path(key, 0.0, 1.0,
+    ...                                                       1000, shape=(4,)))
+    >>> out = solve(get_solver("ees25"), term, jnp.ones(4), grid, params,
     ...             adjoint="reversible")
     >>> out.y_final.shape
     (4,)
     """
+    grid = _as_grid(grid)
+    if save_at is not None and save_every is not None:
+        raise ValueError("save_every and save_at are mutually exclusive")
+    if remat_chunk is not None and adjoint != "recursive":
+        raise ValueError(
+            f"remat_chunk configures the recursive adjoint's checkpoint "
+            f"granularity and has no effect under adjoint={adjoint!r} — "
+            "drop it or use adjoint='recursive'"
+        )
     if adjoint == "full":
-        return _solve_scan(solver, term, y0, bm, args, save_every, None)
+        return _solve_scan(solver, term, y0, grid, args, save_every, None,
+                           save_at)
     if adjoint == "recursive":
         if remat_chunk is None:
-            seg = save_every if save_every is not None else bm.n_steps
+            seg = save_every if save_every is not None else grid.n_steps
             remat_chunk = max(1, int(math.isqrt(seg)))
             while seg % remat_chunk != 0:
                 remat_chunk -= 1
-        return _solve_scan(solver, term, y0, bm, args, save_every, remat_chunk)
+        return _solve_scan(solver, term, y0, grid, args, save_every,
+                           remat_chunk, save_at)
     if adjoint == "reversible":
-        return _solve_reversible(solver, term, y0, bm, args, save_every)
+        return _solve_reversible(solver, term, y0, grid, args, save_every,
+                                 save_at)
     raise ValueError(f"unknown adjoint {adjoint!r}")

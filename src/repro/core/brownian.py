@@ -42,20 +42,36 @@ def _is_simple_shape(x) -> bool:
     return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
 
 
+def _stacked_grid_increments(driver, ts):
+    """All per-step increments of grid ``ts``, stacked on a leading axis.
+
+    Materialises O(len(ts)) memory — analysis/tests; the solve loops call
+    ``grid_increment`` per step instead.  Shared by every driver.
+    """
+    ns = jnp.arange(ts.shape[0] - 1)
+    return jax.vmap(lambda n: driver.grid_increment(ts, n))(ns)
+
+
 @runtime_checkable
 class BrownianDriver(Protocol):
     """What a Brownian driver must provide: increments over time intervals.
 
     ``increment_over(s, t)`` returns ``W(t) - W(s)`` as a pytree matching the
-    driver's ``shape``.  Fixed-grid drivers additionally expose the grid
-    (``n_steps`` / ``t_of`` / ``increment``); the Virtual Brownian Tree
-    additionally exposes point evaluation ``weval(t)``.
+    driver's ``shape``.  ``grid_increment(ts, n)`` is the step-indexed form a
+    :class:`~repro.core.grid.TimeGrid` solve consumes: the increment over step
+    ``n`` of the (possibly non-uniform) grid ``ts`` — O(1)-memory recomputable
+    in any order, which is what the reversible adjoint's backward
+    reconstruction sweep relies on.  Fixed-grid drivers additionally expose
+    their native grid (``n_steps`` / ``t_of`` / ``increment``); the Virtual
+    Brownian Tree additionally exposes point evaluation ``weval(t)``.
     """
 
     t0: float
     t1: float
 
     def increment_over(self, s, t): ...
+
+    def grid_increment(self, ts, n): ...
 
 
 @jax.tree_util.register_pytree_node_class
@@ -130,6 +146,30 @@ class BrownianPath:
                 is_leaf=_is_simple_shape,
             )
         return jax.lax.fori_loop(n0, n1, add, zero)
+
+    def grid_increment(self, ts, n):
+        """dW over step ``n`` of the grid ``ts`` — which must be this path's
+        own uniform grid (``len(ts) == n_steps + 1``).
+
+        The fixed-grid driver draws increments *by step index*
+        (``fold_in(key, n)``), so a grid of any other length would silently
+        rescale or reorder the noise; build such grids over a
+        :class:`VirtualBrownianTree` instead.
+        """
+        n_grid = ts.shape[0] - 1
+        if n_grid != self.n_steps:
+            raise ValueError(
+                f"grid of {n_grid} steps does not match this BrownianPath's "
+                f"native {self.n_steps}-step grid; increments are indexed by "
+                "step (fold_in(key, n)) — use a VirtualBrownianTree for "
+                "arbitrary (realized) grids"
+            )
+        return self.increment(n)
+
+    def grid_increments(self, ts):
+        """Stacked per-step increments of grid ``ts`` (see
+        :func:`_stacked_grid_increments`)."""
+        return _stacked_grid_increments(self, ts)
 
     def path(self) -> jax.Array:
         """Cumulative path W_{t_n}, shape (n_steps+1, *shape) — for analysis only."""
@@ -243,6 +283,20 @@ class VirtualBrownianTree:
         """W(t) - W(s) for arbitrary ``t0 <= s <= t <= t1`` (two tree descents)."""
         ws, wt = self.weval(s), self.weval(t)
         return jax.tree_util.tree_map(jnp.subtract, wt, ws)
+
+    def grid_increment(self, ts, n):
+        """dW over step ``n`` of an arbitrary (realized) grid ``ts``.
+
+        A pure function of ``(key, ts[n], ts[n+1])``: re-queries — including
+        the reversible adjoint's backward sweep and a re-solve on the same
+        realized grid — see identical bits.
+        """
+        return self.increment_over(ts[n], ts[n + 1])
+
+    def grid_increments(self, ts):
+        """Stacked per-step increments of grid ``ts`` (see
+        :func:`_stacked_grid_increments`)."""
+        return _stacked_grid_increments(self, ts)
 
 
 def virtual_brownian_tree(key, t0, t1, shape=(), dtype=jnp.float32,

@@ -23,7 +23,7 @@ from __future__ import annotations
 from typing import Optional
 
 from .lie import ManifoldSDETerm
-from .solvers import tree_axpy, tree_scale
+from .pytree import tree_axpy, tree_scale
 from .williamson import EES25_2N, EES27_2N, LowStorage
 
 __all__ = [

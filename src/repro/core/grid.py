@@ -1,0 +1,155 @@
+"""The realized-grid abstraction: one time grid, any driver, any solver.
+
+A :class:`TimeGrid` is the single object every solve in this repo integrates
+over: an array of step times ``ts`` (possibly non-uniform, possibly with
+zero-length padding steps at the tail), per-step sizes, and a Brownian driver
+from which each step's ``(t, h, dW)`` triple is derived on demand.  Two
+constructors cover the two ways grids come into existence:
+
+* :meth:`TimeGrid.uniform` / :meth:`TimeGrid.from_path` — fixed grids.  A
+  uniform grid keeps its step size as a *static* Python float, so the solve
+  loop compiles to exactly the computation the fixed-grid stack always ran
+  (bitwise-identical results, no masking).
+* :func:`repro.core.adaptive.realize_grid` — adaptive grids.  The PI
+  accept/reject controller runs once, forward-only and gradient-stopped, and
+  emits the accepted-step times; the grid is padded to the static trial
+  budget with zero-length steps (``h == 0``), which every solve masks out.
+
+Nothing about reversibility requires uniform steps — only that the backward
+pass replays the *same* grid, which ``ts`` pins down and the bitwise-
+reproducible drivers guarantee (every ``dW`` is a pure function of
+``(key, ts[n], ts[n+1])``).  That is what lets the reversible adjoint's
+two-register backward sweep run over an adaptively realized grid: rejection
+already happened during realization, so no third register is ever needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TimeGrid", "fill_saves", "save_mask"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TimeGrid:
+    """A (possibly non-uniform) step grid plus the driver that feeds it.
+
+    ``ts`` has shape ``(n_steps + 1,)``; step ``n`` runs over
+    ``[ts[n], ts[n+1]]`` with size ``h_of(n)`` and Brownian increment
+    ``increment(n)``.  ``uniform_h`` is set (a static Python float) iff the
+    grid is uniform — the fixed-grid fast path: ``h_of`` then returns the
+    weakly-typed float the classic solve loop always used, and solves skip
+    the padding mask entirely.  For realized grids ``hs`` holds the exact
+    per-step sizes the controller accepted (``hs[n] == ts[n+1] - ts[n]`` up
+    to the controller's own arithmetic; trailing padding steps have
+    ``hs[n] == 0``).
+
+    ``t0`` / ``t1`` are the *nominal* integration window as static floats
+    (``ts[-1]`` may stop short of ``t1`` when a realization exhausted its
+    trial budget).
+    """
+
+    ts: jax.Array                 # (n_steps + 1,) step times
+    hs: Optional[jax.Array]       # (n_steps,) step sizes, or None if uniform
+    driver: Any                   # BrownianDriver or None (ODE mode)
+    t0: float
+    t1: float
+    uniform_h: Optional[float] = None
+
+    # -- pytree plumbing (ts/hs/driver are children; the window is static) --
+    def tree_flatten(self):
+        return (self.ts, self.hs, self.driver), (self.t0, self.t1, self.uniform_h)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ts, hs, driver = children
+        t0, t1, uniform_h = aux
+        return cls(ts, hs, driver, t0, t1, uniform_h)
+
+    @property
+    def n_steps(self) -> int:
+        return self.ts.shape[0] - 1
+
+    @property
+    def is_uniform(self) -> bool:
+        return self.uniform_h is not None
+
+    def t_of(self, n):
+        return self.ts[n]
+
+    def h_of(self, n):
+        if self.uniform_h is not None:
+            return self.uniform_h
+        return self.hs[n]
+
+    def increment(self, n):
+        """dW over step ``n`` (None in ODE mode)."""
+        if self.driver is None:
+            return None
+        return self.driver.grid_increment(self.ts, n)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def uniform(cls, t0: float, t1: float, n_steps: int, driver=None) -> "TimeGrid":
+        """Uniform ``n_steps``-step grid over ``[t0, t1]``.
+
+        With a :class:`~repro.core.brownian.VirtualBrownianTree` driver this
+        is the matched-path fixed-grid solve (what ``integrate_fixed`` used
+        to do); with ``driver=None`` it is ODE mode.
+        """
+        t0, t1 = float(t0), float(t1)
+        n_steps = int(n_steps)
+        if n_steps < 1:
+            raise ValueError(f"need n_steps >= 1, got {n_steps}")
+        h = (t1 - t0) / n_steps
+        # Identical expression to the classic per-step `t0 + n * h` (int32
+        # step index, weak Python-float h), vectorized — so grid times are
+        # bitwise-equal to what the fixed-grid stack always computed.
+        ts = t0 + jnp.arange(n_steps + 1, dtype=jnp.int32) * h
+        return cls(ts, None, driver, t0, t1, uniform_h=h)
+
+    @classmethod
+    def from_path(cls, bm) -> "TimeGrid":
+        """The native grid of a :class:`~repro.core.brownian.BrownianPath`."""
+        return cls.uniform(bm.t0, bm.t1, bm.n_steps, driver=bm)
+
+
+def save_mask(save_ts, live, t_old, t_new, t1, eps_end):
+    """Which save points step ``[t_old, t_new]`` covers — disjoint across steps.
+
+    A step owns the half-open interval ``(t_old, t_new]``; only the *final*
+    step (the one reaching ``t1``) extends its claim by ``eps_end``, so a
+    save at exactly ``t1`` survives float rounding without any interior save
+    ever being claimed by two adjacent steps.  The same mask gates the
+    forward fill and the reversible backward cotangent injection — keeping
+    them inverses of each other even at step-boundary save times.
+    """
+    slack = jnp.where(t_new >= t1 - eps_end, eps_end, 0.0)
+    return (save_ts > t_old) & (save_ts <= t_new + slack) & live
+
+
+def fill_saves(ys_out, save_ts, live, t_old, t_new, y_old, y_new,
+               t1, eps_end, h_floor):
+    """Write the save points covered by one step into the dense-output buffer.
+
+    Linear interpolation between ``y_old`` (state at ``t_old``) and ``y_new``
+    (state at ``t_new``), at every ``save_ts`` entry this step owns (see
+    :func:`save_mask`); ``live`` gates out rejected trials and zero-length
+    padding steps.  Shared verbatim by the accept/reject realization loop and
+    the realized-grid solve, so the two produce bitwise-identical dense
+    output.
+    """
+    frac = (save_ts - t_old) / jnp.maximum(t_new - t_old, h_floor)
+    mask = save_mask(save_ts, live, t_old, t_new, t1, eps_end)
+
+    def leaf(out, a, b):
+        f = jnp.clip(frac, 0.0, 1.0).reshape((-1,) + (1,) * a.ndim)
+        m = mask.reshape((-1,) + (1,) * a.ndim)
+        return jnp.where(m, a + f.astype(a.dtype) * (b - a), out)
+
+    return jax.tree_util.tree_map(leaf, ys_out, y_old, y_new)

@@ -18,7 +18,7 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .solvers import tree_scale
+from .pytree import tree_scale
 
 __all__ = [
     "Group",

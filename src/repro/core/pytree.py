@@ -1,0 +1,86 @@
+"""Shared pytree linear algebra + solver-spec resolution.
+
+One home for the tiny helpers every integration layer needs, so
+``solvers.py`` / ``adaptive.py`` / ``adjoint.py`` / ``sdeint.py`` stop
+carrying private copies:
+
+* ``tree_add`` / ``tree_sub`` / ``tree_scale`` / ``tree_axpy`` /
+  ``tree_zeros_like`` — leafwise linear algebra over arbitrary state pytrees;
+* ``tree_select`` — leafwise ``jnp.where`` on a scalar predicate (the masked
+  no-op step used by both the accept/reject controller and the padded
+  realized-grid solve);
+* ``resolve_solver`` — spec string / raw coefficient set / solver object →
+  solver object, with an optional loud check for the embedded error estimate
+  that adaptive stepping requires.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_axpy",
+    "tree_zeros_like",
+    "tree_select",
+    "resolve_solver",
+]
+
+
+def tree_add(x, y):
+    return jax.tree_util.tree_map(jnp.add, x, y)
+
+
+def tree_sub(x, y):
+    return jax.tree_util.tree_map(jnp.subtract, x, y)
+
+
+def tree_scale(a, x):
+    return jax.tree_util.tree_map(lambda xi: a * xi, x)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y."""
+    return jax.tree_util.tree_map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_zeros_like(x):
+    return jax.tree_util.tree_map(jnp.zeros_like, x)
+
+
+def tree_select(pred, a, b):
+    """Leafwise ``where(pred, a, b)`` for a scalar (or broadcastable) pred."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def resolve_solver(solver, *, require_error_estimate: bool = False):
+    """Spec string / LowStorage coefficients / solver object → solver object.
+
+    ``require_error_estimate=True`` additionally demands ``step_with_error``
+    (the Appendix-D embedded estimator) and raises the canonical loud error
+    otherwise — grid *realization* (accept/reject stepping) is impossible
+    without it, for any adjoint.  Solvers without it (``reversible_heun``,
+    ``mcf-*``) can still *solve over* an already-realized grid.
+    """
+    if isinstance(solver, str):
+        from .registry import get_solver
+
+        solver = get_solver(solver)
+    from .williamson import LowStorage
+
+    if isinstance(solver, LowStorage):
+        from .solvers import LowStorageSolver
+
+        solver = LowStorageSolver(solver)
+    if require_error_estimate and not hasattr(solver, "step_with_error"):
+        raise ValueError(
+            f"solver {getattr(solver, 'name', solver)!r} has no embedded "
+            "error estimate (step_with_error); adaptive grid realization "
+            "supports the EES 2N schemes and multi-stage Butcher-form RK — "
+            "realize the grid with one of those (or use a fixed grid), then "
+            "any solver, including reversible_heun / mcf-*, can solve over "
+            "the realized grid"
+        )
+    return solver

@@ -22,8 +22,10 @@ solver object returns it unchanged, so APIs can accept either form.
 
 ``adaptive`` is a *mode flag*, not a factory kwarg: ``get_solver`` strips it
 and marks the returned solver (``solver.adaptive == True``), which
-:func:`repro.core.sdeint.sdeint` reads to route the solve through
-:func:`repro.core.adaptive.integrate_adaptive` instead of the fixed grid.
+:func:`repro.core.sdeint.sdeint` reads to realize an accepted-step grid first
+(:func:`repro.core.adaptive.realize_grid`) and run the unified
+:func:`repro.core.adjoint.solve` over it — under any adjoint, reversible
+included — instead of a uniform grid.
 """
 from __future__ import annotations
 
@@ -169,7 +171,7 @@ def get_solver(spec, **overrides):
     A solver object (``init`` / ``step`` / ``reverse`` / ``extract``).  The
     ``adaptive`` flag is not passed to the factory; it marks the returned
     object (``solver.adaptive = True``) so :func:`repro.core.sdeint.sdeint`
-    routes the solve through the adaptive stepper.
+    routes the solve through grid realization (realize-then-solve).
 
     Example
     -------

@@ -4,10 +4,14 @@
 plumbing every caller used to hand-roll — Brownian-driver construction, solver
 resolution by registry name, ``jax.vmap`` fan-out over per-trajectory PRNG
 keys, and (optionally) ``shard_map`` fan-out over a device-mesh axis — while
-delegating the actual integration to :func:`repro.core.adjoint.solve` (fixed
-grid) or :func:`repro.core.adaptive.integrate_adaptive` (tolerance-driven
-steps on a :class:`~repro.core.brownian.VirtualBrownianTree`, selected by
-``adaptive=True`` or an ``"ees25:adaptive"``-style spec).
+delegating the actual integration to ONE generalized
+:func:`repro.core.adjoint.solve`.  A fixed grid solves directly; an adaptive
+request (``adaptive=True`` or an ``"ees25:adaptive"``-style spec) first
+*realizes* its accepted-step grid with the PI controller on a
+:class:`~repro.core.brownian.VirtualBrownianTree`
+(:func:`repro.core.adaptive.realize_grid`), then runs the same ``solve`` over
+the realized grid — so every adjoint, including the O(1)-memory
+``"reversible"`` one, works on adaptive grids.
 
 Batching is *by key*: each trajectory draws its own counter-based Brownian
 driver from its own key, so the batched result is bitwise identical to a
@@ -108,9 +112,10 @@ def sdeint(
         Integration window.
     n_steps:
         Fixed grid: the number of uniform steps.  Adaptive: the *trial-step
-        budget* (accepted + rejected; also the compiled loop length under the
-        differentiable bounded stepper) — if the controller exhausts it the
-        result stops short of ``t1`` (check ``result.t_final``).
+        budget* (accepted + rejected; also the static length of the realized
+        grid, whose unused tail is zero-length padding) — if the controller
+        exhausts it the result stops short of ``t1`` (check
+        ``result.t_final``).
     y0:
         Initial state (pytree).  With ``batch_keys`` it is *shared* across
         trajectories; batch it yourself with an outer ``vmap`` if each
@@ -123,16 +128,23 @@ def sdeint(
         parameter pytree being trained).
     adjoint:
         ``"full"`` | ``"recursive"`` | ``"reversible"`` — see
-        :func:`repro.core.adjoint.solve`.  ``"reversible"`` requires a fixed
-        grid: step rejection needs a third register to restore the previous
-        state, which the two-register reversible implementation does not have
-        (the paper's Limitations section), so combining it with ``adaptive``
-        raises.
+        :func:`repro.core.adjoint.solve`.  All three work on both fixed and
+        adaptive grids: an adaptive solve realizes its accepted-step grid
+        first (gradient-stopped controller), then the chosen adjoint runs
+        over the realized grid — the reversible backward sweep replays the
+        same non-uniform step sequence, so step rejection never needs a
+        third register.  The one unsupported combination is adaptive
+        stepping with a solver that has no embedded error estimate
+        (``reversible_heun`` / ``mcf-*`` / single-stage schemes) — grid
+        *realization* needs ``step_with_error``; realize with an EES scheme
+        via :func:`repro.core.adaptive.realize_grid` and solve with any
+        solver if you need that pairing.
     save_every:
         Fixed grid only: save ``extract(state)`` every that many steps (must
         divide ``n_steps``); saved states land in ``result.ys``.
     remat_chunk:
-        Fixed grid, ``adjoint="recursive"``: checkpoint granularity.
+        ``adjoint="recursive"``: checkpoint granularity (steps per
+        rematerialised chunk, on either grid kind).
     adaptive:
         Integrate with PI-controlled accept/reject steps on a
         :class:`~repro.core.brownian.VirtualBrownianTree` instead of a fixed
@@ -152,12 +164,12 @@ def sdeint(
         Adaptive only: leaf resolution of the Virtual Brownian Tree (default
         ``(t1 - t0) / 4096``).
     bounded:
-        Adaptive only.  ``True`` (default): fixed-length masked scan —
-        reverse-mode differentiable, but always executes ``n_steps`` trial
-        iterations.  ``False``: ``lax.while_loop`` that stops when every
-        path reaches ``t1`` — faster forward-only sampling (the serving
-        engine uses this), not reverse-differentiable.  Results are bitwise
-        identical between the two modes.
+        Adaptive only.  ``True`` (default): realize-then-solve — the grid
+        realization runs forward-only, then the solve sweep carries the
+        gradients, so every adjoint works.  ``False``: a single forward-only
+        controller pass with no second sweep — the fastest way to *sample*
+        (the serving engine uses this), not reverse-differentiable.  Results
+        are bitwise identical between the two modes.
     noise_shape:
         Shape of one Brownian increment.  Defaults to the state's shape for
         diagonal noise; required for ``noise="general"``.
@@ -192,20 +204,13 @@ def sdeint(
     """
     solver = get_solver(solver)
     adaptive = adaptive or getattr(solver, "adaptive", False)
-    if adaptive and adjoint == "reversible":
-        raise ValueError(
-            "adjoint='reversible' requires a fixed grid: step rejection needs "
-            "a third register to restore the previous state, which the "
-            "two-register reversible implementation does not have.  Use "
-            "adjoint='full' or 'recursive' with adaptive=True, or drop "
-            "adaptive for reversible-adjoint training."
-        )
-    if adaptive and adjoint not in ("full", "recursive"):
+    if adjoint not in ("full", "recursive", "reversible"):
         raise ValueError(f"unknown adjoint {adjoint!r}")
-    if adaptive and not bounded and adjoint == "recursive":
+    if adaptive and not bounded and adjoint != "full":
         raise ValueError(
-            "bounded=False (while-loop stepper) is forward-only and cannot "
-            "host the recursive adjoint; use bounded=True for gradients"
+            f"bounded=False (single controller pass) is forward-only and "
+            f"cannot host the {adjoint!r} adjoint; use bounded=True "
+            "(realize-then-solve) for gradients"
         )
     if adaptive and save_every is not None:
         raise ValueError(
@@ -229,12 +234,6 @@ def sdeint(
                     "adaptive=True or an ':adaptive' solver spec — a "
                     "tolerance request must not silently run a fixed grid"
                 )
-    elif remat_chunk is not None:
-        raise ValueError(
-            "remat_chunk configures the fixed-grid recursive adjoint; the "
-            "adaptive path checkpoints per trial step (adjoint='recursive') "
-            "instead"
-        )
     if noise_shape is None:
         noise_shape = _infer_noise_shape(term, y0)
     if dtype is None:
@@ -254,8 +253,7 @@ def sdeint(
             return integrate_adaptive(
                 solver, term, y0, vbt, args, t0=t0, t1=t1,
                 h0=h0, max_steps=int(n_steps), save_at=save_at,
-                bounded=bounded,
-                checkpoint_steps=(adjoint == "recursive"),
+                bounded=bounded, adjoint=adjoint, remat_chunk=remat_chunk,
                 **tols,
             )
     else:

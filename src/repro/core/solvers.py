@@ -28,6 +28,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .pytree import tree_add, tree_axpy, tree_scale, tree_sub, tree_zeros_like
 from .tableaux import Tableau
 from .williamson import EES25_2N, EES27_2N, LowStorage
 
@@ -39,34 +40,13 @@ __all__ = [
     "MCFSolver",
     "ees25_solver",
     "ees27_solver",
+    # Re-exported from .pytree for backwards compatibility — the canonical
+    # home of the pytree linear-algebra helpers is repro.core.pytree.
     "tree_add",
     "tree_scale",
     "tree_axpy",
     "tree_zeros_like",
 ]
-
-
-# -- pytree linear algebra ---------------------------------------------------
-
-def tree_add(x, y):
-    return jax.tree_util.tree_map(jnp.add, x, y)
-
-
-def tree_sub(x, y):
-    return jax.tree_util.tree_map(jnp.subtract, x, y)
-
-
-def tree_scale(a, x):
-    return jax.tree_util.tree_map(lambda xi: a * xi, x)
-
-
-def tree_axpy(a, x, y):
-    """a * x + y."""
-    return jax.tree_util.tree_map(lambda xi, yi: a * xi + yi, x, y)
-
-
-def tree_zeros_like(x):
-    return jax.tree_util.tree_map(jnp.zeros_like, x)
 
 
 # -- SDE term ----------------------------------------------------------------

@@ -19,9 +19,13 @@ Compiled executables are cached per request *signature* (solver spec,
 horizon, step count, save cadence, adaptive tolerances / output grid) —
 ticks re-use them, so steady-state serving never recompiles, exactly like
 the LM engine's single ``serve_step``.  Adaptive requests (an
-``"ees25:adaptive"``-style spec) integrate on a Virtual Brownian Tree with
-per-path accept/reject stepping — paths in one batch each walk their own
-step sequence under vmap — and remain reproducible offline from the seed.
+``"ees25:adaptive"``-style spec) realize a per-path accept/reject grid on a
+Virtual Brownian Tree — paths in one batch each walk their own step sequence
+under vmap — and remain reproducible offline from the seed: the result
+surfaces each path's realized-grid stats (``n_accepted`` / ``n_rejected`` /
+``t_final``), and a client can replay the identical grid offline with
+``realize_grid`` + ``solve`` under any adjoint, including the O(1)-memory
+reversible one, for gradient work on served samples.
 """
 from __future__ import annotations
 
@@ -77,11 +81,18 @@ class SampleResult:
     budget ``n_steps`` was exhausted first, in which case the path stopped
     short and its ``y_final`` is NOT a sample at ``t1``.  Check it (or just
     ``(t_final == t1).all()``) before trusting adaptive results from
-    aggressive tolerance/budget combinations."""
+    aggressive tolerance/budget combinations.
+
+    ``n_accepted`` / ``n_rejected`` (adaptive requests only) are the
+    per-path realized-grid statistics: how many steps each path's controller
+    accepted/rejected — the realized grid a client would replay offline (via
+    ``realize_grid`` with the same seed-derived key) for gradient work."""
 
     y_final: Any
     ys: Optional[Any]
     t_final: Optional[np.ndarray] = None
+    n_accepted: Optional[np.ndarray] = None
+    n_rejected: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
@@ -91,6 +102,8 @@ class _Pending:
     y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
     ys: List[np.ndarray] = dataclasses.field(default_factory=list)
     t_final: List[np.ndarray] = dataclasses.field(default_factory=list)
+    n_accepted: List[np.ndarray] = dataclasses.field(default_factory=list)
+    n_rejected: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 class SDESampleEngine:
@@ -268,16 +281,21 @@ class SDESampleEngine:
         result = self._batch_fn(sig)(jnp.stack(keys))
         y_final = np.asarray(result.y_final)
         ys = None if result.ys is None else np.asarray(result.ys)
-        # Adaptive results carry where each path actually stopped; surface it
-        # so budget-exhausted (truncated) paths are detectable by the caller.
-        t_final = getattr(result, "t_final", None)
-        t_final = None if t_final is None else np.asarray(t_final)
+        # Adaptive results carry where each path actually stopped plus its
+        # realized-grid stats; surface them so budget-exhausted (truncated)
+        # paths are detectable and step counts are observable per path.
+        stats = {
+            name: (None if getattr(result, name, None) is None
+                   else np.asarray(getattr(result, name)))
+            for name in ("t_final", "n_accepted", "n_rejected")
+        }
         for slot, (pending, _) in enumerate(plan):
             pending.y_final.append(y_final[slot])
             if ys is not None:
                 pending.ys.append(ys[slot])
-            if t_final is not None:
-                pending.t_final.append(t_final[slot])
+            for name, arr in stats.items():
+                if arr is not None:
+                    getattr(pending, name).append(arr[slot])
             pending.delivered += 1
         # Retire fully-served requests, preserving queue order.
         for pending in dict.fromkeys(p for p, _ in plan):
@@ -286,8 +304,9 @@ class SDESampleEngine:
                 self.done[pending.request.request_id] = SampleResult(
                     y_final=np.stack(pending.y_final),
                     ys=np.stack(pending.ys) if pending.ys else None,
-                    t_final=(np.stack(pending.t_final)
-                             if pending.t_final else None),
+                    **{name: (np.stack(getattr(pending, name))
+                              if getattr(pending, name) else None)
+                       for name in ("t_final", "n_accepted", "n_rejected")},
                 )
         return True
 

@@ -90,6 +90,7 @@ def make_sde_train_step(
     save_at=None,
     rtol: Optional[float] = None,
     atol: Optional[float] = None,
+    remat_chunk: Optional[int] = None,
     noise_shape=None,
 ):
     """Neural-SDE analogue of ``make_train_step``: one Monte-Carlo batch of
@@ -105,10 +106,12 @@ def make_sde_train_step(
     serving engine's convention.
 
     Adaptive solves (an ``:adaptive`` spec) take ``rtol``/``atol`` and a
-    ``save_at`` output grid, with ``n_steps`` as the trial-step budget; they
-    require ``adjoint="full"`` or ``"recursive"`` — the default
-    ``"reversible"`` adjoint is fixed-grid only (``sdeint`` raises on the
-    combination, per the paper's Limitations section).
+    ``save_at`` output grid, with ``n_steps`` as the trial-step budget.  Every
+    adjoint works on them — each path realizes its accepted-step grid
+    (gradient-stopped controller) and the backward pass runs over that
+    realized grid, so the default O(1)-memory ``"reversible"`` adjoint now
+    trains on adaptive grids too (tolerance-driven step placement *and*
+    constant trajectory memory in one step function).
     """
     from repro.core import get_solver, sdeint
 
@@ -120,6 +123,8 @@ def make_sde_train_step(
         extra["atol"] = atol
     if save_at is not None:
         extra["save_at"] = jnp.asarray(save_at)
+    if remat_chunk is not None:
+        extra["remat_chunk"] = remat_chunk
 
     def step(params, opt_state, key):
         def loss(p):

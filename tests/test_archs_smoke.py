@@ -1,6 +1,7 @@
 """Per-architecture smoke tests: reduced same-family configs, one forward +
 one train step + (where applicable) decode consistency, on CPU."""
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +20,15 @@ from repro.models import (
 )
 from repro.optim import adamw
 
-KEY = jax.random.PRNGKey(0)
+# Lazy PRNG key: creating a jax array at module scope initialises the
+# XLA backend during *collection*, which the default (tier-1) lane pays
+# even when this module's slow-marked cases are deselected — keep heavy
+# device setup out of import time.
+@functools.lru_cache(maxsize=None)
+def KEY():
+    return jax.random.PRNGKey(0)
+
+
 ALL = list_archs()
 
 # Compile-heavy archs run only in the slow lane; the default (tier-1) run
@@ -49,16 +58,16 @@ def _decode_params():
 
 def make_batch(cfg, B=2, S=32):
     batch = {
-        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
-        "labels": jax.random.randint(jax.random.fold_in(KEY, 1), (B, S), 0, cfg.vocab),
+        "tokens": jax.random.randint(KEY(), (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.fold_in(KEY(), 1), (B, S), 0, cfg.vocab),
     }
     if cfg.frontend == "patch":
         batch["vision_embeds"] = jax.random.normal(
-            KEY, (B, cfg.n_vision_tokens, cfg.frontend_dim)
+            KEY(), (B, cfg.n_vision_tokens, cfg.frontend_dim)
         )
     if cfg.frontend == "frames":
         batch = {
-            "frames": jax.random.normal(KEY, (B, S, cfg.frontend_dim)),
+            "frames": jax.random.normal(KEY(), (B, S, cfg.frontend_dim)),
             "labels": batch["labels"],
         }
     return batch
@@ -74,7 +83,7 @@ def test_full_config_registered(arch):
 @pytest.mark.parametrize("arch", _smoke_params())
 def test_smoke_forward_and_train_step(arch):
     cfg = get_arch(arch).smoke()
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     batch = make_batch(cfg)
     logits, aux = forward(cfg, params, batch)
     B, S = batch["labels"].shape
@@ -101,9 +110,9 @@ def test_decode_matches_forward(arch):
     cfg = get_arch(arch).smoke()
     if cfg.family == "moe":
         cfg = dataclasses.replace(cfg, capacity_factor=64.0)
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     B, S = 2, 16
-    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    toks = jax.random.randint(KEY(), (B, S), 0, cfg.vocab)
     logits_full, _ = forward(cfg, params, {"tokens": toks})
     cache = init_cache(cfg, B, S)
     outs = []
@@ -130,7 +139,7 @@ def test_long_context_applicability():
 @pytest.mark.slow
 def test_remat_matches_no_remat():
     cfg = get_arch("qwen3-1.7b").smoke()
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     batch = make_batch(cfg)
     l1 = loss_fn(cfg, params, batch, ModelOptions(remat=False))
     l2 = loss_fn(cfg, params, batch, ModelOptions(remat=True))
@@ -144,7 +153,7 @@ def test_remat_matches_no_remat():
 def test_hybrid_shared_block_is_shared():
     """zamba2: the shared attention block appears once in params."""
     cfg = get_arch("zamba2-7b").smoke()
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     assert "shared" in params
     # scanned layers contain only mamba params
     assert set(params["layers"].keys()) == {"mamba"}
@@ -153,7 +162,7 @@ def test_hybrid_shared_block_is_shared():
 def test_training_reduces_loss_tiny_lm():
     """A few hundred steps on a tiny memorisable stream reduces loss clearly."""
     cfg = get_arch("olmo-1b").smoke()
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     opt = adamw(3e-3)
     ts = jax.jit(make_train_step(cfg, opt))
     st = opt.init(params)

@@ -1,0 +1,334 @@
+"""Realized-grid solve core: TimeGrid plumbing, reversible-adjoint gradient
+parity on adaptively realized (non-uniform) grids, bitwise batch fan-out
+through realize+solve, reconstruction drift, and the end-to-end train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SDETerm,
+    TimeGrid,
+    brownian_path,
+    get_solver,
+    realize_grid,
+    sdeint,
+    solve,
+    virtual_brownian_tree,
+)
+from repro.core.pytree import tree_sub
+
+KEY = jax.random.PRNGKey(0)
+
+
+def ou_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * (1.0 + 0.1 * jnp.tanh(y)),
+        noise="diagonal",
+    )
+
+
+def stiff_term() -> SDETerm:
+    """Sharp stiff transient around t = 0.5: the realized grid is genuinely
+    non-uniform (the controller shrinks steps inside the spike)."""
+    def rate(t, a):
+        return a["nu"] * (1.0 + 40.0 * jnp.exp(-(((t - 0.5) / 0.05) ** 2)))
+
+    return SDETerm(
+        drift=lambda t, y, a: rate(t, a) * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * (1.0 + 0.1 * jnp.tanh(y)),
+        noise="diagonal",
+    )
+
+
+ARGS = {
+    "nu": jnp.float64(0.7),
+    "mu": jnp.float64(0.2),
+    "sigma": jnp.float64(0.4),
+}
+
+
+def vbt(key=KEY, shape=(3,), tol=None):
+    return virtual_brownian_tree(key, 0.0, 1.0, shape=shape,
+                                 dtype=jnp.float64, tol=tol)
+
+
+# ---------------------------------------------------------------------------
+# TimeGrid plumbing.
+# ---------------------------------------------------------------------------
+
+class TestTimeGrid:
+    def test_uniform_grid_from_path_matches_sdeint(self):
+        """The explicit-grid spelling of a fixed solve is the same solve."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        bm = brownian_path(KEY, 0.0, 1.0, 32, shape=(3,), dtype=jnp.float64)
+        via_sdeint = sdeint(term, "ees25", 0.0, 1.0, 32, y0, KEY, args=ARGS)
+        via_grid = solve(get_solver("ees25"), term, y0,
+                         TimeGrid.from_path(bm), ARGS)
+        np.testing.assert_array_equal(np.asarray(via_sdeint.y_final),
+                                      np.asarray(via_grid.y_final))
+
+    def test_realized_grid_structure(self):
+        """ts holds t0 + the accepted times then t_final padding; hs matches
+        the step sizes with zeros on padding."""
+        rg = realize_grid("ees25", stiff_term(), jnp.ones(3, jnp.float64),
+                          vbt(), ARGS, rtol=1e-3, max_steps=256)
+        ts = np.asarray(rg.grid.ts)
+        hs = np.asarray(rg.grid.hs)
+        na = int(rg.n_accepted)
+        assert rg.grid.n_steps == 256 and not rg.grid.is_uniform
+        assert ts[0] == 0.0 and np.all(np.diff(ts) >= 0)
+        np.testing.assert_allclose(ts[na], float(rg.t_final))
+        np.testing.assert_allclose(ts[na:], float(rg.t_final))
+        np.testing.assert_allclose(np.diff(ts)[:na], hs[:na], rtol=1e-12)
+        assert np.all(hs[:na] > 0) and np.all(hs[na:] == 0)
+        # the stiff transient forced a genuinely non-uniform grid
+        assert hs[:na].max() > 3 * hs[:na].min()
+
+    def test_grid_increments_telescope(self):
+        """Per-step grid increments over a realized grid sum to W(t_final)."""
+        b = vbt(shape=())
+        rg = realize_grid("ees25", ou_term(), jnp.float64(1.0), b, ARGS,
+                          rtol=1e-3, max_steps=128)
+        incs = np.asarray(b.grid_increments(rg.grid.ts))
+        total = np.asarray(b.weval(rg.t_final))
+        np.testing.assert_allclose(incs.sum(), total, atol=1e-12)
+
+    def test_brownian_path_rejects_foreign_grid(self):
+        bm = brownian_path(KEY, 0.0, 1.0, 32, shape=(3,))
+        with pytest.raises(ValueError, match="native"):
+            bm.grid_increment(jnp.linspace(0.0, 1.0, 17), 0)
+
+    def test_save_at_and_save_every_mutually_exclusive(self):
+        bm = brownian_path(KEY, 0.0, 1.0, 32, shape=(3,), dtype=jnp.float64)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            solve(get_solver("ees25"), ou_term(), jnp.ones(3, jnp.float64),
+                  bm, ARGS, save_every=8, save_at=jnp.array([0.5]))
+
+    def test_remat_chunk_without_recursive_raises(self):
+        bm = brownian_path(KEY, 0.0, 1.0, 32, shape=(3,), dtype=jnp.float64)
+        for adjoint in ("full", "reversible"):
+            with pytest.raises(ValueError, match="recursive"):
+                solve(get_solver("ees25"), ou_term(),
+                      jnp.ones(3, jnp.float64), bm, ARGS,
+                      adjoint=adjoint, remat_chunk=8)
+
+
+# ---------------------------------------------------------------------------
+# Gradient parity on adaptively realized (non-uniform) grids.
+# ---------------------------------------------------------------------------
+
+class TestRealizedGridAdjointParity:
+    # ees25 pins the property in the default lane; the ees27 duplicate (same
+    # code path, costlier compile) rides the slow lane.
+    @pytest.mark.parametrize(
+        "spec", ["ees25", pytest.param("ees27", marks=pytest.mark.slow)])
+    def test_reversible_matches_full_and_recursive(self, spec):
+        """Acceptance criterion: reversible-adjoint gradients on an
+        adaptively realized grid match full/recursive to tight tolerance."""
+        term = stiff_term()
+        y0 = jnp.ones(2, jnp.float64)
+        keys = jax.random.split(KEY, 2)
+
+        def loss(a, adjoint):
+            r = sdeint(term, f"{spec}:adaptive", 0.0, 1.0, 128, y0, None,
+                       args=a, adjoint=adjoint, rtol=1e-3, atol=1e-5,
+                       batch_keys=keys)
+            return jnp.mean(r.y_final ** 2)
+
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "reversible"))(ARGS)
+        gc = jax.grad(lambda a: loss(a, "recursive"))(ARGS)
+        for k in ARGS:
+            # recursive is a pure remat of the same computation
+            np.testing.assert_allclose(gf[k], gc[k], rtol=1e-9)
+            # reversible reconstructs the trajectory: O(h^{m+1}) drift only
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-4)
+
+    def test_reversible_heun_solves_a_realized_grid(self):
+        """Solvers without an embedded estimator can't *realize* a grid but
+        can solve over one: realize with ees25, solve with reversible_heun
+        under all three adjoints."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        rg = realize_grid("ees25", term, y0, vbt(), ARGS, rtol=1e-3,
+                          max_steps=64)
+        rh = get_solver("reversible_heun")
+
+        def loss(a, adjoint):
+            out = solve(rh, term, y0, rg.grid, a, adjoint=adjoint)
+            return jnp.sum(out.y_final ** 2)
+
+        outs = {adj: solve(rh, term, y0, rg.grid, ARGS, adjoint=adj).y_final
+                for adj in ("full", "recursive", "reversible")}
+        np.testing.assert_array_equal(np.asarray(outs["full"]),
+                                      np.asarray(outs["reversible"]))
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "reversible"))(ARGS)
+        for k in ARGS:
+            # algebraically reversible: reconstruction is exact
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-8)
+
+    def test_save_at_cotangents_on_realized_grid(self):
+        """Dense-output cotangent injection along the reversible backward
+        sweep matches full-adjoint autodiff (args and y0 alike)."""
+        term = ou_term()
+        y0 = jnp.ones(2, jnp.float64)
+        ts = jnp.array([0.0, 0.23, 0.5, 0.77, 1.0])
+
+        def loss(a, y, adjoint):
+            r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 128, y, KEY,
+                       args=a, adjoint=adjoint, rtol=1e-3, save_at=ts)
+            return jnp.sum(r.ys ** 2)
+
+        ga_f, gy_f = jax.grad(lambda a, y: loss(a, y, "full"),
+                              argnums=(0, 1))(ARGS, y0)
+        ga_r, gy_r = jax.grad(lambda a, y: loss(a, y, "reversible"),
+                              argnums=(0, 1))(ARGS, y0)
+        for k in ARGS:
+            np.testing.assert_allclose(ga_f[k], ga_r[k], rtol=1e-4)
+        np.testing.assert_allclose(gy_f, gy_r, rtol=1e-4)
+
+    def test_save_at_step_boundary_cotangent_not_double_counted(self):
+        """A save time inside the eps slack above an interior step boundary
+        is owned by exactly one step: the reversible backward injection must
+        match full-adjoint autodiff (which is last-write-wins) there too."""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        bm = brownian_path(KEY, 0.0, 1.0, 8, shape=(3,), dtype=jnp.float64)
+        # 2e-10 above the n=3 step boundary — within eps_end = 1e-9 * span.
+        ts = jnp.array([0.375 + 2e-10, 1.0])
+
+        def loss(a, adjoint):
+            out = solve(get_solver("ees25"), term, y0, bm, a,
+                        adjoint=adjoint, save_at=ts)
+            return jnp.sum(out.ys ** 2)
+
+        gf = jax.grad(lambda a: loss(a, "full"))(ARGS)
+        gr = jax.grad(lambda a: loss(a, "reversible"))(ARGS)
+        for k in ARGS:
+            np.testing.assert_allclose(gf[k], gr[k], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise batch fan-out through realize+solve.
+# ---------------------------------------------------------------------------
+
+class TestRealizeSolveBatching:
+    def test_batch_vs_loop_bitwise(self):
+        """Acceptance criterion: the batched realize+solve is bitwise equal
+        to a Python loop of single-trajectory solves over the same keys.
+
+        (On the OU term, like the seed's guarantee: terms whose drift
+        contains transcendentals of *time* — e.g. the stiff transient's
+        exp — lower differently vectorized vs scalar on CPU XLA, a
+        pre-existing artifact independent of this stack.)"""
+        term = ou_term()
+        y0 = jnp.ones(3, jnp.float64)
+        ts = jnp.array([0.5, 1.0])
+        keys = jax.random.split(KEY, 3)
+        batched = sdeint(term, "ees25:adaptive", 0.0, 1.0, 128, y0, None,
+                         args=ARGS, rtol=1e-3, save_at=ts,
+                         adjoint="reversible", batch_keys=keys)
+        for i in range(3):
+            solo = sdeint(term, "ees25:adaptive", 0.0, 1.0, 128, y0, keys[i],
+                          args=ARGS, rtol=1e-3, save_at=ts,
+                          adjoint="reversible")
+            np.testing.assert_array_equal(np.asarray(batched.y_final[i]),
+                                          np.asarray(solo.y_final))
+            np.testing.assert_array_equal(np.asarray(batched.ys[i]),
+                                          np.asarray(solo.ys))
+            assert int(batched.n_accepted[i]) == int(solo.n_accepted)
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction drift of the reversible backward sweep.
+# ---------------------------------------------------------------------------
+
+class TestReconstructionDrift:
+    def test_y0_reconstruction_bounded_on_stiff_term(self):
+        """Acceptance criterion: running the solver's reverse step backward
+        over the realized grid lands within O(h^{m+1})-accumulated distance
+        of y0 on a stiff term (the quantity that controls reversible-adjoint
+        gradient quality)."""
+        term = stiff_term()
+        y0 = jnp.ones(2, jnp.float64)
+        b = vbt(shape=(2,))
+        solver = get_solver("ees25")
+        rg = realize_grid(solver, term, y0, b, ARGS, rtol=1e-4, atol=1e-6,
+                          max_steps=256)
+        grid = rg.grid
+        y_final = solve(solver, term, y0, grid, ARGS).y_final
+
+        def back(state, n):
+            h = grid.h_of(n)
+            prev = solver.reverse(term, state, grid.t_of(n), h,
+                                  grid.increment(n), ARGS)
+            return jax.tree_util.tree_map(
+                lambda p, s: jnp.where(h > 0, p, s), prev, state), None
+
+        y0_rec, _ = jax.lax.scan(back, y_final,
+                                 jnp.arange(grid.n_steps - 1, -1, -1))
+        drift = float(jnp.max(jnp.abs(tree_sub(y0_rec, y0))))
+        assert drift < 1e-5, drift  # EES(2,5): O(h^3) per step, ~100 steps
+        # and the drift is what separates reversible from full gradients:
+        assert np.isfinite(drift)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: reversible-adjoint training step on an adaptive grid.
+# ---------------------------------------------------------------------------
+
+class TestReversibleAdaptiveTraining:
+    def test_train_step_runs_and_matches_full_adjoint(self):
+        """Acceptance criterion: sdeint(..., 'ees25:adaptive',
+        adjoint='reversible') powers a full train step whose first-step
+        gradients match adjoint='full' on the same realized grids."""
+        from repro.optim import adamw
+        from repro.train.trainer import make_sde_train_step
+
+        term = stiff_term()
+
+        def y0_fn(p):
+            return jnp.full((4,), 1.0, jnp.float64) * p["scale"]
+
+        def loss_fn_result(p, r):
+            return jnp.mean((r.y_final - 0.2) ** 2)
+
+        params0 = {"nu": jnp.float64(0.7), "mu": jnp.float64(0.2),
+                   "sigma": jnp.float64(0.4), "scale": jnp.float64(1.0)}
+
+        grads = {}
+        for adjoint in ("reversible", "full"):
+            opt = adamw(lambda step: 1e-2)
+            step = make_sde_train_step(
+                "ees25:adaptive", term, opt, y0_fn, loss_fn_result,
+                t0=0.0, t1=1.0, n_steps=96, n_paths=8, adjoint=adjoint,
+                rtol=1e-3, noise_shape=(4,),
+            )
+            step = jax.jit(step)
+            params, opt_state = dict(params0), opt.init(params0)
+            key = jax.random.PRNGKey(42)
+
+            def grad_only(p):
+                keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                    jnp.arange(8))
+                r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 96, y0_fn(p),
+                           None, args=p, adjoint=adjoint, rtol=1e-3,
+                           noise_shape=(4,), batch_keys=keys)
+                return loss_fn_result(p, r)
+
+            grads[adjoint] = jax.grad(grad_only)(params0)
+            losses = []
+            for i in range(2):
+                params, opt_state, m = step(params, opt_state,
+                                            jax.random.fold_in(key, 1000 + i))
+                losses.append(float(m["loss"]))
+            assert all(np.isfinite(l) for l in losses), losses
+
+        for k in params0:
+            np.testing.assert_allclose(grads["full"][k],
+                                       grads["reversible"][k],
+                                       rtol=1e-4, atol=1e-10)

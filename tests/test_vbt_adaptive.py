@@ -1,6 +1,6 @@
 """Virtual Brownian Tree + adaptive solve path: query reproducibility,
 refinement consistency, adaptive-vs-fixed strong error on a matched driver,
-gradients through the bounded stepper, and the sdeint/engine wiring."""
+gradients through realize-then-solve, and the sdeint/engine wiring."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,16 +8,24 @@ import pytest
 
 from repro.core import (
     SDETerm,
+    TimeGrid,
     get_solver,
     integrate_adaptive,
-    integrate_fixed,
     parse_solver_spec,
     sdeint,
+    solve,
     virtual_brownian_tree,
 )
 from repro.serving import SDESampleConfig, SDESampleEngine
 
 KEY = jax.random.PRNGKey(0)
+
+
+def fixed_solve(spec, term, y0, driver, n_steps, args=None):
+    """Uniform-grid solve on a matched driver (what integrate_fixed used to
+    do, routed through the unified solve())."""
+    grid = TimeGrid.uniform(driver.t0, driver.t1, n_steps, driver)
+    return solve(get_solver(spec), term, y0, grid, args).y_final
 
 
 def ou_term() -> SDETerm:
@@ -120,7 +128,7 @@ class TestAdaptiveStrongError:
             return vbt(k, tol=2.0 ** -14)
 
         ref = jax.jit(jax.vmap(
-            lambda k: integrate_fixed(spec, term, y0, tree(k), 1024, ARGS)
+            lambda k: fixed_solve(spec, term, y0, tree(k), 1024, ARGS)
         ))(keys)
 
         def serr(y):
@@ -137,8 +145,8 @@ class TestAdaptiveStrongError:
             steps.append(float(jnp.mean(out.n_accepted)))
         assert errs[1] < errs[0], (errs, steps)  # tolerance actually controls
         fixed = jax.jit(jax.vmap(
-            lambda k: integrate_fixed(spec, term, y0, tree(k),
-                                      int(round(steps[1])), ARGS)
+            lambda k: fixed_solve(spec, term, y0, tree(k),
+                                  int(round(steps[1])), ARGS)
         ))(keys)
         # same step budget, same ballpark error (within 4x either way)
         assert errs[1] < 4.0 * serr(fixed) + 1e-12, (errs, serr(fixed))
@@ -181,7 +189,7 @@ class TestAdaptiveGradients:
             return jnp.sum(out.y_final ** 2)
 
         def floss(a):
-            return jnp.sum(integrate_fixed("ees25", term, y0, b, 1024, a) ** 2)
+            return jnp.sum(fixed_solve("ees25", term, y0, b, 1024, a) ** 2)
 
         ga = jax.grad(aloss)(ARGS)
         gf = jax.grad(floss)(ARGS)
@@ -189,7 +197,7 @@ class TestAdaptiveGradients:
             np.testing.assert_allclose(ga[k], gf[k], rtol=2e-2)
 
     def test_recursive_adjoint_matches_full(self):
-        """checkpoint_steps (the recursive adjoint of the adaptive path) is a
+        """The recursive adjoint (remat over the realized-grid solve) is a
         pure remat: same gradients up to XLA re-fusion, less memory."""
         term = ou_term()
         y0 = jnp.ones(2, jnp.float64)
@@ -265,11 +273,20 @@ class TestSdeintAdaptive:
         np.testing.assert_allclose(np.asarray(r.ys[:, 0]),
                                    np.exp(-5.0 * np.asarray(ts)), atol=2e-4)
 
-    def test_reversible_plus_adaptive_raises(self):
+    def test_reversible_plus_adaptive_runs(self):
+        """The old 'reversible requires a fixed grid' restriction is gone:
+        the solve runs over the realized grid, so the reversible backward
+        sweep replays the same non-uniform steps."""
         term = ou_term()
-        with pytest.raises(ValueError, match="fixed grid"):
-            sdeint(term, "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(3), KEY,
-                   args=ARGS, adjoint="reversible")
+        y0 = jnp.ones(3, jnp.float64)
+        r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 128, y0, KEY,
+                   args=ARGS, rtol=1e-3, adjoint="reversible")
+        f = sdeint(term, "ees25:adaptive", 0.0, 1.0, 128, y0, KEY,
+                   args=ARGS, rtol=1e-3, adjoint="full")
+        # identical forward bits; gradient parity lives in
+        # tests/test_realized_grid.py
+        np.testing.assert_array_equal(np.asarray(r.y_final),
+                                      np.asarray(f.y_final))
 
     def test_save_at_without_adaptive_raises(self):
         with pytest.raises(ValueError, match="adaptive"):
@@ -285,8 +302,9 @@ class TestSdeintAdaptive:
                        args=ARGS, **kw)
 
     def test_bounded_modes_bitwise_equal(self):
-        """The while-loop stepper (forward-only) and the masked bounded scan
-        walk identical trial sequences — bitwise-equal outputs."""
+        """The single forward-only controller pass (bounded=False) and
+        realize-then-solve (bounded=True) walk identical trial sequences —
+        bitwise-equal outputs."""
         term = ou_term()
         y0 = jnp.ones(3, jnp.float64)
         ts = jnp.array([0.5, 1.0])
@@ -338,6 +356,10 @@ class TestEngineAdaptive:
         # truncation is detectable: every path reports where it stopped
         assert done[rid].t_final.shape == (6,)
         np.testing.assert_allclose(done[rid].t_final, 1.0)
+        # realized-grid stats come back per path
+        assert done[rid].n_accepted.shape == (6,)
+        assert done[rid].n_rejected.shape == (6,)
+        assert (done[rid].n_accepted >= 1).all()
         # reproducible offline from the seed, like fixed-grid requests
         keys = jnp.stack(
             [jax.random.fold_in(jax.random.PRNGKey(11), i) for i in range(6)]
