@@ -13,6 +13,15 @@ one jit'd loss-gradient computation:
   adjoint on the same realized grids (recursive is a pure remat ~1e-16;
   reversible pays only the O(h^{m+1}) reconstruction drift).
 
+Since PR 4 solves default to **bulk Brownian realization** (all increments
+materialised up front — the throughput configuration, see
+``docs/performance.md``).  The memory-lean training configuration this
+benchmark exists to chart opts out (``bulk_increments=False``): the
+O(n_steps x noise) buffer would otherwise dominate the reversible adjoint's
+scratch and mask its O(1)-memory story.  The ``reversible-bulk`` record
+measures the default (bulk) configuration alongside, so the
+memory-vs-throughput trade is visible in one JSON.
+
 Emits ``BENCH_reversible_adaptive.json`` next to the repo root (referenced
 from ROADMAP.md).
 
@@ -35,7 +44,14 @@ from .common import emit, temp_bytes, time_fn
 
 jax.config.update("jax_enable_x64", True)
 
-ADJOINTS = ("full", "recursive", "reversible")
+# (name, adjoint, bulk_increments): the three PR-3 memory-lean configs plus
+# the PR-4 bulk default for the reversible adjoint.
+CONFIGS = (
+    ("full", "full", False),
+    ("recursive", "recursive", False),
+    ("reversible", "reversible", False),
+    ("reversible-bulk", "reversible", True),
+)
 RTOL = 1e-3
 T1 = 2.0
 
@@ -67,29 +83,31 @@ def run(out_path: str = DEFAULT_OUT, max_steps: int = 512, n_paths: int = 32,
     y0 = jnp.ones(dim, jnp.float64)
     keys = jax.random.split(jax.random.PRNGKey(0), n_paths)
 
-    def make_grad(adjoint):
+    def make_grad(adjoint, bulk):
         def loss(a):
             r = sdeint(term, "ees25:adaptive", 0.0, T1, max_steps, y0, None,
-                       args=a, adjoint=adjoint, rtol=RTOL, batch_keys=keys)
+                       args=a, adjoint=adjoint, rtol=RTOL, batch_keys=keys,
+                       bulk_increments=bulk)
             return jnp.mean((r.y_final - 0.2) ** 2)
 
         return jax.jit(jax.value_and_grad(loss))
 
     records = []
     grads = {}
-    for adjoint in ADJOINTS:
-        fn = make_grad(adjoint)
+    for name, adjoint, bulk in CONFIGS:
+        fn = make_grad(adjoint, bulk)
         mem = temp_bytes(fn, args)
         us = time_fn(fn, args, warmup=1, iters=3)
         loss, g = fn(args)
-        grads[adjoint] = {k: float(v) for k, v in g.items()}
+        grads[name] = {k: float(v) for k, v in g.items()}
         records.append({
-            "adjoint": adjoint,
+            "adjoint": name,
+            "bulk_increments": bulk,
             "temp_bytes": mem,
             "us_per_step": us,
             "loss": float(loss),
         })
-        emit(f"bench_reversible_adaptive/{adjoint}", us,
+        emit(f"bench_reversible_adaptive/{name}", us,
              f"temp_bytes={mem},loss={float(loss):.6f}")
 
     for rec in records:

@@ -1,0 +1,164 @@
+"""Fused-vs-unfused step-kernel benchmark + numerical drift gate.
+
+Times the jit'd solve hot loop (``lax.scan`` of ``solver.step``) with the
+:mod:`repro.kernels.sde_step` fused path on and off, per noise mode x solver
+x batch size, and emits ``BENCH_kernels.json`` next to the repo root::
+
+    {"solver": "ees25", "noise": "diagonal", "batch_size": 256,
+     "us_per_call_unfused": ..., "us_per_call_fused": ...,
+     "steps_per_sec_fused": ..., "speedup_fused": ...}
+
+On a TPU the fused records measure the Pallas kernels; on CPU/GPU they
+measure the restructured ``ref.py``-twin arithmetic (XLA fallback), so the
+benchmark runs — and the JSON regenerates — everywhere.
+
+``--interpret-check`` additionally forces every fused op through its Pallas
+kernel body in interpret mode and FAILS (exit 1) if the fused solve drifts
+from the unfused reference beyond tolerance — the CI bench-smoke gate
+against kernel/ref divergence.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_step_kernels [--out PATH]
+      [--interpret-check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SDETerm, get_solver, sdeint
+from repro.kernels.sde_step import ops as sde_step_ops
+
+from .common import emit, time_fn
+
+SOLVERS = ("ees25", "ees27", "reversible_heun")
+NOISES = ("diagonal", "general")
+BATCH_SIZES = (64, 1024)
+N_STEPS = 64
+DIM = 16
+N_CHANNELS = 4  # general-noise driving channels
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json",
+)
+
+
+def make_term(noise: str) -> SDETerm:
+    if noise == "diagonal":
+        return SDETerm(
+            drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+            diffusion=lambda t, y, a: a["sigma"] * jnp.cos(y),
+            noise="diagonal",
+        )
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.stack(
+            [jnp.ones_like(y)] * N_CHANNELS, axis=-1),
+        noise="general",
+    )
+
+
+def term_args():
+    return {"nu": jnp.float32(0.2), "mu": jnp.float32(0.1),
+            "sigma": jnp.float32(0.8)}
+
+
+def _solve_fn(term, solver, noise, n_steps, dim):
+    nshape = (dim,) if noise == "diagonal" else (N_CHANNELS,)
+    y0 = jnp.ones(dim, jnp.float32)
+
+    def fn(keys, a):
+        return sdeint(term, solver, 0.0, 1.0, n_steps, y0, None, args=a,
+                      batch_keys=keys, noise_shape=nshape).y_final
+
+    return jax.jit(fn)
+
+
+def interpret_check(*, n_steps: int = 16, dim: int = 8, batch: int = 4,
+                    tol: float = 1e-5) -> int:
+    """Fused (Pallas interpret) vs unfused reference; 0 == no drift."""
+    failures = 0
+    keys = jax.random.split(jax.random.PRNGKey(0), batch)
+    for noise in NOISES:
+        term = make_term(noise)
+        for spec in SOLVERS:
+            base = _solve_fn(term, get_solver(spec), noise, n_steps, dim)(
+                keys, term_args())
+            with sde_step_ops.force_interpret():
+                fused = _solve_fn(term, get_solver(spec, use_kernels=True),
+                                  noise, n_steps, dim)(keys, term_args())
+            drift = float(np.max(np.abs(np.asarray(fused) - np.asarray(base))))
+            ok = drift <= tol
+            print(f"# interpret-check {spec}/{noise}: max drift {drift:.2e} "
+                  f"{'OK' if ok else 'FAIL (tol %g)' % tol}")
+            failures += 0 if ok else 1
+    return failures
+
+
+def run(out_path: str = DEFAULT_OUT, *, batch_sizes=BATCH_SIZES,
+        solvers=SOLVERS, noises=NOISES, n_steps: int = N_STEPS,
+        dim: int = DIM):
+    args = term_args()
+    records = []
+    for noise in noises:
+        term = make_term(noise)
+        for spec in solvers:
+            for batch in batch_sizes:
+                keys = jax.random.split(jax.random.PRNGKey(0), batch)
+                us_unfused = time_fn(
+                    _solve_fn(term, get_solver(spec), noise, n_steps, dim),
+                    keys, args, warmup=3, iters=11)
+                us_fused = time_fn(
+                    _solve_fn(term, get_solver(spec, use_kernels=True), noise,
+                              n_steps, dim),
+                    keys, args, warmup=3, iters=11)
+                steps_fused = batch * n_steps / (us_fused * 1e-6)
+                rec = {
+                    "solver": spec,
+                    "noise": noise,
+                    "batch_size": batch,
+                    "n_steps": n_steps,
+                    "dim": dim,
+                    "us_per_call_unfused": us_unfused,
+                    "us_per_call_fused": us_fused,
+                    "steps_per_sec_fused": steps_fused,
+                    "speedup_fused": us_unfused / us_fused,
+                }
+                records.append(rec)
+                emit(f"bench_kernels/{spec}/{noise}/B{batch}", us_fused,
+                     f"speedup_fused={rec['speedup_fused']:.2f}")
+    with open(out_path, "w") as f:
+        json.dump({"device": jax.devices()[0].platform,
+                   "fused_backend": "pallas" if jax.default_backend() == "tpu"
+                   else "ref-twin (XLA fallback)",
+                   "records": records}, f, indent=2)
+    print(f"# wrote {out_path}")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--interpret-check", action="store_true",
+                    help="fail on fused-vs-ref numerical drift (CI gate)")
+    ap.add_argument("--skip-timing", action="store_true",
+                    help="with --interpret-check: run only the drift gate")
+    ns = ap.parse_args()
+    failures = 0
+    if ns.interpret_check:
+        failures = interpret_check()
+    if not ns.skip_timing:
+        run(ns.out)
+    if failures:
+        print(f"# {failures} fused-vs-ref drift failure(s)", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,14 @@ for registry solvers across batch sizes, and emits ``BENCH_throughput.json``
 next to the repo root with one record per (solver, batch size):
 
     {"solver": "ees25", "batch_size": 256, "n_steps": 64,
-     "traj_per_sec": ..., "steps_per_sec": ..., "us_per_call": ...}
+     "traj_per_sec": ..., "steps_per_sec": ..., "us_per_call": ...,
+     "us_per_call_per_step_noise": ..., "speedup_bulk": ...}
+
+``us_per_call`` / ``steps_per_sec`` measure the PR-4 default — bulk Brownian
+realization (all increments in one batched pass, streamed through the scan);
+``us_per_call_per_step_noise`` re-times the same solve with
+``bulk_increments=False`` (the pre-PR-4 per-step RNG), so every record
+carries its own before/after (``speedup_bulk``).
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_throughput [--out PATH]
 """
@@ -53,8 +60,13 @@ def run(out_path: str = DEFAULT_OUT, *, batch_sizes=BATCH_SIZES,
             fn = jax.jit(lambda keys, a, s=solver: sdeint(
                 term, s, 0.0, 1.0, n_steps, y0, None, args=a, batch_keys=keys
             ).y_final)
+            fn_per_step = jax.jit(lambda keys, a, s=solver: sdeint(
+                term, s, 0.0, 1.0, n_steps, y0, None, args=a, batch_keys=keys,
+                bulk_increments=False
+            ).y_final)
             keys = jax.random.split(jax.random.PRNGKey(0), batch)
-            us = time_fn(fn, keys, args, warmup=2, iters=5)
+            us = time_fn(fn, keys, args, warmup=3, iters=11)
+            us_per_step = time_fn(fn_per_step, keys, args, warmup=3, iters=11)
             traj_per_sec = batch / (us * 1e-6)
             records.append({
                 "solver": solver,
@@ -64,9 +76,12 @@ def run(out_path: str = DEFAULT_OUT, *, batch_sizes=BATCH_SIZES,
                 "us_per_call": us,
                 "traj_per_sec": traj_per_sec,
                 "steps_per_sec": traj_per_sec * n_steps,
+                "us_per_call_per_step_noise": us_per_step,
+                "speedup_bulk": us_per_step / us,
             })
             emit(f"bench_throughput/{solver}/B{batch}", us,
-                 f"traj_per_sec={traj_per_sec:.0f}")
+                 f"traj_per_sec={traj_per_sec:.0f} "
+                 f"speedup_bulk={us_per_step / us:.2f}")
     with open(out_path, "w") as f:
         json.dump({"device": jax.devices()[0].platform, "records": records}, f,
                   indent=2)

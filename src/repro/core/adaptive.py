@@ -285,6 +285,7 @@ def integrate_adaptive(
     bounded: bool = True,
     adjoint: str = "full",
     remat_chunk: Optional[int] = None,
+    bulk_increments: bool = True,
 ) -> AdaptiveResult:
     """PI-controlled adaptive integration of ``term`` over ``[t0, t1]``.
 
@@ -324,6 +325,12 @@ def integrate_adaptive(
         ``"reversible"`` (O(1) memory — backward reconstruction along the
         realized grid).  Gradients are those of the discrete scheme on the
         realized grid (the controller is detached).
+    bulk_increments:
+        Phase-2 noise realization (``bounded=True``): ``True`` (default)
+        generates every accepted step's increment in one batched
+        level-sweep over the tree and streams the buffer through the solve
+        (see :func:`~repro.core.adjoint.solve`); ``False`` re-queries the
+        tree per step.  Bit-identical increments either way.
 
     Example
     -------
@@ -367,7 +374,8 @@ def integrate_adaptive(
         max_steps=int(max_steps),
     )
     out = solve(solver, term, y0, rg.grid, args, adjoint=adjoint,
-                save_at=save_at, remat_chunk=remat_chunk)
+                save_at=save_at, remat_chunk=remat_chunk,
+                bulk_increments=bulk_increments)
     return AdaptiveResult(y_final=out.y_final, ys=out.ys, t_final=rg.t_final,
                           h_final=rg.h_final, n_accepted=rg.n_accepted,
                           n_rejected=rg.n_rejected)

@@ -16,7 +16,13 @@ All three run over the *same* grid abstraction: a uniform grid (the classic
 fixed-grid solve — the static step size compiles to exactly the computation
 this module always ran) or an adaptively **realized** grid from
 :func:`repro.core.adaptive.realize_grid` — per-step ``(t, h[n], dW[n])``
-triples with zero-length padding steps masked out.  Reversibility never
+triples with zero-length padding steps masked out.  Since PR 4 the noise is
+**bulk-realized** by default: every ``dW[n]`` is generated in one batched
+driver pass before the scan (:meth:`~repro.core.grid.TimeGrid.increments`)
+and streamed out of the buffer on the forward *and* reversible-backward
+sweeps — bit-identical increments, with all per-step RNG hoisted out of
+the sequential hot loop (``bulk_increments=False`` restores per-step
+generation).  Reversibility never
 needed uniform steps, only that the backward pass replays the same step
 sequence; the grid's ``ts`` array pins that down, and the bitwise-
 reproducible drivers make every ``dW[n]`` recomputable in O(1) memory during
@@ -117,23 +123,44 @@ def _broadcast_saves(y0, n_saves: int):
     )
 
 
-def _make_stepper(solver, term, grid: TimeGrid, args, masked):
+def _pick_step(dWs, n):
+    """Step ``n``'s increment from the stacked bulk realization."""
+    return jax.tree_util.tree_map(lambda x: x[n], dWs)
+
+
+def _make_stepper(solver, term, grid: TimeGrid, args, masked, dWs=None):
     """One grid step ``((state, w), n) -> ((new_state, w_next), (t, h))``;
     zero-length padding steps of a realized grid are a no-op.
 
-    When the driver supports point evaluation (a Virtual Brownian Tree), the
-    forward sweeps *stream* the path: ``w`` carries ``W(ts[n])`` so each step
-    costs one tree descent instead of the two a fresh ``increment_over``
-    query pays — bitwise-identical increments, since ``weval`` is a pure
-    function of ``(key, t)``.  (The reversible *backward* sweep keeps the
-    per-step ``grid.increment(n)`` recompute: it needs increments in
-    arbitrary order with no carried state.)  Returns ``(init_w, step)``;
-    ``init_w()`` builds the initial carry element.
+    ``dWs`` (the default — see :meth:`~repro.core.grid.TimeGrid.increments`)
+    is the bulk Brownian realization: every step's increment was generated in
+    one batched pass before the scan, and the step body just streams row
+    ``n`` out of the buffer — no per-step threefry or tree descent inside
+    the sequential loop.  With ``dWs=None`` the pre-bulk paths are kept:
+    when the driver supports point evaluation (a Virtual Brownian Tree), the
+    forward sweeps *stream* the path — ``w`` carries ``W(ts[n])`` so each
+    step costs one tree descent instead of the two a fresh
+    ``increment_over`` query pays — and otherwise each step queries
+    ``grid.increment(n)``.  All three spellings produce bitwise-identical
+    increments (``weval``/``fold_in`` are pure functions of their inputs).
+    Returns ``(init_w, step)``; ``init_w()`` builds the initial carry
+    element.
     """
     driver = grid.driver
-    stream = driver is not None and hasattr(driver, "weval")
+    stream = dWs is None and driver is not None and hasattr(driver, "weval")
 
-    if stream:
+    if dWs is not None:
+        def init_w():
+            return None
+
+        def step(carry, n):
+            state, w = carry
+            t, h = grid.t_of(n), grid.h_of(n)
+            new = solver.step(term, state, t, h, _pick_step(dWs, n), args)
+            if masked:
+                new = tree_select(h > 0, new, state)
+            return (new, w), (t, h)
+    elif stream:
         def init_w():
             return driver.weval(grid.ts[0])
 
@@ -162,11 +189,11 @@ def _make_stepper(solver, term, grid: TimeGrid, args, masked):
 
 
 def _saving_step(solver, term, grid: TimeGrid, args, masked, save_ts,
-                 eps_end, h_floor):
+                 eps_end, h_floor, dWs=None):
     """Scan body over ``((state, w), ys)`` carrying the dense-output buffer —
     the ONE spelling of the step+fill invariant every adjoint's forward
     pass shares (bitwise-identical ``ys`` across adjoints)."""
-    init_w, step = _make_stepper(solver, term, grid, args, masked)
+    init_w, step = _make_stepper(solver, term, grid, args, masked, dWs)
 
     def one(carry, n):
         sw, ys = carry
@@ -185,7 +212,7 @@ def _saving_step(solver, term, grid: TimeGrid, args, masked, save_ts,
 # ---------------------------------------------------------------------------
 
 def _solve_scan(solver, term, y0, grid: TimeGrid, args, save_every, remat_chunk,
-                save_at=None):
+                save_at=None, dWs=None):
     masked = not grid.is_uniform
 
     if save_at is not None:
@@ -193,7 +220,7 @@ def _solve_scan(solver, term, y0, grid: TimeGrid, args, save_every, remat_chunk,
         # save buffer, filled by whichever step covers each save time.
         save_ts, eps_end, h_floor = _save_consts(grid, save_at)
         init_w, one = _saving_step(solver, term, grid, args, masked, save_ts,
-                                   eps_end, h_floor)
+                                   eps_end, h_floor, dWs)
         carry0 = ((solver.init(term, grid.t0, y0, args), init_w()),
                   _broadcast_saves(y0, len(save_at)))
 
@@ -214,7 +241,7 @@ def _solve_scan(solver, term, y0, grid: TimeGrid, args, save_every, remat_chunk,
         return SolveResult(solver.extract(state_f), ys)
 
     n_seg, seg_len = _segment_counts(grid.n_steps, save_every)
-    init_w, step = _make_stepper(solver, term, grid, args, masked)
+    init_w, step = _make_stepper(solver, term, grid, args, masked, dWs)
 
     def one_step(carry, n):
         return step(carry, n)[0], None
@@ -249,25 +276,25 @@ def _solve_scan(solver, term, y0, grid: TimeGrid, args, save_every, remat_chunk,
 # ---------------------------------------------------------------------------
 
 def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
-                      save_at=None):
+                      save_at=None, dWs=None):
     n_steps = grid.n_steps
     n_seg, seg_len = _segment_counts(n_steps, save_every)
     masked = not grid.is_uniform
     if save_at is not None:
         save_ts, eps_end, h_floor = _save_consts(grid, save_at)
 
-    def forward(grid, y0, args):
+    def forward(grid, y0, args, dWs):
         state0 = solver.init(term, grid.t0, y0, args)
 
         if save_at is not None:
             init_w, one = _saving_step(solver, term, grid, args, masked,
-                                       save_ts, eps_end, h_floor)
+                                       save_ts, eps_end, h_floor, dWs)
             ((state_f, _), ys), _ = jax.lax.scan(
                 one, ((state0, init_w()), _broadcast_saves(y0, len(save_at))),
                 jnp.arange(n_steps))
             return state_f, ys
 
-        init_w, step = _make_stepper(solver, term, grid, args, masked)
+        init_w, step = _make_stepper(solver, term, grid, args, masked, dWs)
 
         def segment(carry, n0):
             carry, _ = jax.lax.scan(
@@ -280,16 +307,21 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
         return state_f, (ys if save_every else None)
 
     @jax.custom_vjp
-    def run(grid, y0, args):
-        state_f, ys = forward(grid, y0, args)
+    def run(grid, y0, args, dWs):
+        state_f, ys = forward(grid, y0, args, dWs)
         return SolveResult(solver.extract(state_f), ys)
 
-    def run_fwd(grid, y0, args):
-        state_f, ys = forward(grid, y0, args)
-        return SolveResult(solver.extract(state_f), ys), (grid, state_f, args)
+    def run_fwd(grid, y0, args, dWs):
+        state_f, ys = forward(grid, y0, args, dWs)
+        return SolveResult(solver.extract(state_f), ys), (grid, state_f, args,
+                                                          dWs)
 
     def run_bwd(res, ct):
-        grid, state_f, args = res
+        # The backward sweep streams the SAME bulk realization the forward
+        # consumed (it is a residual, not recomputed): increments are read in
+        # reverse order from the buffer, keeping the O(1)-in-trajectory
+        # reconstruction while dropping the per-step driver recompute.
+        grid, state_f, args, dWs = res
         ct_yf, ct_ys = ct.y_final, ct.ys
 
         # Inject the terminal cotangent through `extract`.
@@ -299,7 +331,8 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
 
         def body(carry, n):
             state, ct_state, ct_args = carry
-            t, h, dW = grid.t_of(n), grid.h_of(n), grid.increment(n)
+            t, h = grid.t_of(n), grid.h_of(n)
+            dW = grid.increment(n) if dWs is None else _pick_step(dWs, n)
             live = (h > 0) if masked else True
             # 1. Reconstruct the pre-step state (O(h^{m+1}) drift for EES;
             #    exact for algebraically reversible solvers).  Padding steps
@@ -382,11 +415,12 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
                 lambda cy, c: cy + jnp.einsum(
                     "s,s...->...", w0.astype(c.dtype), c),
                 ct_y0, ct_ys)
-        # The grid is data: zero cotangents for ts/hs and the driver's key.
-        return (_float0_like(grid), ct_y0, ct_args)
+        # The grid is data: zero cotangents for ts/hs, the driver's key, and
+        # the bulk noise buffer.
+        return (_float0_like(grid), ct_y0, ct_args, _float0_like(dWs))
 
     run.defvjp(run_fwd, run_bwd)
-    return run(grid, y0, args)
+    return run(grid, y0, args, dWs)
 
 
 # ---------------------------------------------------------------------------
@@ -404,6 +438,7 @@ def solve(
     save_every: Optional[int] = None,
     save_at=None,
     remat_chunk: Optional[int] = None,
+    bulk_increments: bool = True,
 ) -> SolveResult:
     """Integrate ``term`` over ``grid`` with ``solver`` — THE solve loop.
 
@@ -451,6 +486,20 @@ def solve(
         (reversible injects each save cotangent during the backward sweep).
         Entries at or before ``t0`` (or beyond a budget-exhausted grid's
         end) hold ``y0``.
+    bulk_increments:
+        ``True`` (default): realize every step's Brownian increment in ONE
+        batched driver pass before the scan
+        (:meth:`~repro.core.grid.TimeGrid.increments` — stacked threefry /
+        one batched level-sweep) and stream rows out of the buffer on both
+        the forward and the reversible-backward sweeps.  The increments are
+        bit-identical to the per-step draws; results and gradients match
+        the per-step path to ulp-level (the scan body is a different XLA
+        program, so FMA scheduling may differ in the last bit — all
+        *within-mode* reproducibility guarantees are exact).  Trades
+        O(n_steps x noise_shape) buffer memory for hoisting all RNG out of
+        the sequential hot loop.  ``False`` restores per-step generation
+        (the pre-PR-4 behavior — e.g. when the noise buffer itself would
+        not fit).
 
     Returns
     -------
@@ -476,9 +525,10 @@ def solve(
             f"granularity and has no effect under adjoint={adjoint!r} — "
             "drop it or use adjoint='recursive'"
         )
+    dWs = grid.increments() if bulk_increments else None
     if adjoint == "full":
         return _solve_scan(solver, term, y0, grid, args, save_every, None,
-                           save_at)
+                           save_at, dWs)
     if adjoint == "recursive":
         if remat_chunk is None:
             seg = save_every if save_every is not None else grid.n_steps
@@ -486,8 +536,8 @@ def solve(
             while seg % remat_chunk != 0:
                 remat_chunk -= 1
         return _solve_scan(solver, term, y0, grid, args, save_every,
-                           remat_chunk, save_at)
+                           remat_chunk, save_at, dWs)
     if adjoint == "reversible":
         return _solve_reversible(solver, term, y0, grid, args, save_every,
-                                 save_at)
+                                 save_at, dWs)
     raise ValueError(f"unknown adjoint {adjoint!r}")

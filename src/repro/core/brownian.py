@@ -42,14 +42,24 @@ def _is_simple_shape(x) -> bool:
     return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
 
 
-def _stacked_grid_increments(driver, ts):
-    """All per-step increments of grid ``ts``, stacked on a leading axis.
+# The bulk realizations run under their own jit so the generated *bits* are
+# independent of the calling context: an eager caller runs the same compiled
+# computation that an outer jit inlines (op-by-op execution would fuse the
+# uniform->normal transform differently on CPU and drift by an ulp), keeping
+# "batch == loop == offline replay" exact.  The driver is a pytree argument,
+# so one compilation is shared per (structure, grid length).
 
-    Materialises O(len(ts)) memory — analysis/tests; the solve loops call
-    ``grid_increment`` per step instead.  Shared by every driver.
-    """
-    ns = jnp.arange(ts.shape[0] - 1)
-    return jax.vmap(lambda n: driver.grid_increment(ts, n))(ns)
+@jax.jit
+def _bulk_path_increments(bm: "BrownianPath"):
+    return jax.vmap(bm.increment)(jnp.arange(bm.n_steps))
+
+
+@jax.jit
+def _bulk_tree_increments(tree: "VirtualBrownianTree", ts):
+    w = jax.vmap(tree.weval)(ts)
+    return jax.tree_util.tree_map(lambda x: x[1:] - x[:-1], w)
+
+
 
 
 @runtime_checkable
@@ -57,13 +67,20 @@ class BrownianDriver(Protocol):
     """What a Brownian driver must provide: increments over time intervals.
 
     ``increment_over(s, t)`` returns ``W(t) - W(s)`` as a pytree matching the
-    driver's ``shape``.  ``grid_increment(ts, n)`` is the step-indexed form a
-    :class:`~repro.core.grid.TimeGrid` solve consumes: the increment over step
-    ``n`` of the (possibly non-uniform) grid ``ts`` — O(1)-memory recomputable
-    in any order, which is what the reversible adjoint's backward
-    reconstruction sweep relies on.  Fixed-grid drivers additionally expose
-    their native grid (``n_steps`` / ``t_of`` / ``increment``); the Virtual
-    Brownian Tree additionally exposes point evaluation ``weval(t)``.
+    driver's ``shape``.  ``grid_increment(ts, n)`` is the step-indexed form:
+    the increment over step ``n`` of the (possibly non-uniform) grid ``ts`` —
+    O(1)-memory recomputable in any order, which is what the reversible
+    adjoint's backward reconstruction sweep relies on.
+    ``grid_increments(ts)`` is its **bulk** form and the solve default since
+    PR 4: every per-step increment of the grid, stacked on a leading
+    ``n_steps`` axis in ONE batched pass (stacked threefry for
+    :class:`BrownianPath`, a single batched level-sweep for
+    :class:`VirtualBrownianTree`), bitwise-equal entry-for-entry to the
+    per-step calls — so solves stream noise from a precomputed buffer instead
+    of paying per-step RNG inside the sequential scan.  Fixed-grid drivers
+    additionally expose their native grid (``n_steps`` / ``t_of`` /
+    ``increment``); the Virtual Brownian Tree additionally exposes point
+    evaluation ``weval(t)``.
     """
 
     t0: float
@@ -127,25 +144,20 @@ class BrownianPath:
     def increment_over(self, s, t):
         """W(t) - W(s) for *grid-aligned* s < t (driver-protocol entry point).
 
-        ``s`` and ``t`` are rounded to the nearest grid node; the increment is
-        the sum of the per-step increments in between (O(n1 - n0) — the
-        fixed-grid driver is built for step-indexed access; use
-        :class:`VirtualBrownianTree` for arbitrary-time queries in O(depth)).
+        ``s`` and ``t`` are rounded to the nearest grid node and the
+        increment is read out of the prefix-sum path ``W_{t_n}``: one
+        batched threefry draw + cumsum over the whole grid (all lanes in
+        parallel, realized per call — O(n_steps) work and memory, but no
+        sequential dependency) and two gathers, replacing the O(n1 - n0)
+        *sequential* ``fori_loop`` accumulation this method used to run.
+        For many short-window queries, or any arbitrary-time query, use a
+        :class:`VirtualBrownianTree` — O(depth) time and O(1) memory per
+        query; the fixed-grid driver is built for step-indexed access.
         """
         n0 = jnp.round((s - self.t0) / self.h).astype(jnp.int32)
         n1 = jnp.round((t - self.t0) / self.h).astype(jnp.int32)
-
-        def add(n, acc):
-            return jax.tree_util.tree_map(jnp.add, acc, self.increment(n))
-
-        if _is_simple_shape(self.shape):
-            zero = jnp.zeros(self.shape, self.dtype)
-        else:
-            zero = jax.tree_util.tree_map(
-                lambda sh: jnp.zeros(sh, self.dtype), self.shape,
-                is_leaf=_is_simple_shape,
-            )
-        return jax.lax.fori_loop(n0, n1, add, zero)
+        w = self.path()
+        return jax.tree_util.tree_map(lambda x: x[n1] - x[n0], w)
 
     def grid_increment(self, ts, n):
         """dW over step ``n`` of the grid ``ts`` — which must be this path's
@@ -167,12 +179,26 @@ class BrownianPath:
         return self.increment(n)
 
     def grid_increments(self, ts):
-        """Stacked per-step increments of grid ``ts`` (see
-        :func:`_stacked_grid_increments`)."""
-        return _stacked_grid_increments(self, ts)
+        """All per-step increments of grid ``ts`` in one stacked threefry pass.
+
+        One ``vmap`` over the step index: every ``fold_in(key, n)`` +
+        ``normal`` draw runs in a single batched kernel, with row ``n``
+        bitwise-equal to ``increment(n)`` — the bulk form every solve streams
+        from by default (``ts`` must be this path's native grid, as for
+        :meth:`grid_increment`).
+        """
+        n_grid = ts.shape[0] - 1
+        if n_grid != self.n_steps:
+            raise ValueError(
+                f"grid of {n_grid} steps does not match this BrownianPath's "
+                f"native {self.n_steps}-step grid; increments are indexed by "
+                "step (fold_in(key, n)) — use a VirtualBrownianTree for "
+                "arbitrary (realized) grids"
+            )
+        return _bulk_path_increments(self)
 
     def path(self) -> jax.Array:
-        """Cumulative path W_{t_n}, shape (n_steps+1, *shape) — for analysis only."""
+        """Cumulative path W_{t_n}, shape (n_steps+1, *shape)."""
         incs = jax.vmap(self.increment)(jnp.arange(self.n_steps))
         w = jax.tree_util.tree_map(lambda x: jnp.cumsum(x, axis=0), incs)
         return jax.tree_util.tree_map(
@@ -294,9 +320,16 @@ class VirtualBrownianTree:
         return self.increment_over(ts[n], ts[n + 1])
 
     def grid_increments(self, ts):
-        """Stacked per-step increments of grid ``ts`` (see
-        :func:`_stacked_grid_increments`)."""
-        return _stacked_grid_increments(self, ts)
+        """All per-step increments of grid ``ts`` in one batched level-sweep.
+
+        Evaluates ``W`` at every grid node with a single ``vmap`` over
+        :meth:`weval` — the dyadic descent runs once per *node* (``n+1``
+        descents, all lanes in parallel) instead of twice per *step* as a
+        ``vmap`` of :meth:`increment_over` would — and differences adjacent
+        nodes.  Since ``weval`` is a pure function of ``(key, t)``, each row
+        ``n`` is bitwise-equal to ``grid_increment(ts, n)``.
+        """
+        return _bulk_tree_increments(self, ts)
 
 
 def virtual_brownian_tree(key, t0, t1, shape=(), dtype=jnp.float32,

@@ -92,6 +92,21 @@ class TimeGrid:
             return None
         return self.driver.grid_increment(self.ts, n)
 
+    def increments(self):
+        """All per-step increments, stacked on a leading ``n_steps`` axis.
+
+        The **bulk Brownian realization** every solve streams from by default
+        (PR 4): one batched pass over the driver (stacked threefry for a
+        :class:`~repro.core.brownian.BrownianPath`, one batched level-sweep
+        for a :class:`~repro.core.brownian.VirtualBrownianTree`), with row
+        ``n`` bitwise-equal to :meth:`increment`\\ ``(n)``.  Returns ``None``
+        in ODE mode or for a custom driver without a bulk path (solves then
+        fall back to per-step queries).
+        """
+        if self.driver is None or not hasattr(self.driver, "grid_increments"):
+            return None
+        return self.driver.grid_increments(self.ts)
+
     # -- constructors -------------------------------------------------------
 
     @classmethod

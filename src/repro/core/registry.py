@@ -15,7 +15,7 @@ constructing solver objects by hand::
 A spec is ``name`` or ``name:key=val,key=val`` — the kwargs are passed to the
 registered factory, so any tunable of the underlying solver (the EES family
 parameter ``x``, the MCF contraction ``lam``, the fused-kernel toggle
-``use_kernel``) is reachable from a plain string.  A bare word in the kwarg
+``use_kernels``) is reachable from a plain string.  A bare word in the kwarg
 tail is a boolean flag (``"ees25:adaptive"`` == ``"ees25:adaptive=True"``).
 ``get_solver`` is idempotent on non-strings: passing an already-constructed
 solver object returns it unchanged, so APIs can accept either form.
@@ -163,7 +163,7 @@ def get_solver(spec, **overrides):
         already-constructed solver object (returned unchanged).
     overrides:
         Take precedence over kwargs parsed from the spec, so programmatic
-        callers can pin e.g. ``use_kernel=True`` regardless of what the
+        callers can pin e.g. ``use_kernels=True`` regardless of what the
         config string says.
 
     Returns
@@ -206,15 +206,17 @@ def get_solver(spec, **overrides):
 
 register_solver("ees25", ees25_solver)
 register_solver("ees27", ees27_solver)
-register_solver("reversible-heun", lambda: ReversibleHeun())
+register_solver("reversible-heun",
+                lambda use_kernels=False: ReversibleHeun(use_kernels=use_kernels))
 
 
 def _butcher_factory(tab):
-    return lambda: ButcherSolver(tab)
+    return lambda use_kernels=False: ButcherSolver(tab, use_kernels=use_kernels)
 
 
 def _mcf_factory(tab):
-    return lambda lam=0.999: MCFSolver(tab, lam=lam)
+    return lambda lam=0.999, use_kernels=False: MCFSolver(
+        tab, lam=lam, use_kernels=use_kernels)
 
 
 for _tab in (tableaux.euler, tableaux.midpoint, tableaux.heun,

@@ -90,6 +90,7 @@ def sdeint(
     h0: Optional[float] = None,
     bm_tol: Optional[float] = None,
     bounded: bool = True,
+    bulk_increments: bool = True,
     noise_shape=None,
     dtype=None,
     batch_keys: Optional[jax.Array] = None,
@@ -170,6 +171,15 @@ def sdeint(
         controller pass with no second sweep — the fastest way to *sample*
         (the serving engine uses this), not reverse-differentiable.  Results
         are bitwise identical between the two modes.
+    bulk_increments:
+        ``True`` (default): every step's Brownian increment is generated in
+        one batched driver pass (stacked threefry on a fixed grid; one
+        batched level-sweep over the Virtual Brownian Tree on a realized
+        grid) and streamed through the solve's forward and
+        reversible-backward sweeps — bit-identical increments (results and
+        gradients match the per-step path to ulp-level), per-step RNG
+        hoisted out of the sequential hot loop (see
+        ``docs/performance.md``).  ``False`` restores per-step generation.
     noise_shape:
         Shape of one Brownian increment.  Defaults to the state's shape for
         diagonal noise; required for ``noise="general"``.
@@ -254,6 +264,7 @@ def sdeint(
                 solver, term, y0, vbt, args, t0=t0, t1=t1,
                 h0=h0, max_steps=int(n_steps), save_at=save_at,
                 bounded=bounded, adjoint=adjoint, remat_chunk=remat_chunk,
+                bulk_increments=bulk_increments,
                 **tols,
             )
     else:
@@ -262,6 +273,7 @@ def sdeint(
             return solve(
                 solver, term, y0, bm, args,
                 adjoint=adjoint, save_every=save_every, remat_chunk=remat_chunk,
+                bulk_increments=bulk_increments,
             )
 
     if batch_keys is None:

@@ -32,6 +32,33 @@ from .pytree import tree_add, tree_axpy, tree_scale, tree_sub, tree_zeros_like
 from .tableaux import Tableau
 from .williamson import EES25_2N, EES27_2N, LowStorage
 
+# Fused step kernels (repro.kernels.sde_step): imported once at module level —
+# never inside the step hot loop — and guarded so a stripped install without
+# the kernels layer still runs every solver on the plain pytree path.
+try:
+    from repro.kernels.sde_step import ops as _fused_ops
+except Exception:  # pragma: no cover — kernels layer absent
+    _fused_ops = None
+try:
+    from repro.kernels.williamson2n.ops import williamson2n_update as _williamson2n_update
+except Exception:  # pragma: no cover — kernels layer absent
+    _williamson2n_update = None
+
+
+def _resolve_use_kernels(use_kernels, use_kernel):
+    """One boolean from the current flag and its pre-PR-4 spelling.
+
+    An explicitly-set ``use_kernels`` wins (``get_solver`` overrides must be
+    able to pin the fused path on/off against a config string using the old
+    spelling); the legacy ``use_kernel`` applies only when the new flag was
+    left at its ``None`` default.
+    """
+    if use_kernels is not None:
+        return bool(use_kernels)
+    if use_kernel is not None:
+        return bool(use_kernel)
+    return False
+
 __all__ = [
     "SDETerm",
     "ButcherSolver",
@@ -74,11 +101,20 @@ class SDETerm:
         g = None if self.noise == "none" else self.diffusion(t, y, args)
         return f, g
 
-    def combine(self, f, g, h, dW):
-        """f * h + g . dW  (the driver-weighted increment)."""
-        out = tree_scale(h, f)
+    def combine(self, f, g, h, dW, use_kernels: bool = False):
+        """f * h + g . dW  (the driver-weighted increment).
+
+        ``use_kernels=True`` routes diagonal/general noise through the fused
+        :mod:`repro.kernels.sde_step` op (single pass on TPU, ``ref.py``-twin
+        arithmetic elsewhere); the default path is the classic tree_map chain,
+        bitwise-unchanged.
+        """
         if self.noise == "none" or g is None:
-            return out
+            return tree_scale(h, f)
+        if use_kernels and _fused_ops is not None and self.noise in (
+                "diagonal", "general"):
+            return _fused_ops.tree_increment(f, g, dW, h, noise=self.noise)
+        out = tree_scale(h, f)
         if self.noise == "diagonal":
             return jax.tree_util.tree_map(lambda o, gi, wi: o + gi * wi, out, g, dW)
         if self.noise == "general":
@@ -87,21 +123,29 @@ class SDETerm:
             )
         raise ValueError(f"unknown noise mode {self.noise!r}")
 
-    def increment(self, t, y, args, h, dW):
+    def increment(self, t, y, args, h, dW, use_kernels: bool = False):
         f, g = self.evals(t, y, args)
-        return self.combine(f, g, h, dW)
+        return self.combine(f, g, h, dW, use_kernels=use_kernels)
 
 
 # -- Butcher-form RK solver ---------------------------------------------------
 
 class ButcherSolver:
-    """Classical (s+1)N-register explicit RK applied to the (h, dW) driver."""
+    """Classical (s+1)N-register explicit RK applied to the (h, dW) driver.
 
-    def __init__(self, tab: Tableau):
+    ``use_kernels=True`` fuses each memory-bound chain of the stage loop —
+    the driver-weighted increment and the a/b-row axpy combinations — into
+    single :mod:`repro.kernels.sde_step` passes (same arithmetic as the
+    ``ref.py`` twins on non-TPU backends; the default path is bitwise the
+    classic tree_axpy chain).
+    """
+
+    def __init__(self, tab: Tableau, use_kernels: bool = False):
         self.tab = tab
         self.name = tab.name
         self.evals_per_step = tab.stages
         self.is_reversible = tab.sym_order > tab.order  # effectively symmetric
+        self.use_kernels = bool(use_kernels) and _fused_ops is not None
 
     def init(self, term, t0, y0, args):
         return y0
@@ -109,21 +153,28 @@ class ButcherSolver:
     def extract(self, state):
         return state
 
+    def _weighted(self, y, incrs, coeffs):
+        """y + sum_i coeffs[i] * incrs[i], skipping zero coefficients."""
+        live = [(c, k) for c, k in zip(coeffs, incrs) if c != 0.0]
+        if not live:
+            return y
+        if self.use_kernels:
+            return _fused_ops.tree_axpy_chain(
+                y, [k for _, k in live], [c for c, _ in live])
+        for c, k in live:
+            y = tree_axpy(c, k, y)
+        return y
+
     def _stages(self, term, state, t, h, dW, args):
         """Run the stage loop once; return (y_next, stage increments)."""
         tab = self.tab
         y = state
         incrs = []
         for i in range(tab.stages):
-            yi = y
-            for j in range(i):
-                if tab.a[i][j] != 0.0:
-                    yi = tree_axpy(tab.a[i][j], incrs[j], yi)
-            incrs.append(term.increment(t + tab.c[i] * h, yi, args, h, dW))
-        out = y
-        for i in range(tab.stages):
-            if tab.b[i] != 0.0:
-                out = tree_axpy(tab.b[i], incrs[i], out)
+            yi = self._weighted(y, incrs, tab.a[i][:i])
+            incrs.append(term.increment(t + tab.c[i] * h, yi, args, h, dW,
+                                        use_kernels=self.use_kernels))
+        out = self._weighted(y, incrs, tab.b)
         return out, incrs
 
     def step(self, term, state, t, h, dW, args):
@@ -157,15 +208,25 @@ class ButcherSolver:
 # -- Williamson 2N solver ------------------------------------------------------
 
 class LowStorageSolver:
-    """Two-register Williamson form (eq. (2)): the paper's memory-optimal EES."""
+    """Two-register Williamson form (eq. (2)): the paper's memory-optimal EES.
 
-    def __init__(self, ls: LowStorage, use_kernel: bool = False):
+    ``use_kernels=True`` fuses the whole per-stage element stream — the
+    driver-weighted increment ``k = f*h + g.dW`` *and* the two-register
+    update — into one :mod:`repro.kernels.sde_step` pass per stage (Pallas on
+    TPU, ``ref.py``-twin arithmetic elsewhere).  With no noise the stage
+    falls back to the precomputed-``k`` ``kernels/williamson2n`` update.  The
+    default path is bitwise the classic tree_axpy recurrence.
+    """
+
+    def __init__(self, ls: LowStorage, use_kernels: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None):
         self.ls = ls
         self.name = ls.name
         self.evals_per_step = ls.stages
         self.is_reversible = ls.sym_order > ls.order
-        # Optional fused Pallas update (beyond-paper TPU optimisation).
-        self.use_kernel = use_kernel
+        # `use_kernel` is the pre-PR-4 spelling, kept so existing spec
+        # strings ("ees25:use_kernel=True") keep selecting the fused path.
+        self.use_kernels = _resolve_use_kernels(use_kernels, use_kernel)
 
     def init(self, term, t0, y0, args):
         return y0
@@ -175,17 +236,17 @@ class LowStorageSolver:
 
     def _update(self, a, b, delta, k, y):
         """delta' = a*delta + k ; y' = y + b*delta'  (optionally fused)."""
-        if self.use_kernel:
-            from repro.kernels.williamson2n.ops import williamson2n_update
-
-            def upd(d, kk, yy):
-                return williamson2n_update(d, kk, yy, a, b)
-
-            pairs = jax.tree_util.tree_map(upd, delta, k, y)
-            delta2 = jax.tree_util.tree_map(lambda p: p[0], pairs,
-                                            is_leaf=lambda p: isinstance(p, tuple))
-            y2 = jax.tree_util.tree_map(lambda p: p[1], pairs,
-                                        is_leaf=lambda p: isinstance(p, tuple))
+        if self.use_kernels and _williamson2n_update is not None:
+            # Explicit flatten/unflatten: an is_leaf-on-tuples unzip would
+            # misfire on states that are themselves tuples.
+            d_leaves, treedef = jax.tree_util.tree_flatten(delta)
+            pairs = [
+                _williamson2n_update(d, kk, yy, a, b)
+                for d, kk, yy in zip(d_leaves, treedef.flatten_up_to(k),
+                                     treedef.flatten_up_to(y))
+            ]
+            delta2 = treedef.unflatten([p[0] for p in pairs])
+            y2 = treedef.unflatten([p[1] for p in pairs])
             return delta2, y2
         delta2 = tree_axpy(a, delta, k)
         y2 = tree_axpy(b, delta2, y)
@@ -195,16 +256,33 @@ class LowStorageSolver:
         """Run the 2N recurrence once; return (y_next, Y_{s-1}, K_s).
 
         The trailing pair costs nothing in ``step`` (Python references, no
-        extra computation) and is what the embedded estimator consumes.
+        extra computation — unused outputs are dead-code-eliminated under
+        jit) and is what the embedded estimator consumes.
         """
         ls = self.ls
+        noise = getattr(term, "noise", "diagonal")
+        fused = (self.use_kernels and _fused_ops is not None
+                 and noise in ("diagonal", "general"))
         y = state
         delta = tree_zeros_like(y)
         y_prev = y
         k = None
         for l in range(ls.stages):
-            k = term.increment(t + ls.c[l] * h, y, args, h, dW)
             y_prev = y
+            if fused:
+                f, g = term.evals(t + ls.c[l] * h, y, args)
+                if g is None:
+                    fused = False  # declared noise but no diffusion: plain path
+                else:
+                    delta_prev = delta
+                    delta, y = _fused_ops.tree_ws_stage(
+                        delta, y, f, g, dW, h, ls.A[l], ls.B[l], noise=noise)
+                    # K_l = delta' - A_l * delta (for the embedded estimator;
+                    # DCE'd in plain `step`).
+                    k = tree_axpy(-ls.A[l], delta_prev, delta)
+                    continue
+            k = term.increment(t + ls.c[l] * h, y, args, h, dW,
+                               use_kernels=self.use_kernels)
             delta, y = self._update(ls.A[l], ls.B[l], delta, k, y)
         return y, y_prev, k
 
@@ -246,6 +324,13 @@ class ReversibleHeun:
     evals_per_step = 1
     is_reversible = True
 
+    def __init__(self, use_kernels: bool = False):
+        # Fused driver-weighted increments (repro.kernels.sde_step); the
+        # algebraic reversibility argument only needs combine(-h, -dW) ==
+        # -combine(h, dW), which holds exactly on the fused path too (IEEE
+        # negation is exact).
+        self.use_kernels = bool(use_kernels) and _fused_ops is not None
+
     def init(self, term, t0, y0, args):
         f, g = term.evals(t0, y0, args)
         if g is None:
@@ -257,12 +342,12 @@ class ReversibleHeun:
 
     def step(self, term, state, t, h, dW, args):
         y, yh, fh, gh = state
-        inc_prev = term.combine(fh, gh, h, dW)
+        inc_prev = term.combine(fh, gh, h, dW, use_kernels=self.use_kernels)
         yh2 = tree_add(tree_sub(tree_scale(2.0, y), yh), inc_prev)
         f2, g2 = term.evals(t + h, yh2, args)
         if g2 is None:
             g2 = tree_zeros_like(f2)
-        inc_next = term.combine(f2, g2, h, dW)
+        inc_next = term.combine(f2, g2, h, dW, use_kernels=self.use_kernels)
         y2 = tree_axpy(0.5, tree_add(inc_prev, inc_next), y)
         return (y2, yh2, f2, g2)
 
@@ -283,12 +368,14 @@ class MCFSolver:
     the driver increment dX = (h, dW).  Costs 2x the base stages per step.
     """
 
-    def __init__(self, base: Tableau, lam: float = 0.999, name: Optional[str] = None):
-        self.base = ButcherSolver(base)
+    def __init__(self, base: Tableau, lam: float = 0.999, name: Optional[str] = None,
+                 use_kernels: bool = False):
+        self.base = ButcherSolver(base, use_kernels=use_kernels)
         self.lam = lam
         self.name = name or f"MCF-{base.name}"
         self.evals_per_step = 2 * base.stages
         self.is_reversible = True
+        self.use_kernels = self.base.use_kernels
 
     def _psi(self, term, z, t, h, dW, args):
         return tree_sub(self.base.step(term, z, t, h, dW, args), z)
@@ -325,13 +412,18 @@ class MCFSolver:
         return (y, z)
 
 
-def ees25_solver(x: float = 0.1, use_kernel: bool = False) -> LowStorageSolver:
+def ees25_solver(x: float = 0.1, use_kernels: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None) -> LowStorageSolver:
     if x == 0.1:
-        return LowStorageSolver(EES25_2N, use_kernel=use_kernel)
+        return LowStorageSolver(EES25_2N, use_kernels=use_kernels,
+                                use_kernel=use_kernel)
     from .williamson import ees25_2n
 
-    return LowStorageSolver(ees25_2n(x), use_kernel=use_kernel)
+    return LowStorageSolver(ees25_2n(x), use_kernels=use_kernels,
+                            use_kernel=use_kernel)
 
 
-def ees27_solver(use_kernel: bool = False) -> LowStorageSolver:
-    return LowStorageSolver(EES27_2N, use_kernel=use_kernel)
+def ees27_solver(use_kernels: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None) -> LowStorageSolver:
+    return LowStorageSolver(EES27_2N, use_kernels=use_kernels,
+                            use_kernel=use_kernel)

@@ -1,0 +1,16 @@
+"""Fused SDE step kernels: driver-weighted increment + RK register updates.
+
+See ``sde_step.py`` (Pallas kernels), ``ops.py`` (dispatch + custom VJPs +
+pytree API — what ``core/solvers.py`` consumes behind ``use_kernels``), and
+``ref.py`` (pure-jnp numerics twins).
+"""
+from . import ops, ref  # noqa: F401
+from .ops import (  # noqa: F401
+    force_interpret,
+    fused_axpy_chain,
+    fused_increment,
+    fused_ws_stage,
+    tree_axpy_chain,
+    tree_increment,
+    tree_ws_stage,
+)

@@ -1,0 +1,302 @@
+"""Shape-agnostic fused SDE-step ops: dispatch, custom VJPs, pytree API.
+
+Three ops cover the solve hot loop (see ``sde_step.py`` for the kernels and
+``ref.py`` for the numerics twins):
+
+* :func:`tree_increment`        — ``k = f*h + g.dW`` (the driver-weighted
+  increment; diagonal / general / no noise),
+* :func:`tree_ws_stage`         — increment + Williamson 2N register update
+  in one pass (subsumes ``kernels/williamson2n``, which takes ``k``
+  precomputed),
+* :func:`tree_axpy_chain`       — ``y + sum_i c_i k_i`` (Butcher stage
+  preparation and output combination).
+
+Every op is wrapped in a ``custom_vjp`` whose backward is closed-form (all
+three are linear in their array operands) and itself fused: the Williamson
+stage backward runs as a single Pallas pass, the rest as one fused XLA
+elementwise expression.  This keeps the reversible adjoint's inner
+``jax.vjp``-of-``step`` working through the kernels with no Pallas transpose
+rule, under every adjoint.
+
+Dispatch per leaf: the compiled Pallas path is used on TPU for states past the
+tile size (general-noise variants additionally need lane-aligned ``(d, m)``);
+``interpret=True`` — or the :func:`force_interpret` test/CI hook — runs the
+same kernel bodies in Python on any backend; everywhere else the op *is* its
+``ref.py`` twin, so CPU/GPU numerics are identical to the reference by
+construction.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from . import sde_step as _k
+
+__all__ = [
+    "force_interpret",
+    "fused_increment",
+    "fused_ws_stage",
+    "fused_axpy_chain",
+    "tree_increment",
+    "tree_ws_stage",
+    "tree_axpy_chain",
+]
+
+_TILE = _k.LANE * _k.SUBLANE
+
+# Test/CI hook: force every op through the Pallas kernel bodies in interpret
+# mode (Python on any backend) so kernel code paths are exercised end-to-end
+# without a TPU.  Read at trace time.
+_FORCE_INTERPRET = False
+
+
+@contextlib.contextmanager
+def force_interpret():
+    """Run every fused op through its Pallas kernel in interpret mode."""
+    global _FORCE_INTERPRET
+    prev, _FORCE_INTERPRET = _FORCE_INTERPRET, True
+    try:
+        yield
+    finally:
+        _FORCE_INTERPRET = prev
+
+
+def _mode(x: jax.Array, interpret: bool, aligned: bool = True) -> str:
+    if interpret or _FORCE_INTERPRET:
+        return "interpret"
+    if jax.default_backend() == "tpu" and x.size >= _TILE and aligned:
+        return "pallas"
+    return "ref"
+
+
+# -- 2D flattening ------------------------------------------------------------
+
+def _to2d(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _TILE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, x.dtype)])
+    return flat.reshape(-1, _k.LANE)
+
+
+def _from2d(x2, shape, n):
+    return x2.reshape(-1)[:n].reshape(shape)
+
+
+def _rows(x, trailing: int):
+    """Flatten leading (batch) dims of ``x``, keeping ``trailing`` dims.
+
+    Returns the (padded) 2D+ view plus ``(n, batch_shape)`` to undo it; rows
+    are padded to a block multiple so the grid divides evenly.
+    """
+    batch = x.shape[:x.ndim - trailing]
+    tail = x.shape[x.ndim - trailing:]
+    n = 1
+    for s in batch:
+        n *= s
+    flat = x.reshape((n,) + tail)
+    block = n if n <= 8 else 128
+    padded = -(-n // block) * block
+    if padded != n:
+        padding = jnp.zeros((padded - n,) + tail, x.dtype)
+        flat = jnp.concatenate([flat, padding])
+    return flat, n, batch, min(block, padded)
+
+
+def _h_arr(h, dtype):
+    return jnp.asarray(h, dtype).reshape(1, 1)
+
+
+# -- driver-weighted increment ------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _increment(mode: str, noise: str, f, g, dW, h):
+    if mode == "ref":
+        if noise == "diagonal":
+            return _ref.increment_diag_ref(f, g, dW, h)
+        return _ref.increment_general_ref(f, g, dW, h)
+    interp = mode == "interpret"
+    if noise == "diagonal":
+        f2 = _to2d(f)
+        out = _k.increment_diag_2d(f2, _to2d(g), _to2d(dW),
+                                   _h_arr(h, f.dtype), interpret=interp)
+        return _from2d(out, f.shape, f.size)
+    fr, n, batch, block = _rows(f, 1)
+    gr = _rows(g, 2)[0]
+    wr = _rows(dW, 1)[0]
+    out = _k.increment_general_2d(fr, gr, wr, _h_arr(h, f.dtype),
+                                  block_n=block, interpret=interp)
+    return out[:n].reshape(batch + f.shape[f.ndim - 1:])
+
+
+def _increment_fwd(mode, noise, f, g, dW, h):
+    return _increment(mode, noise, f, g, dW, h), (f, g, dW, h)
+
+
+def _increment_bwd(mode, noise, res, ct):
+    f, g, dW, h = res
+    ct_f = h * ct
+    if noise == "diagonal":
+        ct_g, ct_dW = dW * ct, g * ct
+    else:
+        ct_g = jnp.einsum("...d,...m->...dm", ct, dW)
+        ct_dW = jnp.einsum("...dm,...d->...m", g, ct)
+    ct_h = jnp.sum(f * ct).astype(h.dtype).reshape(jnp.shape(h))
+    return ct_f, ct_g, ct_dW, ct_h
+
+
+_increment.defvjp(_increment_fwd, _increment_bwd)
+
+
+def fused_increment(f, g, dW, h, *, noise: str, interpret: bool = False):
+    """``k = f*h + g.dW`` for one leaf; fused on TPU, ref elsewhere."""
+    if noise not in ("diagonal", "general"):
+        raise ValueError(f"unknown noise mode {noise!r}")
+    aligned = noise == "diagonal" or (
+        f.shape[-1] % _k.SUBLANE == 0 and dW.shape[-1] % _k.LANE == 0)
+    mode = _mode(f, interpret, aligned)
+    return _increment(mode, noise, f, g, dW, jnp.asarray(h, f.dtype))
+
+
+# -- fused increment + Williamson 2N stage ------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _ws_stage(mode: str, noise: str, a: float, b: float, delta, y, f, g, dW, h):
+    if mode == "ref":
+        if noise == "diagonal":
+            return _ref.ws_stage_diag_ref(delta, y, f, g, dW, h, a, b)
+        return _ref.ws_stage_general_ref(delta, y, f, g, dW, h, a, b)
+    interp = mode == "interpret"
+    if noise == "diagonal":
+        d2, y2 = _k.ws_stage_diag_2d(
+            _to2d(delta), _to2d(y), _to2d(f), _to2d(g), _to2d(dW),
+            _h_arr(h, f.dtype), a=a, b=b, interpret=interp)
+        return _from2d(d2, delta.shape, delta.size), _from2d(y2, y.shape, y.size)
+    dr, n, batch, block = _rows(delta, 1)
+    d2, y2 = _k.ws_stage_general_2d(
+        dr, _rows(y, 1)[0], _rows(f, 1)[0], _rows(g, 2)[0], _rows(dW, 1)[0],
+        _h_arr(h, f.dtype), a=a, b=b, block_n=block, interpret=interp)
+    shape = batch + delta.shape[delta.ndim - 1:]
+    return d2[:n].reshape(shape), y2[:n].reshape(shape)
+
+
+def _ws_stage_fwd(mode, noise, a, b, delta, y, f, g, dW, h):
+    return _ws_stage(mode, noise, a, b, delta, y, f, g, dW, h), (f, g, dW, h)
+
+
+def _ws_stage_bwd(mode, noise, a, b, res, ct):
+    f, g, dW, h = res
+    ct_d2, ct_y2 = ct
+    if noise == "diagonal" and mode != "ref":
+        ctd, ctf, ctg, ctdw = _k.ws_stage_diag_bwd_2d(
+            _to2d(ct_d2), _to2d(ct_y2), _to2d(g), _to2d(dW),
+            _h_arr(h, f.dtype), a=a, b=b, interpret=mode == "interpret")
+        shp, n = f.shape, f.size
+        ct_delta, ct_f = _from2d(ctd, shp, n), _from2d(ctf, shp, n)
+        ct_g, ct_dW = _from2d(ctg, shp, n), _from2d(ctdw, shp, n)
+    else:
+        common = ct_d2 + b * ct_y2
+        ct_delta, ct_f = a * common, h * common
+        if noise == "diagonal":
+            ct_g, ct_dW = dW * common, g * common
+        else:
+            ct_g = jnp.einsum("...d,...m->...dm", common, dW)
+            ct_dW = jnp.einsum("...dm,...d->...m", g, common)
+    ct_h = jnp.sum(f * (ct_d2 + b * ct_y2)).astype(h.dtype).reshape(jnp.shape(h))
+    return ct_delta, ct_y2, ct_f, ct_g, ct_dW, ct_h
+
+
+_ws_stage.defvjp(_ws_stage_fwd, _ws_stage_bwd)
+
+
+def fused_ws_stage(delta, y, f, g, dW, h, *, a: float, b: float, noise: str,
+                   interpret: bool = False):
+    """One fused Williamson stage for one leaf: returns ``(delta', y')``."""
+    if noise not in ("diagonal", "general"):
+        raise ValueError(f"unknown noise mode {noise!r}")
+    aligned = noise == "diagonal" or (
+        f.shape[-1] % _k.SUBLANE == 0 and dW.shape[-1] % _k.LANE == 0)
+    mode = _mode(f, interpret, aligned)
+    return _ws_stage(mode, noise, float(a), float(b), delta, y, f, g, dW,
+                     jnp.asarray(h, f.dtype))
+
+
+# -- Butcher axpy chain -------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _axpy_chain(mode: str, coeffs, y, incs):
+    if mode == "ref":
+        return _ref.axpy_chain_ref(y, incs, coeffs)
+    s = incs.shape[0]
+    y2 = _to2d(y)
+    incs2 = jnp.stack([_to2d(incs[i]) for i in range(s)])
+    out = _k.axpy_chain_2d(y2, incs2, coeffs=coeffs,
+                           interpret=mode == "interpret")
+    return _from2d(out, y.shape, y.size)
+
+
+def _axpy_chain_fwd(mode, coeffs, y, incs):
+    return _axpy_chain(mode, coeffs, y, incs), None
+
+
+def _axpy_chain_bwd(mode, coeffs, _, ct):
+    c = jnp.asarray(coeffs, ct.dtype).reshape((-1,) + (1,) * ct.ndim)
+    return ct, c * ct[None]
+
+
+_axpy_chain.defvjp(_axpy_chain_fwd, _axpy_chain_bwd)
+
+
+def fused_axpy_chain(y, incs, coeffs, *, interpret: bool = False):
+    """``y + sum_i coeffs[i] * incs[i]`` for one leaf; ``incs`` is ``(s, ...)``."""
+    return _axpy_chain(_mode(y, interpret), tuple(float(c) for c in coeffs),
+                       y, incs)
+
+
+# -- pytree layer (what core/solvers.py calls) --------------------------------
+
+def tree_increment(f, g, dW, h, *, noise: str, interpret: bool = False):
+    """Leafwise :func:`fused_increment` over matching state pytrees."""
+    return jax.tree_util.tree_map(
+        lambda fi, gi, wi: fused_increment(fi, gi, wi, h, noise=noise,
+                                           interpret=interpret),
+        f, g, dW)
+
+
+def tree_ws_stage(delta, y, f, g, dW, h, a: float, b: float, *, noise: str,
+                  interpret: bool = False):
+    """Leafwise fused Williamson stage; returns the ``(delta', y')`` pytrees.
+
+    Unzips by explicit flatten/unflatten over ``delta``'s treedef — an
+    ``is_leaf``-on-tuples trick would misfire on states that are themselves
+    tuples (the product-group ``((N,), (N,))`` form).
+    """
+    d_leaves, treedef = jax.tree_util.tree_flatten(delta)
+    leaves = lambda t: treedef.flatten_up_to(t)
+    pairs = [
+        fused_ws_stage(di, yi, fi, gi, wi, h, a=a, b=b, noise=noise,
+                       interpret=interpret)
+        for di, yi, fi, gi, wi in zip(d_leaves, leaves(y), leaves(f),
+                                      leaves(g), leaves(dW))
+    ]
+    delta2 = treedef.unflatten([p[0] for p in pairs])
+    y2 = treedef.unflatten([p[1] for p in pairs])
+    return delta2, y2
+
+
+def tree_axpy_chain(y, incs, coeffs, *, interpret: bool = False):
+    """Leafwise axpy chain over a list of increment pytrees.
+
+    ``incs`` is a Python list of pytrees matching ``y``; each leaf set is
+    stacked once and reduced in a single fused pass.
+    """
+    if not incs:
+        return y
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *incs)
+    return jax.tree_util.tree_map(
+        lambda yi, si: fused_axpy_chain(yi, si, coeffs, interpret=interpret),
+        y, stacked)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the fused SDE step kernels.
+
+These are the numerics twins of the Pallas kernels in ``sde_step.py``: every
+fused op must match its ``*_ref`` here to tolerance in interpret mode (tested
+in the tier-1 lane), and the XLA fallback path in ``ops.py`` *is* these
+functions, so non-TPU backends run exactly this arithmetic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def increment_diag_ref(f, g, dW, h):
+    """k = f*h + g*dW (diagonal noise: elementwise product)."""
+    return f * h + g * dW
+
+
+def increment_general_ref(f, g, dW, h):
+    """k = f*h + g@dW (general noise: ``(..., d, m) x (..., m) -> (..., d)``)."""
+    return f * h + jnp.einsum("...dm,...m->...d", g, dW)
+
+
+def ws_stage_diag_ref(delta, y, f, g, dW, h, a: float, b: float):
+    """One fused Williamson 2N stage under diagonal noise.
+
+    k = f*h + g*dW;  delta' = a*delta + k;  y' = y + b*delta'.
+    """
+    k = f * h + g * dW
+    d2 = a * delta + k
+    y2 = y + b * d2
+    return d2, y2
+
+
+def ws_stage_general_ref(delta, y, f, g, dW, h, a: float, b: float):
+    """One fused Williamson 2N stage under general (einsum) noise."""
+    k = f * h + jnp.einsum("...dm,...m->...d", g, dW)
+    d2 = a * delta + k
+    y2 = y + b * d2
+    return d2, y2
+
+
+def axpy_chain_ref(y, incs, coeffs):
+    """y + sum_i coeffs[i] * incs[i] over a stacked ``(s, ...)`` increment set.
+
+    The Butcher stage-preparation / output-combination primitive: one weighted
+    reduction instead of a chain of s separate axpys.
+    """
+    c = jnp.asarray(coeffs, incs.dtype).reshape((-1,) + (1,) * y.ndim)
+    return y + jnp.sum(c * incs, axis=0)

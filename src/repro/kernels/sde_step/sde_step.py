@@ -1,0 +1,240 @@
+"""Fused SDE step kernels (TPU Pallas): driver-weighted increment + RK update.
+
+The solve hot loop spends its time in three memory-bound element streams per
+stage (see ``core/solvers.py``):
+
+1. the driver-weighted increment  ``k = f*h + g.dW``  (diagonal elementwise
+   or general-noise einsum),
+2. the Williamson 2N register update  ``delta' = a*delta + k;
+   y' = y + b*delta'``  (eq. (2) of the paper),
+3. the Butcher stage/output combination  ``y + sum_i coeff_i * k_i``.
+
+Unfused, XLA materialises every intermediate between them: ``k`` round-trips
+HBM once per stage, and each axpy in the Butcher chain re-reads its running
+accumulator.  The kernels here fuse each chain into a single pass — every
+element of every operand is read exactly once and every output written exactly
+once, the bandwidth floor for the update.  ``ws_stage_*`` subsumes and extends
+``kernels/williamson2n`` (which fuses only step 2, taking ``k`` precomputed).
+
+All kernels are shape-agnostic via ``ops.py``: elementwise variants flatten
+the state and pad to the (8, 128) tile, the general-noise variants flatten
+batch dims to rows of ``(d, m)`` blocks.  The compiled path is TPU-only;
+``interpret=True`` runs the same kernel bodies in Python (tests / CPU
+bench-smoke), and every op falls back to its ``ref.py`` twin elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+
+_SCALAR_SPEC = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _row_spec(block_rows):
+    return pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+
+
+def _row_grid(rows, block_rows):
+    # ops.py pads flat states to the (SUBLANE, LANE) tile, so `rows` is a
+    # multiple of SUBLANE but not necessarily of block_rows (e.g. 320 rows
+    # vs the default 256): shrink to the largest common divisor, which stays
+    # a SUBLANE multiple.
+    block_rows = math.gcd(min(block_rows, rows), rows)
+    return (rows // block_rows,), block_rows
+
+
+# -- 1. driver-weighted increment --------------------------------------------
+
+def _increment_diag_kernel(f_ref, g_ref, dw_ref, h_ref, out_ref):
+    h = h_ref[0, 0]
+    out_ref[...] = f_ref[...] * h + g_ref[...] * dw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def increment_diag_2d(f, g, dw, h, *, block_rows: int = 256, interpret: bool = False):
+    """k = f*h + g*dw on 2D (rows, LANE) arrays; ``h`` is a (1, 1) scalar."""
+    grid, block_rows = _row_grid(f.shape[0], block_rows)
+    spec = _row_spec(block_rows)
+    return pl.pallas_call(
+        _increment_diag_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, _SCALAR_SPEC],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
+        interpret=interpret,
+    )(f, g, dw, h)
+
+
+def _increment_general_kernel(f_ref, g_ref, dw_ref, h_ref, out_ref):
+    h = h_ref[0, 0]
+    gdw = jax.lax.dot_general(
+        g_ref[...], dw_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=f_ref.dtype,
+    )
+    out_ref[...] = f_ref[...] * h + gdw
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def increment_general_2d(f, g, dw, h, *, block_n: int = 128, interpret: bool = False):
+    """k = f*h + g@dw: f (N, d), g (N, d, m), dw (N, m), h (1, 1) -> (N, d)."""
+    n, d = f.shape
+    m = dw.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        _increment_general_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, d, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            _SCALAR_SPEC,
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
+        interpret=interpret,
+    )(f, g, dw, h)
+
+
+# -- 2. fused increment + Williamson 2N register update ----------------------
+
+def _ws_stage_diag_kernel(a, b, delta_ref, y_ref, f_ref, g_ref, dw_ref, h_ref,
+                          dout_ref, yout_ref):
+    h = h_ref[0, 0]
+    k = f_ref[...] * h + g_ref[...] * dw_ref[...]
+    d2 = a * delta_ref[...] + k
+    dout_ref[...] = d2
+    yout_ref[...] = y_ref[...] + b * d2
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "block_rows", "interpret"))
+def ws_stage_diag_2d(delta, y, f, g, dw, h, *, a: float, b: float,
+                     block_rows: int = 256, interpret: bool = False):
+    """Fused ``k = f*h + g*dw; delta' = a*delta + k; y' = y + b*delta'``."""
+    grid, block_rows = _row_grid(delta.shape[0], block_rows)
+    spec = _row_spec(block_rows)
+    return pl.pallas_call(
+        functools.partial(_ws_stage_diag_kernel, a, b),
+        grid=grid,
+        in_specs=[spec] * 5 + [_SCALAR_SPEC],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(delta.shape, delta.dtype),
+            jax.ShapeDtypeStruct(y.shape, y.dtype),
+        ],
+        interpret=interpret,
+    )(delta, y, f, g, dw, h)
+
+
+def _ws_stage_diag_bwd_kernel(a, b, ctd2_ref, cty2_ref, g_ref, dw_ref, h_ref,
+                              ctdelta_ref, ctf_ref, ctg_ref, ctdw_ref):
+    """Fused VJP of the diagonal stage (linear in every array operand)::
+
+        common   = ct_delta' + b * ct_y'
+        ct_delta = a * common       ct_f  = h * common
+        ct_g     = dw * common      ct_dw = g * common
+
+    (``ct_y = ct_y'`` needs no kernel; ``ct_h = <f, common>`` is a scalar
+    reduction done by the caller.)
+    """
+    h = h_ref[0, 0]
+    common = ctd2_ref[...] + b * cty2_ref[...]
+    ctdelta_ref[...] = a * common
+    ctf_ref[...] = h * common
+    ctg_ref[...] = dw_ref[...] * common
+    ctdw_ref[...] = g_ref[...] * common
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "block_rows", "interpret"))
+def ws_stage_diag_bwd_2d(ct_d2, ct_y2, g, dw, h, *, a: float, b: float,
+                         block_rows: int = 256, interpret: bool = False):
+    grid, block_rows = _row_grid(ct_d2.shape[0], block_rows)
+    spec = _row_spec(block_rows)
+    shp = jax.ShapeDtypeStruct(ct_d2.shape, ct_d2.dtype)
+    return pl.pallas_call(
+        functools.partial(_ws_stage_diag_bwd_kernel, a, b),
+        grid=grid,
+        in_specs=[spec] * 4 + [_SCALAR_SPEC],
+        out_specs=[spec] * 4,
+        out_shape=[shp] * 4,
+        interpret=interpret,
+    )(ct_d2, ct_y2, g, dw, h)
+
+
+def _ws_stage_general_kernel(a, b, delta_ref, y_ref, f_ref, g_ref, dw_ref,
+                             h_ref, dout_ref, yout_ref):
+    h = h_ref[0, 0]
+    gdw = jax.lax.dot_general(
+        g_ref[...], dw_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=f_ref.dtype,
+    )
+    d2 = a * delta_ref[...] + f_ref[...] * h + gdw
+    dout_ref[...] = d2
+    yout_ref[...] = y_ref[...] + b * d2
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "block_n", "interpret"))
+def ws_stage_general_2d(delta, y, f, g, dw, h, *, a: float, b: float,
+                        block_n: int = 128, interpret: bool = False):
+    """Fused general-noise stage: state rows (N, d), diffusion (N, d, m)."""
+    n, d = delta.shape
+    m = dw.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    row = pl.BlockSpec((block_n, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_ws_stage_general_kernel, a, b),
+        grid=(n // block_n,),
+        in_specs=[
+            row, row, row,
+            pl.BlockSpec((block_n, d, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            _SCALAR_SPEC,
+        ],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct(delta.shape, delta.dtype),
+            jax.ShapeDtypeStruct(y.shape, y.dtype),
+        ],
+        interpret=interpret,
+    )(delta, y, f, g, dw, h)
+
+
+# -- 3. Butcher axpy chain ----------------------------------------------------
+
+def _axpy_chain_kernel(coeffs, y_ref, incs_ref, out_ref):
+    acc = y_ref[...]
+    for i, c in enumerate(coeffs):
+        acc = acc + c * incs_ref[i]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs", "block_rows", "interpret"))
+def axpy_chain_2d(y, incs, *, coeffs, block_rows: int = 256,
+                  interpret: bool = False):
+    """y + sum_i coeffs[i] * incs[i]: y (rows, LANE), incs (s, rows, LANE).
+
+    ``coeffs`` is a static tuple — the loop unrolls at trace time, so the
+    whole chain is one read of each operand and one write of the output.
+    """
+    s = incs.shape[0]
+    assert len(coeffs) == s, (len(coeffs), s)
+    grid, block_rows = _row_grid(y.shape[0], block_rows)
+    spec = _row_spec(block_rows)
+    return pl.pallas_call(
+        functools.partial(_axpy_chain_kernel, coeffs),
+        grid=grid,
+        in_specs=[spec, pl.BlockSpec((s, block_rows, LANE), lambda i: (0, i, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+        interpret=interpret,
+    )(y, incs)

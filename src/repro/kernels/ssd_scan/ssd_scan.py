@@ -94,7 +94,9 @@ def ssd_scan(
         out_specs=pl.BlockSpec((1, chunk, 1, dh), lambda ib, ih, ic: (ib, ic, ih, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((dh, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        # jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; accept both.
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                getattr(pltpu, "TPUCompilerParams", None))(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -18,6 +18,7 @@ the (8, 128)-aligned tile, and reshapes to (rows, 128).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +48,9 @@ def williamson2n_2d(
     """Fused update on 2D (rows, LANE) arrays; rows must divide into blocks."""
     rows, lane = delta.shape
     assert lane == LANE, f"lane dim must be {LANE}, got {lane}"
-    block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0, (rows, block_rows)
+    # ops.py pads to the (8, 128) tile, so rows is a multiple of 8 but not
+    # necessarily of block_rows: shrink to the largest common divisor.
+    block_rows = math.gcd(min(block_rows, rows), rows)
     grid = (rows // block_rows,)
     spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
     return pl.pallas_call(

@@ -18,14 +18,20 @@ Two properties make slicing safe:
 Compiled executables are cached per request *signature* (solver spec,
 horizon, step count, save cadence, adaptive tolerances / output grid) —
 ticks re-use them, so steady-state serving never recompiles, exactly like
-the LM engine's single ``serve_step``.  Adaptive requests (an
-``"ees25:adaptive"``-style spec) realize a per-path accept/reject grid on a
-Virtual Brownian Tree — paths in one batch each walk their own step sequence
-under vmap — and remain reproducible offline from the seed: the result
-surfaces each path's realized-grid stats (``n_accepted`` / ``n_rejected`` /
-``t_final``), and a client can replay the identical grid offline with
-``realize_grid`` + ``solve`` under any adjoint, including the O(1)-memory
-reversible one, for gradient work on served samples.
+the LM engine's single jit'd step (built once from
+:func:`repro.models.make_serve_step`).  Each cached entry donates its input
+key buffer (``donate_argnums``) on backends that support donation, so the
+per-tick key stack is reused in place instead of allocating a fresh device
+buffer every tick.  Adaptive requests (an ``"ees25:adaptive"``-style spec)
+run the single forward-only controller pass (``bounded=False`` — sampling
+needs no second sweep; bitwise-identical to realize-then-solve) on a Virtual
+Brownian Tree — paths in one batch each walk their own accept/reject step
+sequence under vmap — and remain reproducible offline from the seed: the
+result surfaces each path's realized-grid stats (``n_accepted`` /
+``n_rejected`` / ``t_final``), and a client can realize the identical grid
+offline with :func:`repro.core.adaptive.realize_grid` + ``solve`` under any
+adjoint, including the O(1)-memory reversible one, for gradient work on
+served samples.
 """
 from __future__ import annotations
 
@@ -226,6 +232,15 @@ class SDESampleEngine:
     # -- internals -----------------------------------------------------------
 
     def _batch_fn(self, sig: Tuple):
+        """The cached jit'd batch for ``sig`` — compiled once per signature.
+
+        Steady-state serving re-enters the same executable every tick (no
+        per-tick re-jit: the cache key is the full signature, and
+        :meth:`submit` canonicalises specs so equivalent spellings share an
+        entry).  The key-stack argument is donated where the backend
+        implements donation, letting XLA reuse the previous tick's buffer
+        for each resample instead of allocating a new one.
+        """
         if sig not in self._compiled:
             solver, t0, t1, n_steps, save_every, rtol, atol, save_at = sig
             extra = {}
@@ -250,7 +265,11 @@ class SDESampleEngine:
                     batch_keys=keys, **extra,
                 )
 
-            self._compiled[sig] = jax.jit(batch)
+            # Donate the per-tick key stack so its device buffer is reused
+            # across ticks.  CPU does not implement donation (jax would warn
+            # once per tick), so donate only where it takes effect.
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._compiled[sig] = jax.jit(batch, donate_argnums=donate)
         return self._compiled[sig]
 
     def _path_key(self, req: SampleRequest, i: int):

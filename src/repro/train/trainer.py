@@ -91,6 +91,7 @@ def make_sde_train_step(
     rtol: Optional[float] = None,
     atol: Optional[float] = None,
     remat_chunk: Optional[int] = None,
+    bulk_increments: bool = True,
     noise_shape=None,
 ):
     """Neural-SDE analogue of ``make_train_step``: one Monte-Carlo batch of
@@ -112,6 +113,12 @@ def make_sde_train_step(
     realized grid, so the default O(1)-memory ``"reversible"`` adjoint now
     trains on adaptive grids too (tolerance-driven step placement *and*
     constant trajectory memory in one step function).
+
+    ``bulk_increments`` (default ``True``) is the PR-4 throughput
+    configuration: all Brownian increments realized in one batched pass and
+    streamed through the solve — see ``docs/performance.md``.  Set it
+    ``False`` for the strict memory-lean configuration (per-step noise
+    recompute, no O(n_steps x noise) buffer in the backward residuals).
     """
     from repro.core import get_solver, sdeint
 
@@ -125,6 +132,7 @@ def make_sde_train_step(
         extra["save_at"] = jnp.asarray(save_at)
     if remat_chunk is not None:
         extra["remat_chunk"] = remat_chunk
+    extra["bulk_increments"] = bulk_increments
 
     def step(params, opt_state, key):
         def loss(p):

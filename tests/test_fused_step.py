@@ -1,0 +1,300 @@
+"""The PR-4 solve-hot-path optimisations, end to end.
+
+Three invariants:
+
+* **Fused step kernels** (``use_kernels=True``): every solver x noise mode x
+  adjoint matches the unfused path to tolerance — in the XLA-fallback mode
+  (where the fused ops ARE their ``ref.py`` twins) and with the Pallas kernel
+  bodies forced on via interpret mode; the reversible solvers'
+  ``reverse``/``step`` stays an exact inverse on the fused path.
+* **Bulk Brownian realization** (the new default): bitwise-identical results
+  and gradients to the per-step path (``bulk_increments=False``), on fixed
+  and realized grids, and bitwise-equal stacked increments row-for-row.
+* **Serving dispatch**: one compiled executable per signature, reused across
+  ticks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_solver, sdeint, solve
+from repro.core.brownian import brownian_path, virtual_brownian_tree
+from repro.core.grid import TimeGrid
+from repro.core.solvers import SDETerm
+from repro.kernels.sde_step import ops as sops
+
+SEED = jax.random.PRNGKey(11)
+
+
+def diag_term():
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.cos(y),
+        noise="diagonal",
+    )
+
+
+def general_term():
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.stack(
+            [jnp.ones_like(y), 0.5 * y], axis=-1),
+        noise="general",
+    )
+
+
+def args():
+    return {"nu": jnp.asarray(0.4), "mu": jnp.asarray(0.1),
+            "sigma": jnp.asarray(0.7)}
+
+
+FUSED_SOLVERS = ("ees25", "ees27", "reversible_heun", "mcf-midpoint", "rk4")
+
+
+class TestFusedSolverPath:
+    @pytest.mark.parametrize("spec", FUSED_SOLVERS)
+    @pytest.mark.parametrize("noise", ["diagonal", "general"])
+    def test_step_matches_unfused(self, spec, noise):
+        term = diag_term() if noise == "diagonal" else general_term()
+        nshape = (4,) if noise == "diagonal" else (2,)  # (m,) channels
+        keys = jax.random.split(SEED, 3)
+        base = sdeint(term, spec, 0.0, 1.0, 24, jnp.ones(4), None, args=args(),
+                      batch_keys=keys, noise_shape=nshape).y_final
+        fused = sdeint(term, get_solver(spec, use_kernels=True), 0.0, 1.0, 24,
+                       jnp.ones(4), None, args=args(), batch_keys=keys,
+                       noise_shape=nshape).y_final
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(base),
+                                   rtol=1e-10, atol=1e-10)
+        with sops.force_interpret():
+            interp = sdeint(term, get_solver(spec, use_kernels=True), 0.0, 1.0,
+                            24, jnp.ones(4), None, args=args(),
+                            batch_keys=keys, noise_shape=nshape).y_final
+        np.testing.assert_allclose(np.asarray(interp), np.asarray(base),
+                                   rtol=1e-6, atol=1e-8)
+
+    @pytest.mark.parametrize("adjoint", ["full", "recursive", "reversible"])
+    def test_gradients_match_unfused(self, adjoint):
+        term = diag_term()
+        keys = jax.random.split(SEED, 2)
+
+        def loss(a, solver):
+            r = sdeint(term, solver, 0.0, 1.0, 16, jnp.ones(4), None, args=a,
+                       batch_keys=keys, adjoint=adjoint)
+            return jnp.sum(r.y_final ** 2)
+
+        g0 = jax.grad(lambda a: loss(a, get_solver("ees25")))(args())
+        g1 = jax.grad(lambda a: loss(a, get_solver("ees25", use_kernels=True)))(args())
+        for k in g0:
+            np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g0[k]),
+                                       rtol=1e-9, atol=1e-10)
+
+    @pytest.mark.parametrize("spec", ["reversible_heun", "mcf-midpoint"])
+    def test_reverse_is_exact_inverse_on_fused_path(self, spec):
+        """Algebraic reversibility survives fusion: combine(-h, -dW) is the
+        exact negation of combine(h, dW) (IEEE negation), so reverse∘step
+        reconstructs the pre-step state bit-for-bit modulo the solvers'
+        documented algebra."""
+        term = diag_term()
+        solver = get_solver(spec, use_kernels=True)
+        y0 = jnp.linspace(0.5, 1.5, 4)
+        dW = 0.1 * jax.random.normal(SEED, (4,))
+        with sops.force_interpret():
+            state = solver.init(term, 0.0, y0, args())
+            after = solver.step(term, state, 0.0, 0.05, dW, args())
+            back = solver.reverse(term, after, 0.0, 0.05, dW, args())
+        for a, b in zip(jax.tree_util.tree_leaves(back),
+                        jax.tree_util.tree_leaves(state)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_ees_reverse_near_inverse_on_fused_path(self):
+        term = diag_term()
+        solver = get_solver("ees25", use_kernels=True)
+        y0 = jnp.linspace(0.5, 1.5, 4)
+        dW = 0.1 * jax.random.normal(SEED, (4,))
+        h = 1e-3
+        state = solver.init(term, 0.0, y0, args())
+        after = solver.step(term, state, 0.0, h, dW, args())
+        back = solver.reverse(term, after, 0.0, h, dW, args())
+        # O(h^{m+1}) effective symmetry, far below the step size itself.
+        np.testing.assert_allclose(np.asarray(back), np.asarray(y0), atol=1e-9)
+
+    def test_spec_string_reaches_flag(self):
+        assert get_solver("ees25:use_kernels=True").use_kernels
+        assert get_solver("ees25:use_kernel=True").use_kernels  # old spelling
+        assert not get_solver("ees25").use_kernels
+        assert get_solver("reversible_heun:use_kernels=True").use_kernels
+        assert get_solver("mcf-rk4:use_kernels=True").base.use_kernels
+        # programmatic override pins the flag against the config string,
+        # old spelling included
+        assert not get_solver("ees25:use_kernel=True", use_kernels=False).use_kernels
+        assert get_solver("ees25", use_kernels=True).use_kernels
+
+    def test_tuple_state_fused_sweep(self):
+        """Product-group states are tuples; the fused stage unzip must not
+        mistake the state tuple for a (delta', y') pair."""
+        term = SDETerm(
+            drift=lambda t, y, a: (-y[0], 0.5 * y[1]),
+            diffusion=lambda t, y, a: (jnp.ones_like(y[0]),
+                                       0.2 * jnp.ones_like(y[1])),
+            noise="diagonal",
+        )
+        y0 = (jnp.linspace(0.1, 1.0, 3), jnp.linspace(-1.0, 1.0, 5))
+        r_base = sdeint(term, "ees25", 0.0, 1.0, 16, y0,
+                        key=jax.random.PRNGKey(5))
+        r_fused = sdeint(term, get_solver("ees25", use_kernels=True), 0.0,
+                         1.0, 16, y0, key=jax.random.PRNGKey(5))
+        for a, b in zip(jax.tree_util.tree_leaves(r_fused.y_final),
+                        jax.tree_util.tree_leaves(r_base.y_final)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-10, atol=1e-12)
+
+    def test_odd_row_count_blocks(self):
+        """Leaves whose padded rows are not a multiple of the default block
+        (e.g. 40960 elements -> 320 rows vs block 256) must still run."""
+        x = [jax.random.normal(jax.random.fold_in(SEED, 200 + i), (40960,),
+                               jnp.float32) for i in range(5)]
+        h = jnp.float32(0.02)
+        from repro.kernels.sde_step import ref as sref_local
+        with sops.force_interpret():
+            got = sops.fused_ws_stage(x[0], x[1], x[2], x[3], x[4], h,
+                                      a=-0.4, b=0.9, noise="diagonal")
+        want = sref_local.ws_stage_diag_ref(x[0], x[1], x[2], x[3], x[4], h,
+                                            -0.4, 0.9)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+    def test_fused_adaptive_reversible(self):
+        term = diag_term()
+        keys = jax.random.split(SEED, 2)
+        base = sdeint(term, "ees25:adaptive", 0.0, 1.0, 96, jnp.ones(3), None,
+                      args=args(), batch_keys=keys, rtol=1e-3,
+                      adjoint="reversible")
+        fused = sdeint(term, get_solver("ees25:adaptive", use_kernels=True),
+                       0.0, 1.0, 96, jnp.ones(3), None, args=args(),
+                       batch_keys=keys, rtol=1e-3, adjoint="reversible")
+        np.testing.assert_allclose(np.asarray(fused.y_final),
+                                   np.asarray(base.y_final),
+                                   rtol=1e-9, atol=1e-10)
+        np.testing.assert_array_equal(np.asarray(fused.n_accepted),
+                                      np.asarray(base.n_accepted))
+
+
+class TestBulkIncrements:
+    def test_path_rows_match_per_step(self):
+        # Bit-stability is a *compiled-computation* property (the bulk pass
+        # runs under its own jit precisely so its bits cannot depend on the
+        # calling context); compare against the jitted per-step draw, which
+        # is what every solve's scan body actually runs.
+        bm = brownian_path(SEED, 0.0, 2.0, 17, shape=(3,))
+        ts = bm.t0 + jnp.arange(18) * bm.h
+        bulk = np.asarray(bm.grid_increments(ts))
+        per_step = jax.jit(bm.increment)
+        for n in (0, 7, 16):
+            np.testing.assert_array_equal(bulk[n], np.asarray(per_step(n)))
+
+    def test_vbt_rows_match_per_step(self):
+        vbt = virtual_brownian_tree(SEED, 0.0, 1.0, shape=(2,))
+        ts = jnp.asarray([0.0, 0.13, 0.4, 0.41, 0.9, 1.0])
+        bulk = jax.tree_util.tree_leaves(vbt.grid_increments(ts))[0]
+        for n in range(5):
+            np.testing.assert_array_equal(
+                np.asarray(bulk[n]), np.asarray(vbt.grid_increment(ts, n)))
+
+    def test_foreign_grid_still_loud(self):
+        bm = brownian_path(SEED, 0.0, 1.0, 8, shape=(3,))
+        with pytest.raises(ValueError, match="native 8-step grid"):
+            bm.grid_increments(jnp.linspace(0.0, 1.0, 6))
+
+    @pytest.mark.parametrize("adjoint", ["full", "recursive", "reversible"])
+    def test_fixed_grid_matches_per_step(self, adjoint):
+        # The two modes consume bit-identical Brownian increments (tested
+        # above), but feed the scan body from a gather vs an in-body RNG —
+        # two different XLA programs, whose FMA scheduling may differ by an
+        # ulp.  Outputs must agree to that level; the *within-mode* bitwise
+        # guarantees (batch == loop, engine == offline replay, adjoint
+        # parity) are covered by the seed suite, which runs on bulk now.
+        term = diag_term()
+        keys = jax.random.split(SEED, 4)
+
+        def run(bulk):
+            r = sdeint(term, "ees25", 0.0, 1.0, 32, jnp.ones(4), None,
+                       args=args(), batch_keys=keys, adjoint=adjoint,
+                       save_every=8, bulk_increments=bulk)
+            return r.y_final, r.ys
+
+        yf_a, ys_a = jax.jit(lambda: run(True))()
+        yf_b, ys_b = jax.jit(lambda: run(False))()
+        np.testing.assert_allclose(np.asarray(yf_a), np.asarray(yf_b),
+                                   rtol=1e-12, atol=1e-13)
+        np.testing.assert_allclose(np.asarray(ys_a), np.asarray(ys_b),
+                                   rtol=1e-12, atol=1e-13)
+
+    @pytest.mark.parametrize("adjoint", ["full", "recursive", "reversible"])
+    def test_fixed_grid_gradients_match(self, adjoint):
+        term = diag_term()
+        keys = jax.random.split(SEED, 2)
+
+        def loss(a, bulk):
+            r = sdeint(term, "ees25", 0.0, 1.0, 16, jnp.ones(4), None, args=a,
+                       batch_keys=keys, adjoint=adjoint, bulk_increments=bulk)
+            return jnp.sum(r.y_final ** 2)
+
+        ga = jax.jit(jax.grad(lambda a: loss(a, True)))(args())
+        gb = jax.jit(jax.grad(lambda a: loss(a, False)))(args())
+        for k in ga:
+            np.testing.assert_allclose(np.asarray(ga[k]), np.asarray(gb[k]),
+                                       rtol=1e-12, atol=1e-13)
+
+    @pytest.mark.parametrize("adjoint", ["full", "reversible"])
+    def test_realized_grid_bitwise(self, adjoint):
+        term = diag_term()
+        keys = jax.random.split(SEED, 3)
+        ts = jnp.linspace(0.0, 1.0, 7)
+
+        def run(bulk):
+            r = sdeint(term, "ees25:adaptive", 0.0, 1.0, 96, jnp.ones(3), None,
+                       args=args(), batch_keys=keys, rtol=1e-3, save_at=ts,
+                       adjoint=adjoint, bulk_increments=bulk)
+            return np.asarray(r.y_final), np.asarray(r.ys)
+
+        (yf_a, ys_a), (yf_b, ys_b) = run(True), run(False)
+        np.testing.assert_allclose(yf_a, yf_b, rtol=1e-12, atol=1e-13)
+        np.testing.assert_allclose(ys_a, ys_b, rtol=1e-12, atol=1e-13)
+
+    def test_ode_mode_unaffected(self):
+        term = SDETerm(drift=lambda t, y, a: -y, noise="none")
+        grid = TimeGrid.uniform(0.0, 1.0, 16)
+        assert grid.increments() is None
+        out = solve(get_solver("rk4"), term, jnp.ones(3), grid)
+        np.testing.assert_allclose(np.asarray(out.y_final),
+                                   np.exp(-1.0) * np.ones(3), atol=1e-6)
+
+    def test_prefix_sum_increment_over(self):
+        """BrownianPath.increment_over: cumsum lookup == summed increments."""
+        bm = brownian_path(SEED, 0.0, 1.0, 32, shape=(4,))
+        want = np.sum(np.stack([np.asarray(bm.increment(n))
+                                for n in range(4, 20)]), axis=0)
+        got = np.asarray(bm.increment_over(bm.t_of(4), bm.t_of(20)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        # degenerate window: exactly zero
+        np.testing.assert_array_equal(
+            np.asarray(bm.increment_over(bm.t_of(5), bm.t_of(5))),
+            np.zeros(4, np.float32))
+
+
+class TestServingDispatch:
+    def test_batch_fn_reused_across_ticks(self):
+        from repro.serving import SDESampleConfig, SDESampleEngine
+
+        eng = SDESampleEngine(diag_term(), jnp.ones(3),
+                              SDESampleConfig(slots=2), args=args())
+        rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=5, seed=1)
+        sig = eng.queue[0].request.signature
+        fn_first = eng._batch_fn(sig)
+        eng.run()
+        assert eng._batch_fn(sig) is fn_first  # no per-tick re-jit
+        assert len(eng._compiled) == 1
+        assert eng.done[rid].y_final.shape == (5, 3)

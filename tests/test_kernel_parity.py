@@ -1,0 +1,212 @@
+"""Interpret-mode parity for EVERY Pallas kernel vs its ``ref.py`` twin.
+
+Tier-1 (default lane, no optional deps): each kernel body runs in Pallas
+interpret mode — Python on CPU, the same code the TPU path compiles — and
+must match the pure-jnp oracle.  Kernels with a fused ``custom_vjp`` backward
+(``williamson2n``, ``sde_step``) are additionally checked against autodiff
+*through the reference*, so the hand-written cotangents can never drift from
+the arithmetic they shortcut.  (The hypothesis-based property sweeps live in
+``test_kernels.py``; this module is the dependency-free gate.)
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.sde_step import ops as sops
+from repro.kernels.sde_step import ref as sref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.williamson2n.ops import williamson2n_update
+from repro.kernels.williamson2n.ref import williamson2n_ref
+
+
+@functools.lru_cache(maxsize=None)
+def KEY():
+    return jax.random.PRNGKey(0)
+
+
+def _n(i, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY(), i), shape, dtype)
+
+
+class TestFlashAttentionParity:
+    def test_matches_ref(self):
+        q, k, v = (_n(10 + i, (1, 2, 256, 64)) for i in range(3))
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(got, attention_ref(q, k, v, causal=True),
+                                   atol=2e-5)
+
+    def test_non_causal(self):
+        q, k, v = (_n(20 + i, (2, 2, 128, 32)) for i in range(3))
+        got = flash_attention(q, k, v, causal=False, interpret=True)
+        np.testing.assert_allclose(got, attention_ref(q, k, v, causal=False),
+                                   atol=2e-5)
+
+
+class TestSSDScanParity:
+    def test_matches_ref(self):
+        b, l, h, dh, ds = 1, 128, 2, 16, 32
+        ks = jax.random.split(jax.random.fold_in(KEY(), 30), 5)
+        x = jax.random.normal(ks[0], (b, l, h, dh))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        B = jax.random.normal(ks[3], (b, l, ds))
+        C = jax.random.normal(ks[4], (b, l, ds))
+        y = ssd_scan(x, dt, A, B, C, chunk=64, interpret=True)
+        y_seq, _ = ssd_ref(x, dt, A, B, C)
+        np.testing.assert_allclose(y, y_seq, atol=5e-4)
+
+
+class TestWilliamson2NParity:
+    @pytest.mark.parametrize("shape", [(129,), (8, 128), (3, 5)])
+    def test_matches_ref(self, shape):
+        d, k, y = (_n(40 + i, shape) for i in range(3))
+        a, b = -35 / 32, 2 / 5
+        got = williamson2n_update(d, k, y, a, b, True)
+        want = williamson2n_ref(d, k, y, a, b)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=1e-5)
+
+    def test_custom_vjp_vs_autodiff_through_ref(self):
+        d, k, y = (_n(50 + i, (200,)) for i in range(3))
+        f_k = lambda *xs: jnp.sum(williamson2n_update(*xs, -0.46, 0.93, True)[1] ** 2)
+        f_r = lambda *xs: jnp.sum(williamson2n_ref(*xs, -0.46, 0.93)[1] ** 2)
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(d, k, y)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(d, k, y)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestSDEStepParity:
+    """The PR-4 fused step ops: forward and fused-VJP parity per noise mode."""
+
+    @pytest.mark.parametrize("shape", [(7,), (128,), (1000,), (4, 33)])
+    def test_increment_diag(self, shape):
+        f, g, dW = (_n(60 + i, shape) for i in range(3))
+        h = jnp.float32(0.03)
+        want = sref.increment_diag_ref(f, g, dW, h)
+        got = sops.fused_increment(f, g, dW, h, noise="diagonal", interpret=True)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+        # XLA fallback path IS the ref
+        np.testing.assert_array_equal(
+            sops.fused_increment(f, g, dW, h, noise="diagonal"), want)
+
+    @pytest.mark.parametrize("bshape,d,m", [((5,), 3, 4), ((2, 9), 4, 2), ((), 6, 3)])
+    def test_increment_general(self, bshape, d, m):
+        f = _n(70, bshape + (d,))
+        g = _n(71, bshape + (d, m))
+        dW = _n(72, bshape + (m,))
+        h = jnp.float32(0.05)
+        want = sref.increment_general_ref(f, g, dW, h)
+        got = sops.fused_increment(f, g, dW, h, noise="general", interpret=True)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    @pytest.mark.parametrize("shape", [(129,), (8, 16)])
+    def test_ws_stage_diag(self, shape):
+        d, y, f, g, dW = (_n(80 + i, shape) for i in range(5))
+        h = jnp.float32(0.02)
+        a, b = -7 / 15, 15 / 16
+        want = sref.ws_stage_diag_ref(d, y, f, g, dW, h, a, b)
+        got = sops.fused_ws_stage(d, y, f, g, dW, h, a=a, b=b,
+                                  noise="diagonal", interpret=True)
+        for gg, ww in zip(got, want):
+            np.testing.assert_allclose(gg, ww, atol=1e-6)
+
+    def test_ws_stage_general(self):
+        B, d, m = 6, 3, 5
+        dlt, y, f = (_n(90 + i, (B, d)) for i in range(3))
+        g = _n(93, (B, d, m))
+        dW = _n(94, (B, m))
+        h = jnp.float32(0.04)
+        want = sref.ws_stage_general_ref(dlt, y, f, g, dW, h, -1.1, 0.4)
+        got = sops.fused_ws_stage(dlt, y, f, g, dW, h, a=-1.1, b=0.4,
+                                  noise="general", interpret=True)
+        for gg, ww in zip(got, want):
+            np.testing.assert_allclose(gg, ww, atol=1e-6)
+
+    @pytest.mark.parametrize("s", [1, 3])
+    def test_axpy_chain(self, s):
+        y = _n(100, (11, 7))
+        incs = jnp.stack([_n(101 + i, (11, 7)) for i in range(s)])
+        coeffs = tuple(0.3 * (i + 1) * (-1) ** i for i in range(s))
+        want = sref.axpy_chain_ref(y, incs, coeffs)
+        got = sops.fused_axpy_chain(y, incs, coeffs, interpret=True)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    @pytest.mark.parametrize("noise", ["diagonal", "general"])
+    def test_ws_stage_vjp_vs_autodiff_through_ref(self, noise):
+        if noise == "diagonal":
+            shp_g, shp_w = (17,), (17,)
+            shp = (17,)
+            ref_fn = sref.ws_stage_diag_ref
+        else:
+            shp = (4, 3)
+            shp_g, shp_w = (4, 3, 5), (4, 5)
+            ref_fn = sref.ws_stage_general_ref
+        dlt, y, f = (_n(110 + i, shp) for i in range(3))
+        g, dW = _n(113, shp_g), _n(114, shp_w)
+        h = jnp.float32(0.07)
+        a, b = -0.46, 0.93
+
+        def loss_op(dlt, y, f, g, dW, h):
+            d2, y2 = sops.fused_ws_stage(dlt, y, f, g, dW, h, a=a, b=b,
+                                         noise=noise, interpret=True)
+            return jnp.sum(d2 ** 2) + jnp.sum(jnp.sin(y2))
+
+        def loss_ref(dlt, y, f, g, dW, h):
+            d2, y2 = ref_fn(dlt, y, f, g, dW, h, a, b)
+            return jnp.sum(d2 ** 2) + jnp.sum(jnp.sin(y2))
+
+        gk = jax.grad(loss_op, argnums=tuple(range(6)))(dlt, y, f, g, dW, h)
+        gr = jax.grad(loss_ref, argnums=tuple(range(6)))(dlt, y, f, g, dW, h)
+        for got, want in zip(gk, gr):
+            np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_increment_vjp_vs_autodiff_through_ref(self):
+        f, g, dW = (_n(120 + i, (33,)) for i in range(3))
+        h = jnp.float32(0.06)
+
+        def loss_op(f, g, dW, h):
+            return jnp.sum(sops.fused_increment(f, g, dW, h, noise="diagonal",
+                                                interpret=True) ** 3)
+
+        def loss_ref(f, g, dW, h):
+            return jnp.sum(sref.increment_diag_ref(f, g, dW, h) ** 3)
+
+        gk = jax.grad(loss_op, argnums=(0, 1, 2, 3))(f, g, dW, h)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(f, g, dW, h)
+        for got, want in zip(gk, gr):
+            np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_axpy_chain_vjp_vs_autodiff_through_ref(self):
+        y = _n(130, (21,))
+        incs = jnp.stack([_n(131 + i, (21,)) for i in range(3)])
+        coeffs = (0.5, -1.25, 2.0)
+
+        def loss_op(y, incs):
+            return jnp.sum(sops.fused_axpy_chain(y, incs, coeffs,
+                                                 interpret=True) ** 2)
+
+        def loss_ref(y, incs):
+            return jnp.sum(sref.axpy_chain_ref(y, incs, coeffs) ** 2)
+
+        gk = jax.grad(loss_op, argnums=(0, 1))(y, incs)
+        gr = jax.grad(loss_ref, argnums=(0, 1))(y, incs)
+        for got, want in zip(gk, gr):
+            np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_force_interpret_hook(self):
+        """The CI drift gate relies on force_interpret() routing the ops
+        through the kernel bodies; make sure the hook restores itself."""
+        f, g, dW = (_n(140 + i, (9,)) for i in range(3))
+        h = jnp.float32(0.01)
+        want = sref.increment_diag_ref(f, g, dW, h)
+        with sops.force_interpret():
+            got = sops.fused_increment(f, g, dW, h, noise="diagonal")
+        np.testing.assert_allclose(got, want, atol=1e-6)
+        assert not sops._FORCE_INTERPRET
