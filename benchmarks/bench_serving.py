@@ -1,0 +1,144 @@
+"""Serving-core throughput: requests/sec and host dispatches vs queue depth.
+
+Drives a real :class:`repro.serving.SDESampleEngine` (scheduler + executor,
+not a bare ``sdeint``) over a queue of same-signature sampling requests and
+measures the thing the PR-5 refactor changes: how many **host round trips**
+it takes to drain a queue, and what that does to requests/sec.  Each record
+serves ``queue_depth`` requests of ``slots`` paths each (one engine tick per
+request) at a given ``ticks_per_dispatch``:
+
+    {"queue_depth": 8, "slots": 64, "ticks_per_dispatch": 8,
+     "n_ticks": 8, "host_dispatches": 1, "dispatches_per_tick": 0.125,
+     "requests_per_sec": ..., "paths_per_sec": ..., "us_per_tick": ...}
+
+``ticks_per_dispatch=1`` is the pre-refactor behaviour — one host dispatch
+per tick, ``dispatches_per_tick == 1`` (O(ticks) round trips per signature).
+Deeper stacks run the same ticks inside one on-device ``lax.map`` loop, so
+``host_dispatches`` collapses toward O(1) per signature; results are
+bitwise-identical either way (tested in ``tests/test_serving.py``), so this
+sweep changes dispatch cost only, never samples.
+
+Timing excludes compilation: every configuration is served twice and only
+the second (fully cache-warm) run is measured.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serving [--out PATH]
+      [--slots N] [--depths 4,8,16] [--ticks-per-dispatch 1,4,16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SDETerm
+from repro.serving import SDESampleConfig, SDESampleEngine
+
+from .common import emit
+
+SLOTS = 64
+QUEUE_DEPTHS = (4, 8, 16)
+TICKS_PER_DISPATCH = (1, 4, 16)
+N_STEPS = 64
+DIM = 16
+SOLVER = "ees25"
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serving.json",
+)
+
+
+def ou_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+def serve_queue(term, args, y0, *, depth: int, slots: int, tpd: int,
+                n_steps: int, solver: str):
+    """Serve ``depth`` requests of ``slots`` paths; return (secs, engine)."""
+    eng = SDESampleEngine(
+        term, y0, SDESampleConfig(slots=slots, ticks_per_dispatch=tpd),
+        args=args,
+    )
+
+    def one_pass():
+        for i in range(depth):
+            eng.submit(solver, t1=1.0, n_steps=n_steps, n_paths=slots, seed=i)
+        t0 = time.perf_counter()
+        eng.run()
+        return time.perf_counter() - t0
+
+    one_pass()            # warm: compiles the full-stack + tail executables
+    secs = one_pass()     # measured: identical plan sequence, cache-warm
+    return secs, eng
+
+
+def run(out_path: str = DEFAULT_OUT, *, slots: int = SLOTS,
+        depths=QUEUE_DEPTHS, ticks_per_dispatch=TICKS_PER_DISPATCH,
+        n_steps: int = N_STEPS, dim: int = DIM, solver: str = SOLVER):
+    term = ou_term()
+    args = {"nu": jnp.float32(0.2), "mu": jnp.float32(0.1),
+            "sigma": jnp.float32(2.0)}
+    y0 = jnp.ones(dim, jnp.float32)
+    records = []
+    for depth in depths:
+        for tpd in ticks_per_dispatch:
+            if tpd > depth:
+                continue  # a stack deeper than the queue adds nothing
+            secs, eng = serve_queue(term, args, y0, depth=depth, slots=slots,
+                                    tpd=tpd, n_steps=n_steps, solver=solver)
+            # counters cover both passes; each pass served `depth` ticks
+            n_ticks = eng.executor.n_ticks // 2
+            dispatches = eng.executor.n_dispatches // 2
+            records.append({
+                "solver": solver,
+                "queue_depth": depth,
+                "slots": slots,
+                "ticks_per_dispatch": tpd,
+                "n_steps": n_steps,
+                "dim": dim,
+                "n_ticks": n_ticks,
+                "host_dispatches": dispatches,
+                "dispatches_per_tick": dispatches / n_ticks,
+                "seconds": secs,
+                "requests_per_sec": depth / secs,
+                "paths_per_sec": depth * slots / secs,
+                "us_per_tick": secs * 1e6 / n_ticks,
+            })
+            emit(f"bench_serving/D{depth}/S{slots}/T{tpd}",
+                 secs * 1e6 / n_ticks,
+                 f"req_per_sec={depth / secs:.1f} "
+                 f"dispatches={dispatches}/{n_ticks}")
+    with open(out_path, "w") as f:
+        json.dump({"device": jax.devices()[0].platform, "records": records},
+                  f, indent=2)
+    print(f"# wrote {out_path}")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--slots", type=int, default=SLOTS)
+    ap.add_argument("--depths", default=",".join(map(str, QUEUE_DEPTHS)))
+    ap.add_argument("--ticks-per-dispatch",
+                    default=",".join(map(str, TICKS_PER_DISPATCH)))
+    ap.add_argument("--n-steps", type=int, default=N_STEPS)
+    ap.add_argument("--dim", type=int, default=DIM)
+    args = ap.parse_args()
+    run(args.out, slots=args.slots,
+        depths=tuple(int(d) for d in args.depths.split(",")),
+        ticks_per_dispatch=tuple(
+            int(t) for t in args.ticks_per_dispatch.split(",")),
+        n_steps=args.n_steps, dim=args.dim)
+
+
+if __name__ == "__main__":
+    main()

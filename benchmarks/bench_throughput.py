@@ -14,6 +14,14 @@ realization (all increments in one batched pass, streamed through the scan);
 ``bulk_increments=False`` (the pre-PR-4 per-step RNG), so every record
 carries its own before/after (``speedup_bulk``).
 
+With more than one visible device the same batch ladder additionally runs
+sharded over a 1-D sampling mesh (``sdeint(..., mesh_axis=...)`` over
+``repro.launch.mesh.make_sample_mesh()``) and the JSON gains a
+``mesh_records`` list (one record per solver x divisible batch size, with
+``devices`` and ``speedup_vs_single``) — the multi-device scaling chart.
+On a single device ``mesh_records`` is empty and ``records`` is unchanged,
+so single-device CI keeps its current numbers.
+
 Run:  PYTHONPATH=src python -m benchmarks.bench_throughput [--out PATH]
 """
 from __future__ import annotations
@@ -82,10 +90,60 @@ def run(out_path: str = DEFAULT_OUT, *, batch_sizes=BATCH_SIZES,
             emit(f"bench_throughput/{solver}/B{batch}", us,
                  f"traj_per_sec={traj_per_sec:.0f} "
                  f"speedup_bulk={us_per_step / us:.2f}")
+    mesh_records = run_mesh_ladder(term, args, y0, records,
+                                   batch_sizes=batch_sizes, solvers=solvers,
+                                   n_steps=n_steps, dim=dim)
     with open(out_path, "w") as f:
-        json.dump({"device": jax.devices()[0].platform, "records": records}, f,
-                  indent=2)
+        json.dump({"device": jax.devices()[0].platform,
+                   "n_devices": jax.device_count(),
+                   "records": records,
+                   "mesh_records": mesh_records}, f, indent=2)
     print(f"# wrote {out_path}")
+    return records
+
+
+def run_mesh_ladder(term, args, y0, single_records, *, batch_sizes, solvers,
+                    n_steps, dim):
+    """The same ladder sharded over every visible device (devices > 1 only).
+
+    Uses the existing ``sdeint`` shard_map fan-out — key-based batching is
+    placement-independent, so these runs draw the exact samples the
+    single-device ladder drew; only the wall-clock changes.
+    """
+    n_devices = jax.device_count()
+    if n_devices < 2:
+        return []
+    from repro.launch.mesh import make_sample_mesh
+
+    mesh = make_sample_mesh()
+    single_us = {(r["solver"], r["batch_size"]): r["us_per_call"]
+                 for r in single_records}
+    records = []
+    for solver in solvers:
+        for batch in batch_sizes:
+            if batch % n_devices != 0:
+                continue  # axis must divide the batch
+            fn = jax.jit(lambda keys, a, s=solver: sdeint(
+                term, s, 0.0, 1.0, n_steps, y0, None, args=a, batch_keys=keys,
+                mesh=mesh, mesh_axis="mc",
+            ).y_final)
+            keys = jax.random.split(jax.random.PRNGKey(0), batch)
+            us = time_fn(fn, keys, args, warmup=3, iters=11)
+            traj_per_sec = batch / (us * 1e-6)
+            ref = single_us.get((solver, batch))
+            records.append({
+                "solver": solver,
+                "batch_size": batch,
+                "n_steps": n_steps,
+                "dim": dim,
+                "devices": n_devices,
+                "us_per_call": us,
+                "traj_per_sec": traj_per_sec,
+                "steps_per_sec": traj_per_sec * n_steps,
+                "speedup_vs_single": None if ref is None else ref / us,
+            })
+            emit(f"bench_throughput/{solver}/B{batch}/mesh{n_devices}", us,
+                 f"traj_per_sec={traj_per_sec:.0f}")
     return records
 
 

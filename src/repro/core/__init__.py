@@ -32,7 +32,7 @@ from .registry import (
     register_solver,
     solver_kind,
 )
-from .sdeint import sdeint
+from .sdeint import sdeint, sdeint_ticks
 from .cfees import (
     CFLowStorageSolver,
     CrouchGrossman2,
@@ -66,6 +66,7 @@ from .williamson import EES25_2N, EES27_2N, bazavov_residuals, butcher_from_2n, 
 __all__ = [
     "solve",
     "sdeint",
+    "sdeint_ticks",
     "SolveResult",
     "get_solver",
     "list_solvers",

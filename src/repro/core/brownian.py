@@ -109,6 +109,9 @@ class BrownianPath:
     dtype: Any = jnp.float32
 
     # -- pytree plumbing (key is a leaf; the rest is static) ----------------
+    # The prefix-sum cache (see path()) is deliberately NOT a leaf: flatten
+    # drops it, so vmap lanes / jit traces each start from a fresh instance
+    # and the cache never smuggles concrete values across a trace boundary.
     def tree_flatten(self):
         return (self.key,), (self.t0, self.t1, self.n_steps, self.shape, self.dtype)
 
@@ -117,6 +120,9 @@ class BrownianPath:
         (key,) = children
         t0, t1, n_steps, shape, dtype = aux
         return cls(key, t0, t1, n_steps, shape, dtype)
+
+    def __post_init__(self):
+        object.__setattr__(self, "_path_cache", None)
 
     @property
     def h(self) -> float:
@@ -147,10 +153,11 @@ class BrownianPath:
         ``s`` and ``t`` are rounded to the nearest grid node and the
         increment is read out of the prefix-sum path ``W_{t_n}``: one
         batched threefry draw + cumsum over the whole grid (all lanes in
-        parallel, realized per call — O(n_steps) work and memory, but no
-        sequential dependency) and two gathers, replacing the O(n1 - n0)
-        *sequential* ``fori_loop`` accumulation this method used to run.
-        For many short-window queries, or any arbitrary-time query, use a
+        parallel, no sequential dependency) and two gathers, replacing the
+        O(n1 - n0) *sequential* ``fori_loop`` accumulation this method used
+        to run.  The prefix-sum path is realized once per driver and cached
+        (see :meth:`path`), so repeated window queries cost two gathers
+        each.  For any arbitrary-time query, use a
         :class:`VirtualBrownianTree` — O(depth) time and O(1) memory per
         query; the fixed-grid driver is built for step-indexed access.
         """
@@ -198,12 +205,29 @@ class BrownianPath:
         return _bulk_path_increments(self)
 
     def path(self) -> jax.Array:
-        """Cumulative path W_{t_n}, shape (n_steps+1, *shape)."""
+        """Cumulative path W_{t_n}, shape (n_steps+1, *shape).
+
+        Realized once per driver instance and cached (the driver is frozen:
+        key and grid can never change under the cache), so repeated
+        arbitrary-window ``increment_over`` queries pay the batched
+        threefry + cumsum once instead of per call.  Cache hits return the
+        *same* arrays — bitwise-equal to an uncached recompute by
+        construction (regression-tested).  Traced results (a driver built
+        eagerly but queried inside jit/vmap) are returned uncached: a
+        tracer must not outlive its trace, and traced instances are rebuilt
+        fresh by ``tree_unflatten`` anyway.
+        """
+        if self._path_cache is not None:
+            return self._path_cache
         incs = jax.vmap(self.increment)(jnp.arange(self.n_steps))
         w = jax.tree_util.tree_map(lambda x: jnp.cumsum(x, axis=0), incs)
-        return jax.tree_util.tree_map(
+        w = jax.tree_util.tree_map(
             lambda x: jnp.concatenate([jnp.zeros_like(x[:1]), x], axis=0), w
         )
+        if not any(isinstance(leaf, jax.core.Tracer)
+                   for leaf in jax.tree_util.tree_leaves((w, self.key))):
+            object.__setattr__(self, "_path_cache", w)
+        return w
 
 
 def brownian_path(key, t0, t1, n_steps, shape=(), dtype=jnp.float32) -> BrownianPath:

@@ -19,6 +19,12 @@ Python loop of single-trajectory calls over the same keys (tested, for both
 the fixed-grid and the adaptive path).  That property is what lets serving
 slice a request's paths across engine ticks, or a benchmark compare batch
 sizes, without changing a single sample.
+
+``sdeint_ticks`` lifts the same batch one level further: a ``(T, B, ...)``
+stack of per-tick key batches runs through a single on-device ``lax.map``
+loop over ticks — one host dispatch for ``T`` ticks — with tick ``t``
+bitwise equal to ``sdeint(..., batch_keys=tick_keys[t])``.  This is the
+serving executor's multi-tick entry (see ``repro.serving.executor``).
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ from .adjoint import SolveResult, solve
 from .brownian import brownian_path, virtual_brownian_tree
 from .registry import get_solver
 
-__all__ = ["sdeint"]
+__all__ = ["sdeint", "sdeint_ticks"]
 
 
 def _infer_noise_shape(term, y0):
@@ -212,6 +218,80 @@ def sdeint(
     ...            args=params, rtol=1e-3, save_at=ts, batch_keys=keys)
     >>> a.ys  # (1024, 33, ...) dense output on the save_at grid
     """
+    one = _trajectory_fn(
+        term, solver, t0, t1, n_steps, y0, args=args, adjoint=adjoint,
+        save_every=save_every, remat_chunk=remat_chunk, adaptive=adaptive,
+        save_at=save_at, rtol=rtol, atol=atol, h0=h0, bm_tol=bm_tol,
+        bounded=bounded, bulk_increments=bulk_increments,
+        noise_shape=noise_shape, dtype=dtype,
+    )
+
+    if batch_keys is None:
+        if mesh_axis is not None or mesh is not None:
+            raise ValueError("mesh fan-out requires batch_keys")
+        if key is None:
+            raise ValueError("pass key= for a single trajectory or batch_keys= for a batch")
+        return one(key)
+
+    n_batch = jax.tree_util.tree_leaves(batch_keys)[0].shape[0]
+    batched = _batched_fn(jax.vmap(one), n_batch, mesh, mesh_axis)
+    return batched(batch_keys)
+
+
+def sdeint_ticks(
+    term,
+    solver,
+    t0: float,
+    t1: float,
+    n_steps: int,
+    y0,
+    tick_keys: jax.Array,
+    *,
+    mesh=None,
+    mesh_axis: Optional[str] = None,
+    **kwargs,
+):
+    """Integrate a *stack* of key batches in one on-device multi-tick loop.
+
+    ``tick_keys`` is a ``(T, B, ...)`` stack of ``T`` per-tick key batches;
+    each tick is exactly one :func:`sdeint` batch of ``B`` trajectories, and
+    the ticks run inside a single ``lax.map`` loop — so a caller (the serving
+    executor) pays ONE host dispatch for ``T`` ticks instead of one per tick.
+    Every result leaf gains a leading ``(T, B)`` pair of axes, and tick ``t``
+    is bitwise equal to ``sdeint(..., batch_keys=tick_keys[t])``: trajectories
+    are pure functions of their keys, so looping on-device instead of from the
+    host leaves no trace in the samples (regression-tested).
+
+    ``mesh``/``mesh_axis`` shard each tick's **batch** axis over the device
+    mesh exactly as in :func:`sdeint` (the tick axis stays sequential — ticks
+    are the serving time dimension, not a parallel one).  All other keyword
+    arguments are as for :func:`sdeint`.
+    """
+    one = _trajectory_fn(term, solver, t0, t1, n_steps, y0, **kwargs)
+    leaf = jax.tree_util.tree_leaves(tick_keys)[0]
+    # A typed key array ((T, B)-shaped, prng_key dtype) carries no trailing
+    # key-data axis; raw uint32 keys do — so a flat single-tick batch is
+    # rank 1 typed / rank 2 raw, and must go to sdeint instead.
+    typed = jnp.issubdtype(leaf.dtype, jax.dtypes.prng_key)
+    if leaf.ndim < (2 if typed else 3):
+        raise ValueError(
+            f"tick_keys must stack per-tick key batches — expected a "
+            f"(n_ticks, batch, ...) key array, got shape {tuple(leaf.shape)} "
+            f"(dtype {leaf.dtype}); for a single flat batch call "
+            "sdeint(..., batch_keys=keys)"
+        )
+    batched = _batched_fn(jax.vmap(one), leaf.shape[1], mesh, mesh_axis)
+    return jax.lax.map(batched, tick_keys)
+
+
+def _trajectory_fn(
+    term, solver, t0, t1, n_steps, y0, *, args=None, adjoint="full",
+    save_every=None, remat_chunk=None, adaptive=False, save_at=None,
+    rtol=None, atol=None, h0=None, bm_tol=None, bounded=True,
+    bulk_increments=True, noise_shape=None, dtype=None,
+):
+    """Validate options and build the single-trajectory ``key -> result`` fn
+    (shared by :func:`sdeint` and :func:`sdeint_ticks`)."""
     solver = get_solver(solver)
     adaptive = adaptive or getattr(solver, "adaptive", False)
     if adjoint not in ("full", "recursive", "reversible"):
@@ -276,24 +356,20 @@ def sdeint(
                 bulk_increments=bulk_increments,
             )
 
-    if batch_keys is None:
-        if mesh_axis is not None or mesh is not None:
-            raise ValueError("mesh fan-out requires batch_keys")
-        if key is None:
-            raise ValueError("pass key= for a single trajectory or batch_keys= for a batch")
-        return one(key)
+    return one
 
-    batched = jax.vmap(one)
+
+def _batched_fn(batched, n_batch: int, mesh, mesh_axis):
+    """Wrap a vmap'd trajectory batch in shard_map when a mesh axis is named."""
     if mesh_axis is None:
         if mesh is not None:
             raise ValueError("mesh given without mesh_axis; name the axis to shard over")
-        return batched(batch_keys)
+        return batched
 
     from jax.sharding import PartitionSpec as P
 
     mesh = mesh if mesh is not None else _ambient_mesh()
     axis_size = mesh.shape[mesh_axis]
-    n_batch = jax.tree_util.tree_leaves(batch_keys)[0].shape[0]
     if n_batch % axis_size != 0:
         raise ValueError(
             f"mesh axis {mesh_axis!r} of size {axis_size} does not divide "
@@ -303,10 +379,9 @@ def sdeint(
     try:  # jax <= 0.5
         from jax.experimental.shard_map import shard_map
 
-        mapped = shard_map(batched, mesh=mesh, in_specs=spec, out_specs=spec,
-                           check_rep=False)
+        return shard_map(batched, mesh=mesh, in_specs=spec, out_specs=spec,
+                         check_rep=False)
     except ImportError:  # pragma: no cover — jax >= 0.6 (same shim as optim.compression)
         from jax import shard_map
 
-        mapped = shard_map(batched, mesh=mesh, in_specs=spec, out_specs=spec)
-    return mapped(batch_keys)
+        return shard_map(batched, mesh=mesh, in_specs=spec, out_specs=spec)

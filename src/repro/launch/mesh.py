@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = [
     "make_production_mesh",
+    "make_sample_mesh",
     "axis_size",
     "param_pspecs",
     "batch_pspecs",
@@ -44,6 +45,23 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_sample_mesh(n_devices: Optional[int] = None, axis: str = "mc") -> Mesh:
+    """1-D Monte-Carlo sampling mesh: ``n_devices`` devices on one axis.
+
+    Trajectory fan-out is embarrassingly parallel, so sampling workloads
+    (``sdeint(..., mesh_axis=...)``, the serving engine's sharded slots, the
+    throughput bench's multi-device ladder) shard a single batch axis — no
+    model axis needed.  Defaults to every visible device.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"n_devices={n_devices} not in [1, {len(devices)}] visible devices"
+        )
+    return Mesh(np.array(devices[:n]), (axis,))
 
 
 def axis_size(mesh: Mesh, axis) -> int:

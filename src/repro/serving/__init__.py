@@ -1,14 +1,23 @@
 """repro.serving — batched engines.
 
   engine     — LM continuous-batching decode engine (fixed-slot serve_step)
-  sde_engine — Monte-Carlo SDE sampling engine (fixed-slot batched sdeint)
+  scheduler  — host-side SDE serving core: FIFO queue, signature grouping,
+               slot plans, result scatter/retirement (device-free)
+  executor   — device-side SDE serving core: jit'd on-device multi-tick
+               dispatch, optional mesh-sharded slot axis
+  sde_engine — Monte-Carlo SDE sampling engine (façade over the two layers)
 """
 from .engine import Engine, ServeConfig
+from .executor import TickExecutor
+from .scheduler import Scheduler, SlotPlan
 from .sde_engine import SampleRequest, SampleResult, SDESampleConfig, SDESampleEngine
 
 __all__ = [
     "Engine",
     "ServeConfig",
+    "Scheduler",
+    "SlotPlan",
+    "TickExecutor",
     "SDESampleEngine",
     "SDESampleConfig",
     "SampleRequest",

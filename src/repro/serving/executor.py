@@ -1,0 +1,124 @@
+"""Device-side serving executor: one jit'd multi-tick dispatch per signature.
+
+The executor is the device half of the SDE serving core (the host half is
+:mod:`repro.serving.scheduler`).  It knows nothing about requests or queues:
+its unit of work is a **tick stack** — a ``(n_ticks, slots)`` buffer of
+per-path PRNG keys, all ticks sharing one request signature — which it runs
+through :func:`repro.core.sdeint_ticks`: an on-device ``lax.map`` over the
+tick axis inside ONE jit'd, input-donating dispatch.  A deep queue therefore
+costs one host round trip per signature *stack* instead of one per tick;
+``n_dispatches`` / ``n_ticks`` counters expose the ratio (the
+``bench_serving`` metric).
+
+Executables are cached per ``(signature, n_ticks)`` — the engine dispatches
+only full ``ticks_per_dispatch`` stacks plus single ticks (shallow queue
+tails are served tick-by-tick rather than as fresh depths), so a serving
+loop that drains a deep queue touches at most two entries per signature
+and never recompiles on a varying tail.  Each entry donates its key-stack argument on backends that
+implement donation, so the per-dispatch key upload reuses the previous
+buffer instead of allocating a fresh one.
+
+When the executor is built with a ``mesh_axis``, every tick's ``slots`` axis
+is sharded over that device-mesh axis through ``sdeint``'s existing
+``shard_map`` fan-out — ``slots = devices x per_device_slots`` becomes the
+serving unit — while the tick axis stays sequential (ticks are serving time,
+not parallel work).  Path keys are placement-independent
+(``fold_in(seed, i)``), so sharded, multi-tick, and single-tick dispatch all
+produce bitwise-identical samples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import parse_solver_spec, sdeint_ticks
+
+__all__ = ["TickExecutor"]
+
+
+class TickExecutor:
+    """Run same-signature tick stacks for one SDE term on one (set of)
+    device(s).  ``term``/``y0``/``args`` define the process; ``mesh`` +
+    ``mesh_axis`` optionally shard each tick's slot axis."""
+
+    def __init__(self, term, y0, *, args: Any = None, noise_shape=None,
+                 dtype: Any = jnp.float32, mesh=None,
+                 mesh_axis: Optional[str] = None):
+        if (mesh is None) != (mesh_axis is None):
+            # Both or neither: a long-lived executor must not resolve the
+            # mesh from whatever `with mesh:` context is ambient at dispatch
+            # time (and mesh-without-axis has no defined sharding).
+            raise ValueError(
+                "sharded dispatch needs mesh and mesh_axis together; got "
+                f"mesh={'set' if mesh is not None else 'None'}, "
+                f"mesh_axis={mesh_axis!r}"
+            )
+        self.term = term
+        self.y0 = y0
+        self.args = args
+        self.noise_shape = noise_shape
+        self.dtype = dtype
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self._compiled: Dict[Tuple, Any] = {}
+        # Host-round-trip accounting: n_dispatches counts jit re-entries
+        # (host -> device round trips), n_ticks the engine ticks they served.
+        self.n_dispatches = 0
+        self.n_ticks = 0
+
+    def _stack_fn(self, sig: Tuple, n_ticks: int):
+        """The cached jit'd dispatch for ``(sig, n_ticks)``.
+
+        Steady-state serving re-enters the same executable every dispatch
+        (no per-tick re-jit: the cache key is the full signature plus the
+        stack depth, and the scheduler canonicalises specs at submit so
+        equivalent spellings share an entry).  The key-stack argument is
+        donated where the backend implements donation, letting XLA reuse
+        the previous dispatch's buffer for each upload.
+        """
+        cache_key = (sig, n_ticks)
+        if cache_key not in self._compiled:
+            solver, t0, t1, n_steps, save_every, rtol, atol, save_at = sig
+            extra = {}
+            if rtol is not None:
+                extra["rtol"] = rtol
+            if atol is not None:
+                extra["atol"] = atol
+            if save_at is not None:
+                extra["save_at"] = jnp.asarray(save_at)
+
+            if parse_solver_spec(solver)[1].get("adaptive", False):
+                # Serving is forward-only: the while-loop stepper stops when
+                # every path reaches t1 instead of padding to the n_steps
+                # budget (bitwise-identical results).
+                extra["bounded"] = False
+
+            def stack(tick_keys):
+                return sdeint_ticks(
+                    self.term, solver, t0, t1, n_steps, self.y0, tick_keys,
+                    args=self.args, save_every=save_every,
+                    noise_shape=self.noise_shape, dtype=self.dtype,
+                    mesh=self.mesh, mesh_axis=self.mesh_axis, **extra,
+                )
+
+            # Donate the key stack so its device buffer is reused across
+            # dispatches.  CPU does not implement donation (jax would warn
+            # once per dispatch), so donate only where it takes effect.
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._compiled[cache_key] = jax.jit(stack, donate_argnums=donate)
+        return self._compiled[cache_key]
+
+    def dispatch(self, sig: Tuple, tick_keys):
+        """Run a ``(n_ticks, slots, ...)`` key stack; one host round trip.
+
+        Returns the solve result pytree with leading ``(n_ticks, slots)``
+        axes on every leaf; tick ``t`` is bitwise equal to a single-tick
+        dispatch of ``tick_keys[t]`` (see :func:`repro.core.sdeint_ticks`).
+        """
+        n_ticks = tick_keys.shape[0]
+        out = self._stack_fn(sig, n_ticks)(tick_keys)
+        self.n_dispatches += 1
+        self.n_ticks += n_ticks
+        return out

@@ -1,0 +1,348 @@
+"""Host-side serving scheduler: FIFO queue, signature grouping, slot plans.
+
+This is the pure-Python half of the SDE serving core (the device half is
+:mod:`repro.serving.executor`; :class:`repro.serving.SDESampleEngine` is the
+façade over both).  The scheduler owns everything that does NOT need a
+device — and is therefore unit-testable without one:
+
+* the FIFO request queue and the ``done`` result store;
+* request validation at submit time (:func:`make_request`), so a bad spec
+  can never crash at the queue head and starve the requests behind it;
+* **slot-plan construction** (:meth:`Scheduler.plan`): fill up to
+  ``max_ticks`` fixed-size ticks of ``slots`` paths each with paths from
+  queued requests sharing the head request's *signature* — FIFO over
+  requests, contiguous over each request's path indices.  Within that
+  signature group, planning ``T`` ticks at once is allocation-for-allocation
+  identical to planning one tick ``T`` times (the cursor arithmetic is the
+  same), which is what lets the executor run the whole stack in one
+  on-device loop without changing which path lands in which slot.  Across
+  signatures the stack widens the continuous-batching window: a deeper
+  dispatch may finish a later same-signature request before an earlier
+  different-signature one gets its first tick — the same
+  group-by-signature policy the single-tick engine already applied within
+  one tick, extended over ``ticks_per_dispatch`` ticks.  Service *order*
+  (and latency) across signatures therefore depends on the dispatch depth;
+  the delivered samples never do;
+* **result scatter and retirement** (:meth:`Scheduler.deliver`): route each
+  slot of each tick back to its request, retire fully-served requests into
+  ``done`` in queue order;
+* cancellation (lazy — a cancelled entry is skipped by the planner and
+  pruned from the queue on the next plan, so ``cancel`` is O(1)) and
+  :meth:`Scheduler.pending` introspection for polling clients.
+
+The scheduler never touches a PRNG key: a plan names ``(request, path
+index)`` pairs, and sampling reproducibility comes from the engine mapping
+pair ``(r, i)`` to ``fold_in(PRNGKey(seed_r), i)`` — independent of slot
+assignment, tick boundaries, dispatch grouping, and device placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import canonical_spec, parse_solver_spec, solver_kind
+
+__all__ = [
+    "SampleRequest",
+    "SampleResult",
+    "PendingRequest",
+    "SlotPlan",
+    "Scheduler",
+    "make_request",
+]
+
+# Per-path adaptive statistics riding along with every delivery.
+STAT_FIELDS = ("t_final", "n_accepted", "n_rejected")
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    request_id: int
+    solver: str
+    t0: float
+    t1: float
+    n_steps: int
+    n_paths: int
+    save_every: Optional[int]
+    seed: int
+    # Adaptive-solve options (solver spec carries an "adaptive" flag):
+    # tolerances for the PI controller and an arbitrary-time output grid.
+    rtol: Optional[float] = None
+    atol: Optional[float] = None
+    save_at: Optional[Tuple[float, ...]] = None
+
+    @property
+    def signature(self) -> Tuple:
+        """Requests with equal signatures can share one compiled batch."""
+        return (self.solver, self.t0, self.t1, self.n_steps, self.save_every,
+                self.rtol, self.atol, self.save_at)
+
+
+@dataclasses.dataclass
+class SampleResult:
+    """Stacked per-path outputs: ``y_final`` is (n_paths, ...); ``ys`` is
+    (n_paths, n_saves, ...) when the request asked for a saved trajectory.
+
+    ``t_final`` (adaptive requests only) is the (n_paths,) time each path
+    actually reached — equal to the request's ``t1`` unless the trial-step
+    budget ``n_steps`` was exhausted first, in which case the path stopped
+    short and its ``y_final`` is NOT a sample at ``t1``.  Check it (or just
+    ``(t_final == t1).all()``) before trusting adaptive results from
+    aggressive tolerance/budget combinations.
+
+    ``n_accepted`` / ``n_rejected`` (adaptive requests only) are the
+    per-path realized-grid statistics: how many steps each path's controller
+    accepted/rejected — the realized grid a client would replay offline (via
+    ``realize_grid`` with the same seed-derived key) for gradient work."""
+
+    y_final: Any
+    ys: Optional[Any]
+    t_final: Optional[np.ndarray] = None
+    n_accepted: Optional[np.ndarray] = None
+    n_rejected: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
+class PendingRequest:
+    request: SampleRequest
+    delivered: int = 0
+    cancelled: bool = False
+    y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
+    ys: List[np.ndarray] = dataclasses.field(default_factory=list)
+    t_final: List[np.ndarray] = dataclasses.field(default_factory=list)
+    n_accepted: List[np.ndarray] = dataclasses.field(default_factory=list)
+    n_rejected: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return self.request.n_paths - self.delivered
+
+
+@dataclasses.dataclass
+class SlotPlan:
+    """One dispatch: up to ``max_ticks`` same-signature ticks of ``slots``
+    paths each.  ``ticks[t][s]`` names the (pending, path-index) pair that
+    owns slot ``s`` of tick ``t``; trailing slots of a tick may be unassigned
+    (the engine pads them with dummy keys and the planner never references
+    their outputs)."""
+
+    signature: Tuple
+    slots: int
+    ticks: List[List[Tuple[PendingRequest, int]]]
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.ticks)
+
+    @property
+    def n_paths(self) -> int:
+        return sum(len(t) for t in self.ticks)
+
+
+def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
+                 n_steps: int, n_paths: int, t0: float = 0.0,
+                 save_every: Optional[int] = None, seed: Optional[int] = None,
+                 rtol: Optional[float] = None, atol: Optional[float] = None,
+                 save_at=None) -> SampleRequest:
+    """Validate request options and build a :class:`SampleRequest`.
+
+    Raises on anything malformed — this runs at submit time, not at the
+    queue head where a crash would starve everything queued behind it.
+    ``term_kind`` is the solver kind the serving term needs (``"euclidean"``
+    or ``"manifold"``); the solver spec must match.
+    """
+    if n_paths < 1:
+        raise ValueError(f"n_paths must be >= 1, got {n_paths}")
+    n_steps = int(n_steps)
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    if not float(t1) > float(t0):
+        raise ValueError(f"need t1 > t0, got t0={t0}, t1={t1}")
+    solver = canonical_spec(solver)  # raises on unknown names; one
+    # normal form per solver so equivalent spellings share a signature
+    if solver_kind(solver) != term_kind:
+        raise ValueError(
+            f"solver {solver!r} is {solver_kind(solver)}-kind but this "
+            f"engine's term needs a {term_kind} solver"
+        )
+    adaptive = parse_solver_spec(solver)[1].get("adaptive", False)
+    if not adaptive:
+        for name, val in (("rtol", rtol), ("atol", atol), ("save_at", save_at)):
+            if val is not None:
+                raise ValueError(
+                    f"{name} only applies to adaptive solves; request an "
+                    f"':adaptive' solver spec (got {solver!r})"
+                )
+    if adaptive and save_every is not None:
+        raise ValueError(
+            "save_every indexes a fixed grid; adaptive requests take "
+            "save_at=<sequence of times> instead"
+        )
+    if save_at is not None:
+        save_at = tuple(float(t) for t in save_at)
+        if not save_at:
+            raise ValueError("save_at must be a non-empty sequence of times")
+        if not all(float(t0) <= t <= float(t1) for t in save_at):
+            raise ValueError(f"save_at times must lie in [{t0}, {t1}]")
+    if save_every is not None:
+        if int(save_every) != save_every or int(save_every) < 1:
+            raise ValueError(f"save_every must be a positive int, got {save_every}")
+        save_every = int(save_every)
+        if n_steps % save_every != 0:
+            raise ValueError(
+                f"save_every={save_every} does not divide n_steps={n_steps}"
+            )
+    return SampleRequest(
+        request_id=request_id, solver=solver, t0=float(t0), t1=float(t1),
+        n_steps=n_steps, n_paths=int(n_paths), save_every=save_every,
+        seed=request_id if seed is None else int(seed),
+        rtol=None if rtol is None else float(rtol),
+        atol=None if atol is None else float(atol),
+        save_at=save_at,
+    )
+
+
+class Scheduler:
+    """FIFO scheduler over :class:`PendingRequest` entries (host-side only)."""
+
+    def __init__(self):
+        self.queue: Deque[PendingRequest] = deque()
+        self.done: Dict[int, SampleResult] = {}
+        self._next_id = 0
+        self._cancelled_ids: set = set()
+
+    @property
+    def next_request_id(self) -> int:
+        """The id the next enqueued request will get.  Reading it does not
+        allocate: build (and validate) the request against this id first, so
+        a rejected submit burns no id and leaves default seeds (= request
+        id) of later requests unshifted."""
+        return self._next_id
+
+    def new_request_id(self) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        return rid
+
+    def enqueue(self, request: SampleRequest) -> int:
+        self._next_id = max(self._next_id, request.request_id + 1)
+        self.queue.append(PendingRequest(request))
+        return request.request_id
+
+    # -- introspection / cancellation ---------------------------------------
+
+    def pending(self) -> Dict[int, int]:
+        """Paths still owed per queued request id (FIFO order, cancelled
+        entries excluded) — what a polling client checks between ``run``s."""
+        return {p.request.request_id: p.remaining
+                for p in self.queue if not p.cancelled}
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a queued request; partial results are discarded.
+
+        Returns True if this call cancelled it, False if it was already
+        cancelled or already completed (``done`` keeps completed results —
+        cancellation never un-delivers).  Unknown ids raise ``KeyError``.
+        O(1) effect: the entry is only marked here and pruned by the next
+        :meth:`plan`, so an idle engine never spins over cancelled husks.
+        """
+        if request_id in self.done:
+            return False
+        if request_id in self._cancelled_ids:
+            return False  # repeat cancel, incl. after plan() pruned the entry
+        for p in self.queue:
+            if p.request.request_id == request_id:
+                p.cancelled = True
+                self._cancelled_ids.add(request_id)
+                return True
+        raise KeyError(f"unknown request id {request_id}")
+
+    # -- planning -----------------------------------------------------------
+
+    def plan(self, slots: int, max_ticks: int = 1) -> Optional[SlotPlan]:
+        """Build the next dispatch: up to ``max_ticks`` ticks of the head
+        signature, or None when no work is queued.
+
+        Prunes cancelled entries first (their partial results are dropped),
+        then fills tick after tick over the head-signature group exactly as
+        successive single-tick plans over that group would — multi-tick
+        dispatch never changes *which* path runs in which slot.  It can
+        change cross-signature service order: the stack keeps draining the
+        head signature, so an other-signature request queued in between
+        waits for the next dispatch (see the module docstring).
+        """
+        if any(p.cancelled for p in self.queue):
+            live = [p for p in self.queue if not p.cancelled]
+            # prune in place: the queue object is a stable view (the engine
+            # façade exposes it), so rebinding would strand held references
+            self.queue.clear()
+            self.queue.extend(live)
+        if not self.queue:
+            return None
+        sig = self.queue[0].request.signature
+        taken: Dict[PendingRequest, int] = {}
+        ticks: List[List[Tuple[PendingRequest, int]]] = []
+        for _ in range(max_ticks):
+            tick: List[Tuple[PendingRequest, int]] = []
+            budget = slots
+            for p in self.queue:
+                if budget == 0:
+                    break
+                if p.request.signature != sig:
+                    continue
+                start = p.delivered + taken.get(p, 0)
+                take = min(budget, p.request.n_paths - start)
+                tick.extend((p, start + j) for j in range(take))
+                if take:
+                    taken[p] = taken.get(p, 0) + take
+                    budget -= take
+            if not tick:
+                break  # signature group exhausted before max_ticks
+            ticks.append(tick)
+        if not ticks:
+            return None
+        return SlotPlan(signature=sig, slots=slots, ticks=ticks)
+
+    # -- delivery -----------------------------------------------------------
+
+    def deliver(self, plan: SlotPlan,
+                outputs: Dict[str, Optional[np.ndarray]]) -> List[int]:
+        """Scatter dispatch outputs back to their requests and retire.
+
+        ``outputs`` maps field name (``y_final`` / ``ys`` / the adaptive
+        stats) to a stacked host array with leading ``(n_ticks, slots)``
+        axes, or None for fields this signature does not produce.  Returns
+        the ids retired into ``done``, in queue order.
+        """
+        for t, tick in enumerate(plan.ticks):
+            for s, (p, i) in enumerate(tick):
+                if i != p.delivered:  # pragma: no cover — planner invariant
+                    raise RuntimeError(
+                        f"plan slot (tick {t}, slot {s}) delivers path {i} of "
+                        f"request {p.request.request_id} but {p.delivered} "
+                        "paths were delivered so far — out-of-order delivery"
+                    )
+                p.y_final.append(outputs["y_final"][t, s])
+                if outputs.get("ys") is not None:
+                    p.ys.append(outputs["ys"][t, s])
+                for name in STAT_FIELDS:
+                    if outputs.get(name) is not None:
+                        getattr(p, name).append(outputs[name][t, s])
+                p.delivered += 1
+        retired = []
+        for p in dict.fromkeys(p for tick in plan.ticks for p, _ in tick):
+            if p.delivered == p.request.n_paths and not p.cancelled:
+                self.queue.remove(p)
+                rid = p.request.request_id
+                self.done[rid] = SampleResult(
+                    y_final=np.stack(p.y_final),
+                    ys=np.stack(p.ys) if p.ys else None,
+                    **{name: (np.stack(getattr(p, name))
+                              if getattr(p, name) else None)
+                       for name in STAT_FIELDS},
+                )
+                retired.append(rid)
+        return retired

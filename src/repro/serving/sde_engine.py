@@ -1,115 +1,79 @@
-"""Batched Monte-Carlo sampling engine: fixed-slot batching over ``sdeint``.
+"""Batched Monte-Carlo sampling engine: a façade over scheduler + executor.
 
 The SDE analogue of the LM :class:`~repro.serving.engine.Engine`: requests
-(solver name, horizon, number of paths) join a FIFO queue; every engine tick
-integrates one *fixed-size* batch of trajectories — ``slots`` paths — in a
-single jit'd ``sdeint`` call, filling the batch with paths from as many
-compatible queued requests as fit (continuous batching).  A request larger
-than ``slots`` is served across several ticks.
+(solver name, horizon, number of paths) join a FIFO queue; the engine serves
+them in *fixed-size* ticks of ``slots`` trajectories, filling each tick with
+paths from as many compatible queued requests as fit (continuous batching).
+A request larger than ``slots`` is served across several ticks.
 
-Two properties make slicing safe:
+Since PR 5 the engine is a thin façade over two layers (see
+``docs/serving.md``):
+
+* :class:`repro.serving.scheduler.Scheduler` — host-side: FIFO queue,
+  signature grouping, slot-plan construction, result scatter/retirement,
+  cancellation, ``pending()`` introspection.  Pure Python, unit-testable
+  without a device.
+* :class:`repro.serving.executor.TickExecutor` — device-side: runs a
+  same-signature *stack* of tick key-buffers through one jit'd, donated
+  on-device multi-tick loop (:func:`repro.core.sdeint_ticks`), so
+  ``ticks_per_dispatch`` ticks cost ONE host round trip instead of one
+  each; with ``mesh_axis`` set, each tick's slot axis additionally shards
+  over a device mesh (``slots = devices x per_device_slots``).
+
+Three properties make the slicing and the dispatch grouping safe:
 
 * path ``i`` of request ``r`` always uses ``fold_in(base_key_r, i)``, so the
   sample a request receives is independent of slot assignment, tick
-  boundaries, and whatever else shares its batch;
-* ``sdeint``'s batch is bitwise equal to single-trajectory solves, so a
-  request's paths are reproducible offline from its seed alone.
+  boundaries, dispatch depth, and device placement;
+* ``sdeint``'s batch is bitwise equal to single-trajectory solves, and
+  ``sdeint_ticks``'s on-device tick loop is bitwise equal to per-tick
+  dispatch — so multi-tick, single-tick, and mesh-sharded serving all
+  return identical bits (regression-tested);
+* compiled executables are cached per request *signature* (solver spec,
+  horizon, step count, save cadence, adaptive tolerances / output grid) and
+  stack depth — steady-state serving never recompiles, and each cached
+  entry donates its key buffer on backends that support donation.
 
-Compiled executables are cached per request *signature* (solver spec,
-horizon, step count, save cadence, adaptive tolerances / output grid) —
-ticks re-use them, so steady-state serving never recompiles, exactly like
-the LM engine's single jit'd step (built once from
-:func:`repro.models.make_serve_step`).  Each cached entry donates its input
-key buffer (``donate_argnums``) on backends that support donation, so the
-per-tick key stack is reused in place instead of allocating a fresh device
-buffer every tick.  Adaptive requests (an ``"ees25:adaptive"``-style spec)
-run the single forward-only controller pass (``bounded=False`` — sampling
-needs no second sweep; bitwise-identical to realize-then-solve) on a Virtual
-Brownian Tree — paths in one batch each walk their own accept/reject step
-sequence under vmap — and remain reproducible offline from the seed: the
-result surfaces each path's realized-grid stats (``n_accepted`` /
-``n_rejected`` / ``t_final``), and a client can realize the identical grid
-offline with :func:`repro.core.adaptive.realize_grid` + ``solve`` under any
-adjoint, including the O(1)-memory reversible one, for gradient work on
-served samples.
+Adaptive requests (an ``"ees25:adaptive"``-style spec) run the single
+forward-only controller pass (``bounded=False`` — sampling needs no second
+sweep; bitwise-identical to realize-then-solve) on a Virtual Brownian Tree —
+paths in one batch each walk their own accept/reject step sequence under
+vmap — and remain reproducible offline from the seed: the result surfaces
+each path's realized-grid stats (``n_accepted`` / ``n_rejected`` /
+``t_final``), and a client can realize the identical grid offline with
+:func:`repro.core.adaptive.realize_grid` + ``solve`` under any adjoint,
+including the O(1)-memory reversible one, for gradient work on served
+samples.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import canonical_spec, parse_solver_spec, sdeint, solver_kind
+from .executor import TickExecutor
+from .scheduler import (
+    STAT_FIELDS,
+    SampleRequest,
+    SampleResult,
+    Scheduler,
+    SlotPlan,
+    make_request,
+)
 
 __all__ = ["SDESampleConfig", "SampleRequest", "SampleResult", "SDESampleEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SDESampleConfig:
-    slots: int = 64          # trajectories integrated per tick
+    slots: int = 64            # trajectories integrated per tick
     dtype: Any = jnp.float32
-
-
-@dataclasses.dataclass(frozen=True)
-class SampleRequest:
-    request_id: int
-    solver: str
-    t0: float
-    t1: float
-    n_steps: int
-    n_paths: int
-    save_every: Optional[int]
-    seed: int
-    # Adaptive-solve options (solver spec carries an "adaptive" flag):
-    # tolerances for the PI controller and an arbitrary-time output grid.
-    rtol: Optional[float] = None
-    atol: Optional[float] = None
-    save_at: Optional[Tuple[float, ...]] = None
-
-    @property
-    def signature(self) -> Tuple:
-        """Requests with equal signatures can share one compiled batch."""
-        return (self.solver, self.t0, self.t1, self.n_steps, self.save_every,
-                self.rtol, self.atol, self.save_at)
-
-
-@dataclasses.dataclass
-class SampleResult:
-    """Stacked per-path outputs: ``y_final`` is (n_paths, ...); ``ys`` is
-    (n_paths, n_saves, ...) when the request asked for a saved trajectory.
-
-    ``t_final`` (adaptive requests only) is the (n_paths,) time each path
-    actually reached — equal to the request's ``t1`` unless the trial-step
-    budget ``n_steps`` was exhausted first, in which case the path stopped
-    short and its ``y_final`` is NOT a sample at ``t1``.  Check it (or just
-    ``(t_final == t1).all()``) before trusting adaptive results from
-    aggressive tolerance/budget combinations.
-
-    ``n_accepted`` / ``n_rejected`` (adaptive requests only) are the
-    per-path realized-grid statistics: how many steps each path's controller
-    accepted/rejected — the realized grid a client would replay offline (via
-    ``realize_grid`` with the same seed-derived key) for gradient work."""
-
-    y_final: Any
-    ys: Optional[Any]
-    t_final: Optional[np.ndarray] = None
-    n_accepted: Optional[np.ndarray] = None
-    n_rejected: Optional[np.ndarray] = None
-
-
-@dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
-class _Pending:
-    request: SampleRequest
-    delivered: int = 0
-    y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
-    ys: List[np.ndarray] = dataclasses.field(default_factory=list)
-    t_final: List[np.ndarray] = dataclasses.field(default_factory=list)
-    n_accepted: List[np.ndarray] = dataclasses.field(default_factory=list)
-    n_rejected: List[np.ndarray] = dataclasses.field(default_factory=list)
+    ticks_per_dispatch: int = 1  # ticks per host round trip (on-device loop)
+    mesh: Any = None             # device mesh to shard the slot axis over
+    mesh_axis: Optional[str] = None  # mesh axis name (slots % axis size == 0)
 
 
 class SDESampleEngine:
@@ -117,20 +81,59 @@ class SDESampleEngine:
 
     ``term``/``y0``/``args`` define the process; each request picks a solver
     from the registry by name and a horizon.  Results come back as stacked
-    numpy arrays per request id (like ``Engine.done``).
+    numpy arrays per request id (like ``Engine.done``).  The engine itself
+    only wires the host-side :class:`~repro.serving.scheduler.Scheduler` to
+    the device-side :class:`~repro.serving.executor.TickExecutor` and turns
+    slot plans into key buffers.
     """
 
     def __init__(self, term, y0, cfg: SDESampleConfig = SDESampleConfig(),
                  args: Any = None, noise_shape=None):
+        if cfg.ticks_per_dispatch < 1:
+            raise ValueError(
+                f"ticks_per_dispatch must be >= 1, got {cfg.ticks_per_dispatch}"
+            )
+        if (cfg.mesh is None) != (cfg.mesh_axis is None):
+            # A long-lived engine must not depend on whatever mesh context
+            # happens to be ambient at dispatch time — and slots/axis
+            # divisibility has to be checkable here, not at the queue head.
+            raise ValueError(
+                "sharded serving needs mesh and mesh_axis together; pass "
+                "both in SDESampleConfig (e.g. make_sample_mesh() + 'mc')"
+            )
+        if cfg.mesh is not None:
+            axis = cfg.mesh.shape[cfg.mesh_axis]
+            if cfg.slots % axis != 0:
+                raise ValueError(
+                    f"slots={cfg.slots} must be a multiple of mesh axis "
+                    f"{cfg.mesh_axis!r} (size {axis}) to shard the slot axis"
+                )
         self.term = term
         self.y0 = y0
         self.cfg = cfg
         self.args = args
         self.noise_shape = noise_shape
-        self.queue: deque = deque()
-        self.done: Dict[int, SampleResult] = {}
-        self._next_id = 0
-        self._compiled: Dict[Tuple, Any] = {}
+        self.scheduler = Scheduler()
+        self.executor = TickExecutor(
+            term, y0, args=args, noise_shape=noise_shape, dtype=cfg.dtype,
+            mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
+        )
+        self._key_cache: Dict[int, np.ndarray] = {}
+        self._pad_key = np.asarray(jax.random.PRNGKey(0))
+
+    # The queue, result store, and compiled-executable cache live on the two
+    # layers; these views keep the engine's original surface (and tests).
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def done(self) -> Dict[int, SampleResult]:
+        return self.scheduler.done
+
+    @property
+    def _compiled(self):
+        return self.executor._compiled
 
     def submit(self, solver: str, *, t1: float, n_steps: int, n_paths: int,
                t0: float = 0.0, save_every: Optional[int] = None,
@@ -172,171 +175,124 @@ class SDESampleEngine:
         >>> eng.run()[rid].ys.shape
         (1000, 3, ...)
         """
-        # Reject bad requests here, not at the queue head where a crash
-        # would starve everything queued behind them.
-        if n_paths < 1:
-            raise ValueError(f"n_paths must be >= 1, got {n_paths}")
-        n_steps = int(n_steps)
-        if n_steps < 1:
-            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
-        if not float(t1) > float(t0):
-            raise ValueError(f"need t1 > t0, got t0={t0}, t1={t1}")
-        solver = canonical_spec(solver)  # raises on unknown names; one
-        # normal form per solver so equivalent spellings share a signature
-        want = "manifold" if hasattr(self.term, "algebra_increment") else "euclidean"
-        if solver_kind(solver) != want:
-            raise ValueError(
-                f"solver {solver!r} is {solver_kind(solver)}-kind but this "
-                f"engine's term needs a {want} solver"
-            )
-        adaptive = parse_solver_spec(solver)[1].get("adaptive", False)
-        if not adaptive:
-            for name, val in (("rtol", rtol), ("atol", atol), ("save_at", save_at)):
-                if val is not None:
-                    raise ValueError(
-                        f"{name} only applies to adaptive solves; request an "
-                        f"':adaptive' solver spec (got {solver!r})"
-                    )
-        if adaptive and save_every is not None:
-            raise ValueError(
-                "save_every indexes a fixed grid; adaptive requests take "
-                "save_at=<sequence of times> instead"
-            )
-        if save_at is not None:
-            save_at = tuple(float(t) for t in save_at)
-            if not save_at:
-                raise ValueError("save_at must be a non-empty sequence of times")
-            if not all(float(t0) <= t <= float(t1) for t in save_at):
-                raise ValueError(f"save_at times must lie in [{t0}, {t1}]")
-        if save_every is not None:
-            if int(save_every) != save_every or int(save_every) < 1:
-                raise ValueError(f"save_every must be a positive int, got {save_every}")
-            save_every = int(save_every)
-            if n_steps % save_every != 0:
-                raise ValueError(
-                    f"save_every={save_every} does not divide n_steps={n_steps}"
-                )
-        rid = self._next_id
-        self._next_id += 1
-        req = SampleRequest(
-            request_id=rid, solver=solver, t0=float(t0), t1=float(t1),
-            n_steps=n_steps, n_paths=int(n_paths),
-            save_every=save_every, seed=rid if seed is None else int(seed),
-            rtol=None if rtol is None else float(rtol),
-            atol=None if atol is None else float(atol),
+        term_kind = ("manifold" if hasattr(self.term, "algebra_increment")
+                     else "euclidean")
+        # Validate against the *peeked* id: a rejected submit must not burn
+        # an id (default seeds equal the request id, so a burned id would
+        # shift every later request's samples).
+        req = make_request(
+            self.scheduler.next_request_id, solver, term_kind=term_kind,
+            t0=t0, t1=t1, n_steps=n_steps, n_paths=n_paths,
+            save_every=save_every, seed=seed, rtol=rtol, atol=atol,
             save_at=save_at,
         )
-        self.queue.append(_Pending(req))
-        return rid
+        return self.scheduler.enqueue(req)
+
+    def pending(self) -> Dict[int, int]:
+        """Paths still owed per queued request id — poll this between ticks
+        (cancelled requests drop out; completed ones move to ``done``)."""
+        return self.scheduler.pending()
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a queued request (partial results discarded).  True if this
+        call cancelled it; False if already cancelled or already completed;
+        ``KeyError`` on unknown ids."""
+        cancelled = self.scheduler.cancel(request_id)
+        if cancelled:
+            self._key_cache.pop(request_id, None)
+        return cancelled
 
     # -- internals -----------------------------------------------------------
 
-    def _batch_fn(self, sig: Tuple):
-        """The cached jit'd batch for ``sig`` — compiled once per signature.
+    def _request_keys(self, req: SampleRequest) -> np.ndarray:
+        """All of a request's path keys, built once: one vmapped
+        ``fold_in(PRNGKey(seed), i)`` over the path indices (integer ops —
+        bitwise-identical to per-path host calls)."""
+        keys = self._key_cache.get(req.request_id)
+        if keys is None:
+            base = jax.random.PRNGKey(req.seed)
+            keys = np.asarray(jax.vmap(
+                lambda i: jax.random.fold_in(base, i)
+            )(jnp.arange(req.n_paths)))
+            self._key_cache[req.request_id] = keys
+        return keys
 
-        Steady-state serving re-enters the same executable every tick (no
-        per-tick re-jit: the cache key is the full signature, and
-        :meth:`submit` canonicalises specs so equivalent spellings share an
-        entry).  The key-stack argument is donated where the backend
-        implements donation, letting XLA reuse the previous tick's buffer
-        for each resample instead of allocating a new one.
-        """
-        if sig not in self._compiled:
-            solver, t0, t1, n_steps, save_every, rtol, atol, save_at = sig
-            extra = {}
-            if rtol is not None:
-                extra["rtol"] = rtol
-            if atol is not None:
-                extra["atol"] = atol
-            if save_at is not None:
-                extra["save_at"] = jnp.asarray(save_at)
+    def _plan_keys(self, plan: SlotPlan) -> jax.Array:
+        """Assemble the (n_ticks, slots, ...) key stack for one dispatch;
+        unassigned slots get a dummy key (their outputs are never read), so
+        every dispatch of a (signature, depth) pair reuses one executable."""
+        buf = np.empty((plan.n_ticks, plan.slots) + self._pad_key.shape,
+                       self._pad_key.dtype)
+        buf[:] = self._pad_key
+        for t, tick in enumerate(plan.ticks):
+            s = 0
+            while s < len(tick):  # contiguous (pending, path) runs -> slices
+                p, i0 = tick[s]
+                e = s + 1
+                while e < len(tick) and tick[e][0] is p:
+                    e += 1
+                buf[t, s:e] = self._request_keys(p.request)[i0:i0 + (e - s)]
+                s = e
+        return jnp.asarray(buf)
 
-            if parse_solver_spec(solver)[1].get("adaptive", False):
-                # Serving is forward-only: the while-loop stepper stops when
-                # every path reaches t1 instead of padding to the n_steps
-                # budget (bitwise-identical results).
-                extra["bounded"] = False
+    def _dispatch_next(self, tick_limit: int) -> int:
+        """Plan, dispatch, and deliver one tick stack; returns the number of
+        ticks served (0 when idle — nothing live in the queue).
 
-            def batch(keys):
-                return sdeint(
-                    self.term, solver, t0, t1, n_steps, self.y0, None,
-                    args=self.args, save_every=save_every,
-                    noise_shape=self.noise_shape, dtype=self.cfg.dtype,
-                    batch_keys=keys, **extra,
-                )
-
-            # Donate the per-tick key stack so its device buffer is reused
-            # across ticks.  CPU does not implement donation (jax would warn
-            # once per tick), so donate only where it takes effect.
-            donate = (0,) if jax.default_backend() != "cpu" else ()
-            self._compiled[sig] = jax.jit(batch, donate_argnums=donate)
-        return self._compiled[sig]
-
-    def _path_key(self, req: SampleRequest, i: int):
-        return jax.random.fold_in(jax.random.PRNGKey(req.seed), i)
+        A plan shallower than the requested depth (the queue tail) is served
+        tick-by-tick through the single-tick executable rather than as a
+        fresh variable-depth stack — otherwise every distinct tail depth
+        would trigger a full XLA recompile of the solve, and a drain would
+        touch up to ``ticks_per_dispatch`` executables per signature instead
+        of two (full stack + single tick)."""
+        depth = min(tick_limit, self.cfg.ticks_per_dispatch)
+        plan = self.scheduler.plan(self.cfg.slots, depth)
+        if plan is None:
+            return 0
+        # Only the configured full depth (and single ticks) may compile:
+        # a budget-capped or tail plan of any other depth is served
+        # tick-by-tick through the (signature, 1) executable.
+        if plan.n_ticks in (1, self.cfg.ticks_per_dispatch):
+            subplans = [plan]
+        else:
+            subplans = [SlotPlan(plan.signature, plan.slots, [tick])
+                        for tick in plan.ticks]
+        for sp in subplans:
+            result = self.executor.dispatch(sp.signature, self._plan_keys(sp))
+            outputs = {"y_final": np.asarray(result.y_final),
+                       "ys": (None if result.ys is None
+                              else np.asarray(result.ys))}
+            # Adaptive results carry where each path actually stopped plus
+            # its realized-grid stats; surface them so budget-exhausted
+            # (truncated) paths are detectable and step counts are
+            # observable per path.
+            for name in STAT_FIELDS:
+                val = getattr(result, name, None)
+                outputs[name] = None if val is None else np.asarray(val)
+            for rid in self.scheduler.deliver(sp, outputs):
+                self._key_cache.pop(rid, None)
+        return plan.n_ticks
 
     def tick(self) -> bool:
-        """Integrate one fixed-slot batch; return False when idle."""
-        if not self.queue:
-            return False
-        head = self.queue[0]
-        sig = head.request.signature
-        # Fill the slot budget with paths from queued requests sharing the
-        # head's signature (FIFO over requests, contiguous over paths).
-        plan: List[Tuple[_Pending, int]] = []  # (pending, path index)
-        budget = self.cfg.slots
-        for pending in self.queue:
-            if budget == 0:
-                break
-            if pending.request.signature != sig:
-                continue
-            take = min(budget, pending.request.n_paths - pending.delivered)
-            plan.extend((pending, pending.delivered + j) for j in range(take))
-            budget -= take
-        # Fixed batch shape: pad unused slots with a dummy key so every tick
-        # of this signature hits the same compiled executable.
-        keys = [self._path_key(p.request, i) for p, i in plan]
-        keys += [jax.random.PRNGKey(0)] * (self.cfg.slots - len(keys))
-        result = self._batch_fn(sig)(jnp.stack(keys))
-        y_final = np.asarray(result.y_final)
-        ys = None if result.ys is None else np.asarray(result.ys)
-        # Adaptive results carry where each path actually stopped plus its
-        # realized-grid stats; surface them so budget-exhausted (truncated)
-        # paths are detectable and step counts are observable per path.
-        stats = {
-            name: (None if getattr(result, name, None) is None
-                   else np.asarray(getattr(result, name)))
-            for name in ("t_final", "n_accepted", "n_rejected")
-        }
-        for slot, (pending, _) in enumerate(plan):
-            pending.y_final.append(y_final[slot])
-            if ys is not None:
-                pending.ys.append(ys[slot])
-            for name, arr in stats.items():
-                if arr is not None:
-                    getattr(pending, name).append(arr[slot])
-            pending.delivered += 1
-        # Retire fully-served requests, preserving queue order.
-        for pending in dict.fromkeys(p for p, _ in plan):
-            if pending.delivered == pending.request.n_paths:
-                self.queue.remove(pending)
-                self.done[pending.request.request_id] = SampleResult(
-                    y_final=np.stack(pending.y_final),
-                    ys=np.stack(pending.ys) if pending.ys else None,
-                    **{name: (np.stack(getattr(pending, name))
-                              if getattr(pending, name) else None)
-                       for name in ("t_final", "n_accepted", "n_rejected")},
-                )
-        return True
+        """Serve one dispatch (up to ``ticks_per_dispatch`` ticks in one host
+        round trip); return False when idle."""
+        return self._dispatch_next(self.cfg.ticks_per_dispatch) > 0
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, SampleResult]:
-        for _ in range(max_ticks):
-            if not self.tick():
-                break
-        else:
-            if self.queue:
-                raise RuntimeError(
-                    f"max_ticks={max_ticks} exhausted with {len(self.queue)} "
-                    "request(s) still queued; raise max_ticks or slots"
-                )
+        """Serve until the queue drains (or ``max_ticks`` ticks ran).
+
+        Idle states — an empty queue, or one holding only cancelled
+        requests — return immediately with whatever ``done`` already holds;
+        they can never spin the tick budget."""
+        served = 0
+        while served < max_ticks:
+            n = self._dispatch_next(max_ticks - served)
+            if n == 0:
+                return self.done
+            served += n
+        if self.pending():
+            raise RuntimeError(
+                f"max_ticks={max_ticks} exhausted with {len(self.pending())} "
+                "request(s) still queued; raise max_ticks or slots"
+            )
         return self.done

@@ -293,8 +293,8 @@ class TestServingDispatch:
                               SDESampleConfig(slots=2), args=args())
         rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=5, seed=1)
         sig = eng.queue[0].request.signature
-        fn_first = eng._batch_fn(sig)
+        fn_first = eng.executor._stack_fn(sig, 1)
         eng.run()
-        assert eng._batch_fn(sig) is fn_first  # no per-tick re-jit
+        assert eng.executor._stack_fn(sig, 1) is fn_first  # no per-tick re-jit
         assert len(eng._compiled) == 1
         assert eng.done[rid].y_final.shape == (5, 3)

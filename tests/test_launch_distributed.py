@@ -155,6 +155,80 @@ def test_sdeint_mesh_fanout_matches_vmap():
     assert "OK" in out
 
 
+def test_engine_mesh_sharded_serving_bitwise():
+    """Serving with mesh-sharded slots (slots = devices x per_device_slots)
+    returns bit-identical SampleResults to plain single-device serving, for
+    both single-tick and multi-tick dispatch — path keys are placement-
+    independent, so sharding is invisible in the samples."""
+    out = run_py("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import SDETerm
+        from repro.launch.mesh import make_sample_mesh
+        from repro.serving import SDESampleConfig, SDESampleEngine
+
+        term = SDETerm(
+            drift=lambda t, y, a: -0.5 * y,
+            diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+            noise="diagonal",
+        )
+
+        def serve(cfg):
+            eng = SDESampleEngine(term, jnp.ones(4), cfg)
+            r1 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=20, seed=3)
+            r2 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=5, seed=8)
+            done = eng.run()
+            return done[r1].y_final, done[r2].y_final
+
+        mesh = make_sample_mesh()  # 8 fake devices on one "mc" axis
+        plain = serve(SDESampleConfig(slots=8))
+        sharded = serve(SDESampleConfig(slots=8, mesh=mesh, mesh_axis="mc"))
+        sharded_multi = serve(SDESampleConfig(slots=8, mesh=mesh,
+                                              mesh_axis="mc",
+                                              ticks_per_dispatch=3))
+        for a, b, c in zip(plain, sharded, sharded_multi):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+
+        # indivisible slots are rejected up front, not at dispatch
+        try:
+            SDESampleEngine(term, jnp.ones(4),
+                            SDESampleConfig(slots=6, mesh=mesh, mesh_axis="mc"))
+        except ValueError as e:
+            assert "multiple of mesh axis" in str(e)
+        else:
+            raise AssertionError("slots=6 on an 8-way axis should raise")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_bench_throughput_mesh_ladder_emits_records():
+    """With devices > 1 the throughput bench charts the sharded ladder into
+    mesh_records (single-device runs keep records unchanged and empty
+    mesh_records)."""
+    out = run_py("""
+        import os, json, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import benchmarks.bench_throughput as bt
+
+        path = os.path.join(tempfile.mkdtemp(), "bench.json")
+        bt.run(path, batch_sizes=(4, 16), solvers=("ees25",), n_steps=8, dim=4)
+        data = json.load(open(path))
+        assert data["n_devices"] == 8, data["n_devices"]
+        assert len(data["records"]) == 2
+        # batch 4 does not divide over 8 devices -> only batch 16 shards
+        mesh = data["mesh_records"]
+        assert [r["batch_size"] for r in mesh] == [16], mesh
+        assert mesh[0]["devices"] == 8
+        assert mesh[0]["speedup_vs_single"] is not None
+        assert all("speedup_bulk" in r for r in data["records"])
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_compressed_gradient_allreduce():
     """int8-quantised all-reduce with error feedback under shard_map."""
     out = run_py("""

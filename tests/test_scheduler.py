@@ -1,0 +1,243 @@
+"""Host-side serving-scheduler tests: FIFO fairness, slot plans, partial
+delivery, retirement order, cancellation — no jit, no device, no keys.
+
+The scheduler is the pure-Python half of the serving core; everything here
+fabricates dispatch outputs with numpy, so the whole file runs in
+milliseconds and proves the queueing logic independently of jax.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import Scheduler, make_request
+
+pytest.importorskip("jax")  # registry parsing imports jax (no device init)
+
+
+def submit(sched: Scheduler, solver="ees25", n_paths=1, n_steps=8, t1=1.0,
+           **kw) -> int:
+    req = make_request(sched.new_request_id(), solver, term_kind="euclidean",
+                       t1=t1, n_steps=n_steps, n_paths=n_paths, **kw)
+    return sched.enqueue(req)
+
+
+def fake_outputs(plan, dim=2):
+    """Dispatch outputs whose value encodes (request id, path index), so the
+    scatter can be checked path-for-path."""
+    y = np.zeros((plan.n_ticks, plan.slots, dim))
+    for t, tick in enumerate(plan.ticks):
+        for s, (p, i) in enumerate(tick):
+            y[t, s] = p.request.request_id * 1000 + i
+    return {"y_final": y, "ys": None}
+
+
+def drain(sched: Scheduler, slots: int, max_ticks: int = 1):
+    """Run plan/deliver until idle, returning the dispatched plans."""
+    plans = []
+    while True:
+        plan = sched.plan(slots, max_ticks)
+        if plan is None:
+            return plans
+        sched.deliver(plan, fake_outputs(plan))
+        plans.append(plan)
+
+
+def plan_layout(plan):
+    return [[(p.request.request_id, i) for p, i in tick] for tick in plan.ticks]
+
+
+class TestPlanning:
+    def test_fifo_fairness_across_mixed_signatures(self):
+        """Grouping by the head signature never reorders requests: sig-A work
+        ahead of a sig-B request is drained first (FIFO over requests,
+        contiguous over paths), and interleaved sig-A requests share ticks."""
+        s = Scheduler()
+        a = submit(s, "ees25", n_paths=5)
+        b = submit(s, "reversible_heun", n_paths=3)
+        c = submit(s, "ees25", n_paths=4)
+        plan1 = s.plan(slots=4, max_ticks=10)
+        assert plan_layout(plan1) == [
+            [(a, 0), (a, 1), (a, 2), (a, 3)],
+            [(a, 4), (c, 0), (c, 1), (c, 2)],
+            [(c, 3)],
+        ]
+        s.deliver(plan1, fake_outputs(plan1))
+        plan2 = s.plan(slots=4, max_ticks=10)
+        assert plan_layout(plan2) == [[(b, 0), (b, 1), (b, 2)]]
+
+    def test_multi_tick_plan_equals_repeated_single_tick_plans(self):
+        """Within one signature group, planning T ticks at once allocates
+        slot-for-slot what T successive single-tick plan/deliver rounds
+        would — the invariant that makes multi-tick dispatch bitwise-safe.
+        (Across signatures only service *order* may differ: the stack keeps
+        draining the head signature before the queue head moves on.)"""
+        def fill(sched):
+            submit(sched, "ees25", n_paths=6, seed=0)
+            submit(sched, "ees25", n_paths=3, seed=1)
+            submit(sched, "ees25", n_paths=2, seed=2)
+
+        multi, single = Scheduler(), Scheduler()
+        fill(multi), fill(single)
+        layout_multi = [lay for p in drain(multi, slots=4, max_ticks=16)
+                        for lay in plan_layout(p)]
+        layout_single = [lay for p in drain(single, slots=4, max_ticks=1)
+                         for lay in plan_layout(p)]
+        assert layout_multi == layout_single
+        assert multi.done.keys() == single.done.keys()
+
+    def test_slot_plan_padding(self):
+        """Trailing slots of the last tick stay unassigned (the engine pads
+        them with dummy keys); assigned paths never exceed the slot budget."""
+        s = Scheduler()
+        submit(s, n_paths=6)
+        plan = s.plan(slots=4, max_ticks=2)
+        assert plan.n_ticks == 2 and plan.slots == 4
+        assert [len(t) for t in plan.ticks] == [4, 2]  # 2 padded slots
+        assert plan.n_paths == 6
+
+    def test_plan_stops_at_signature_boundary(self):
+        s = Scheduler()
+        submit(s, "ees25", n_paths=2)
+        submit(s, "reversible_heun", n_paths=2)
+        plan = s.plan(slots=2, max_ticks=8)  # budget allows 8 ticks...
+        assert plan.n_ticks == 1             # ...but the sig group has 1
+        assert plan.signature[0] == "ees25"
+
+    def test_idle_plan_is_none(self):
+        s = Scheduler()
+        assert s.plan(slots=4, max_ticks=2) is None
+
+
+class TestDelivery:
+    def test_partial_delivery_across_dispatches(self):
+        """A request larger than one dispatch resumes at the right path index
+        and exposes its remaining count via pending()."""
+        s = Scheduler()
+        rid = submit(s, n_paths=7, seed=3)
+        plan = s.plan(slots=3, max_ticks=1)
+        s.deliver(plan, fake_outputs(plan))
+        assert s.pending() == {rid: 4}
+        plan = s.plan(slots=3, max_ticks=1)
+        assert plan_layout(plan) == [[(rid, 3), (rid, 4), (rid, 5)]]
+        s.deliver(plan, fake_outputs(plan))
+        plan = s.plan(slots=3, max_ticks=1)
+        s.deliver(plan, fake_outputs(plan))
+        assert s.pending() == {} and list(s.done) == [rid]
+        # scatter check: row i of the stacked result is path i's output
+        np.testing.assert_array_equal(
+            s.done[rid].y_final[:, 0], rid * 1000 + np.arange(7)
+        )
+
+    def test_retirement_order_follows_queue_order(self):
+        """Requests retiring in the same dispatch land in ``done`` in queue
+        order, even when a later (smaller) request finishes in an earlier
+        tick of the stack."""
+        s = Scheduler()
+        big = submit(s, n_paths=5)
+        small = submit(s, n_paths=1)
+        plan = s.plan(slots=3, max_ticks=2)
+        # both finish inside this one dispatch; done order = queue order
+        retired = s.deliver(plan, fake_outputs(plan))
+        assert retired == [big, small]
+        assert list(s.done) == [big, small]
+
+    def test_stat_fields_scattered_when_present(self):
+        s = Scheduler()
+        rid = submit(s, "ees25:adaptive", n_paths=2, n_steps=32, rtol=1e-3)
+        plan = s.plan(slots=2, max_ticks=1)
+        out = fake_outputs(plan)
+        out["t_final"] = np.full((1, 2), 1.0)
+        out["n_accepted"] = np.array([[10, 12]])
+        out["n_rejected"] = np.array([[1, 0]])
+        s.deliver(plan, out)
+        res = s.done[rid]
+        np.testing.assert_array_equal(res.n_accepted, [10, 12])
+        np.testing.assert_array_equal(res.n_rejected, [1, 0])
+        np.testing.assert_array_equal(res.t_final, [1.0, 1.0])
+
+
+class TestCancellation:
+    def test_cancelled_entries_are_skipped_and_pruned(self):
+        s = Scheduler()
+        a = submit(s, n_paths=2)
+        b = submit(s, n_paths=2)
+        assert s.cancel(a) is True
+        assert s.cancel(a) is False          # second cancel is a no-op
+        assert s.pending() == {b: 2}
+        plan = s.plan(slots=4, max_ticks=1)  # prunes a, plans b only
+        assert plan_layout(plan) == [[(b, 0), (b, 1)]]
+        s.deliver(plan, fake_outputs(plan))
+        assert list(s.done) == [b]
+
+    def test_pruning_keeps_queue_object_stable(self):
+        """The queue is an exposed view (the engine façade re-exports it);
+        pruning must mutate it in place, never rebind it."""
+        s = Scheduler()
+        view = s.queue
+        s.cancel(submit(s, n_paths=2))
+        live = submit(s, n_paths=1)
+        assert s.plan(slots=2, max_ticks=1) is not None  # prunes
+        assert s.queue is view
+        assert [p.request.request_id for p in view] == [live]
+
+    def test_queue_of_only_cancelled_requests_plans_none(self):
+        """The queued-then-cancelled state an idle engine must not spin on."""
+        s = Scheduler()
+        for rid in (submit(s, n_paths=9), submit(s, n_paths=9)):
+            s.cancel(rid)
+        assert s.plan(slots=4, max_ticks=100) is None
+        assert not s.queue  # husks pruned, not just skipped
+
+    def test_cancel_after_prune_returns_false(self):
+        """A client retrying cancel() after the planner pruned the cancelled
+        entry gets False (already cancelled), not KeyError."""
+        s = Scheduler()
+        rid = submit(s, n_paths=3)
+        live = submit(s, n_paths=1)
+        assert s.cancel(rid) is True
+        drain(s, slots=2)              # plan() prunes the cancelled entry
+        assert list(s.done) == [live]
+        assert s.cancel(rid) is False  # pruned, but still a known id
+
+    def test_cancel_completed_and_unknown(self):
+        s = Scheduler()
+        rid = submit(s, n_paths=1)
+        drain(s, slots=1)
+        assert s.cancel(rid) is False  # completed: result stays in done
+        assert rid in s.done
+        with pytest.raises(KeyError, match="unknown request id"):
+            s.cancel(12345)
+
+
+class TestMakeRequest:
+    def test_canonicalises_spec(self):
+        r1 = make_request(0, "Reversible-Heun", term_kind="euclidean",
+                          t1=1.0, n_steps=8, n_paths=1)
+        r2 = make_request(1, "reversible_heun", term_kind="euclidean",
+                          t1=1.0, n_steps=8, n_paths=1)
+        assert r1.signature == r2.signature
+
+    def test_rejects_malformed_requests(self):
+        def bad(match, *a, **kw):
+            with pytest.raises((ValueError, KeyError), match=match):
+                make_request(0, *a, term_kind="euclidean", **kw)
+
+        bad("unknown solver", "ees2", t1=1.0, n_steps=8, n_paths=1)
+        bad("n_paths", "ees25", t1=1.0, n_steps=8, n_paths=0)
+        bad("t1 > t0", "ees25", t1=0.0, n_steps=8, n_paths=1)
+        bad("save_every", "ees25", t1=1.0, n_steps=8, n_paths=1, save_every=3)
+        bad("manifold", "geo-em", t1=1.0, n_steps=8, n_paths=1)
+        bad("adaptive", "ees25", t1=1.0, n_steps=8, n_paths=1, rtol=1e-3)
+        bad("save_at", "ees25:adaptive", t1=1.0, n_steps=8, n_paths=1,
+            save_at=[2.0])
+        bad("save_at", "ees25:adaptive", t1=1.0, n_steps=8, n_paths=1,
+            save_at=[])
+        bad("save_every", "ees25:adaptive", t1=1.0, n_steps=8, n_paths=1,
+            save_every=2)
+
+    def test_seed_defaults_to_request_id(self):
+        r = make_request(7, "ees25", term_kind="euclidean", t1=1.0,
+                         n_steps=8, n_paths=1)
+        assert r.seed == 7
+        r = make_request(7, "ees25", term_kind="euclidean", t1=1.0,
+                         n_steps=8, n_paths=1, seed=42)
+        assert r.seed == 42

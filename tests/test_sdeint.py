@@ -264,6 +264,46 @@ class TestAdjointParity:
 
 
 # ---------------------------------------------------------------------------
+# Fixed-grid Brownian driver: cached prefix-sum path.
+# ---------------------------------------------------------------------------
+
+class TestBrownianPathCache:
+    def test_cached_and_uncached_queries_bitwise_equal(self):
+        """increment_over realizes the prefix-sum path once per driver; the
+        cached re-query and a fresh (uncached) driver's query must return
+        the exact same bits."""
+        bm = brownian_path(KEY, 0.0, 1.0, 64, shape=(5,), dtype=jnp.float64)
+        first = np.asarray(bm.increment_over(0.25, 0.875))
+        assert bm._path_cache is not None  # realized and kept
+        again = np.asarray(bm.increment_over(0.25, 0.875))
+        uncached = np.asarray(
+            brownian_path(KEY, 0.0, 1.0, 64, shape=(5,),
+                          dtype=jnp.float64).increment_over(0.25, 0.875)
+        )
+        np.testing.assert_array_equal(first, again)
+        np.testing.assert_array_equal(first, uncached)
+        # and the window is consistent with the per-step increments
+        manual = sum(np.asarray(bm.increment(n)) for n in range(16, 56))
+        np.testing.assert_allclose(first, manual, rtol=1e-12)
+
+    def test_cache_never_captures_tracers(self):
+        """A concrete driver queried inside jit must not cache the traced
+        path (it would leak into later traces); traced instances rebuilt by
+        tree_unflatten start cacheless."""
+        bm = brownian_path(KEY, 0.0, 1.0, 16, shape=(3,))
+        jax.jit(lambda s: bm.increment_over(s, 1.0))(0.5)
+        assert bm._path_cache is None or not any(
+            isinstance(l, jax.core.Tracer)
+            for l in jax.tree_util.tree_leaves(bm._path_cache)
+        )
+        jax.jit(lambda s: bm.increment_over(s, 1.0))(0.25)  # fresh trace: no leak
+        roundtrip = jax.tree_util.tree_unflatten(
+            *reversed(jax.tree_util.tree_flatten(bm))
+        )
+        assert roundtrip._path_cache is None
+
+
+# ---------------------------------------------------------------------------
 # Fixed-slot sampling engine.
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,231 @@
+"""Serving-core integration tests: the engine façade over scheduler +
+executor — multi-tick dispatch bitwise-equality, host-round-trip accounting,
+cancellation/pending, and the no-spin idle guarantees.
+
+The mesh-sharded serving case lives in ``test_launch_distributed.py`` (it
+needs a subprocess with faked devices); everything here runs on the single
+real CPU device.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SDETerm, sdeint, sdeint_ticks
+from repro.serving import SDESampleConfig, SDESampleEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: -0.5 * y,
+        diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+class TestSdeintTicks:
+    def test_tick_stack_bitwise_equals_per_tick_sdeint(self):
+        keys = jax.random.split(KEY, 12)
+        stack = keys.reshape(3, 4, *keys.shape[1:])
+        r = sdeint_ticks(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3), stack,
+                         dtype=jnp.float32, save_every=4)
+        assert r.y_final.shape[:2] == (3, 4) and r.ys.shape[:3] == (3, 4, 2)
+        for t in range(3):
+            ref = sdeint(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3), None,
+                         batch_keys=stack[t], dtype=jnp.float32, save_every=4)
+            np.testing.assert_array_equal(np.asarray(r.y_final[t]),
+                                          np.asarray(ref.y_final))
+            np.testing.assert_array_equal(np.asarray(r.ys[t]),
+                                          np.asarray(ref.ys))
+
+    def test_adaptive_tick_stack_bitwise(self):
+        keys = jax.random.split(KEY, 4)
+        stack = keys.reshape(2, 2, *keys.shape[1:])
+        r = sdeint_ticks(term(), "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(3),
+                         stack, dtype=jnp.float32, rtol=1e-3, bounded=False)
+        ref = sdeint(term(), "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(3),
+                     None, batch_keys=stack[1], dtype=jnp.float32, rtol=1e-3,
+                     bounded=False)
+        np.testing.assert_array_equal(np.asarray(r.y_final[1]),
+                                      np.asarray(ref.y_final))
+        np.testing.assert_array_equal(np.asarray(r.n_accepted[1]),
+                                      np.asarray(ref.n_accepted))
+
+    def test_flat_batch_rejected(self):
+        # a single key and a flat (B, 2) single-tick batch both lack the
+        # tick axis and must be pointed at sdeint, not die mid-trace
+        with pytest.raises(ValueError, match="n_ticks, batch"):
+            sdeint_ticks(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3),
+                         jax.random.split(KEY, 4)[0], dtype=jnp.float32)
+        with pytest.raises(ValueError, match="n_ticks, batch"):
+            sdeint_ticks(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3),
+                         jax.random.split(KEY, 4), dtype=jnp.float32)
+        # typed (new-style) keys: (T, B) key arrays are valid, flat (B,) not
+        typed = jax.random.split(jax.random.key(0), 4)
+        with pytest.raises(ValueError, match="n_ticks, batch"):
+            sdeint_ticks(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3), typed,
+                         dtype=jnp.float32)
+        r = sdeint_ticks(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3),
+                         typed.reshape(2, 2), dtype=jnp.float32)
+        assert r.y_final.shape[:2] == (2, 2)
+
+
+class TestMultiTickServing:
+    def serve(self, *, ticks_per_dispatch, solver="ees25", **submit_kw):
+        eng = SDESampleEngine(
+            term(), jnp.ones(3),
+            SDESampleConfig(slots=4, ticks_per_dispatch=ticks_per_dispatch),
+        )
+        r1 = eng.submit(solver, t1=1.0, n_steps=16, n_paths=10, seed=5,
+                        **submit_kw)
+        r2 = eng.submit(solver, t1=1.0, n_steps=16, n_paths=3, seed=9,
+                        **submit_kw)
+        done = eng.run()
+        return done[r1], done[r2], eng
+
+    def test_multi_tick_bitwise_equals_single_tick(self):
+        """The acceptance-criteria regression: multi-tick and single-tick
+        serving return bit-identical SampleResults for the same requests
+        (path key = fold_in(seed, i) is dispatch-grouping-independent)."""
+        a1, a2, single = self.serve(ticks_per_dispatch=1)
+        b1, b2, multi = self.serve(ticks_per_dispatch=4)
+        np.testing.assert_array_equal(a1.y_final, b1.y_final)
+        np.testing.assert_array_equal(a2.y_final, b2.y_final)
+        # same 4 ticks of work, but 4 host dispatches collapse into 1
+        assert single.executor.n_ticks == multi.executor.n_ticks == 4
+        assert single.executor.n_dispatches == 4
+        assert multi.executor.n_dispatches == 1
+
+    def test_multi_tick_bitwise_adaptive(self):
+        a1, a2, _ = self.serve(ticks_per_dispatch=1, solver="ees25:adaptive",
+                               rtol=1e-3)
+        b1, b2, _ = self.serve(ticks_per_dispatch=4, solver="ees25:adaptive",
+                               rtol=1e-3)
+        np.testing.assert_array_equal(a1.y_final, b1.y_final)
+        np.testing.assert_array_equal(a2.y_final, b2.y_final)
+        np.testing.assert_array_equal(a1.n_accepted, b1.n_accepted)
+        np.testing.assert_array_equal(a1.t_final, b1.t_final)
+
+    def test_results_reproducible_offline_through_multi_tick(self):
+        eng = SDESampleEngine(term(), jnp.ones(3),
+                              SDESampleConfig(slots=4, ticks_per_dispatch=3))
+        rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=10, seed=7)
+        done = eng.run()
+        keys = jnp.stack(
+            [jax.random.fold_in(jax.random.PRNGKey(7), i) for i in range(10)]
+        )
+        ref = sdeint(term(), "ees25", 0.0, 1.0, 8, jnp.ones(3), None,
+                     batch_keys=keys, dtype=jnp.float32)
+        np.testing.assert_array_equal(done[rid].y_final,
+                                      np.asarray(ref.y_final))
+
+    def test_steady_state_uses_two_executables_per_signature(self):
+        """A deep queue drains through the full-stack executable plus (at
+        most) the single-tick one — not one compile per depth."""
+        eng = SDESampleEngine(term(), jnp.ones(3),
+                              SDESampleConfig(slots=2, ticks_per_dispatch=2))
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=11)  # 6 ticks: 2+2+2
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=4)   # rides along
+        eng.run()
+        assert eng.executor.n_ticks == 8
+        assert eng.executor.n_dispatches == 4
+        assert len(eng._compiled) == 1  # every dispatch was a full stack
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=1)   # 1-tick tail
+        eng.run()
+        assert len(eng._compiled) == 2
+
+    def test_shallow_tail_reuses_single_tick_executable(self):
+        """A tail shallower than ticks_per_dispatch must not compile a new
+        stack depth: it is served tick-by-tick through the single-tick
+        entry (so depths in the cache stay {full, 1})."""
+        eng = SDESampleEngine(term(), jnp.ones(3),
+                              SDESampleConfig(slots=2, ticks_per_dispatch=4))
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=12, seed=2)  # 6 ticks
+        done = eng.run()
+        assert eng.executor.n_ticks == 6
+        assert eng.executor.n_dispatches == 3      # 4-stack + 2 single ticks
+        assert {k[1] for k in eng._compiled} == {4, 1}
+        # and the tail split leaves no trace in the samples
+        ref = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        rid = ref.submit("ees25", t1=1.0, n_steps=8, n_paths=12, seed=2)
+        np.testing.assert_array_equal(done[0].y_final, ref.run()[rid].y_final)
+
+    def test_rejected_submit_burns_no_request_id(self):
+        """A failed submit must not shift later default seeds (= request
+        ids): the id is only allocated once validation passes."""
+        eng = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        with pytest.raises(ValueError, match="n_steps"):
+            eng.submit("ees25", t1=1.0, n_steps=0, n_paths=2)
+        rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        assert rid == 0  # not 1: samples of seed-defaulted requests unshifted
+        clean = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        rid2 = clean.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        np.testing.assert_array_equal(eng.run()[rid].y_final,
+                                      clean.run()[rid2].y_final)
+
+    def test_bad_config_rejected(self):
+        with pytest.raises(ValueError, match="ticks_per_dispatch"):
+            SDESampleEngine(term(), jnp.ones(3),
+                            SDESampleConfig(ticks_per_dispatch=0))
+        # mesh_axis without an explicit mesh would defer the slots/axis
+        # divisibility check to the first dispatch (ambient mesh) — rejected
+        with pytest.raises(ValueError, match="mesh and mesh_axis together"):
+            SDESampleEngine(term(), jnp.ones(3),
+                            SDESampleConfig(mesh_axis="mc"))
+        # same both-or-neither rule one layer down
+        from repro.serving import TickExecutor
+        with pytest.raises(ValueError, match="mesh and mesh_axis together"):
+            TickExecutor(term(), jnp.ones(3), mesh_axis="mc")
+
+
+class TestCancellationAndRun:
+    def test_pending_tracks_queue(self):
+        eng = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=4))
+        r1 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6)
+        r2 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        assert eng.pending() == {r1: 6, r2: 2}
+        eng.tick()  # serves r1[0:4]
+        assert eng.pending() == {r1: 2, r2: 2}
+        eng.run()
+        assert eng.pending() == {}
+
+    def test_cancel_discards_partial_results(self):
+        eng = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        r1 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6)
+        r2 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2, seed=11)
+        eng.tick()                       # r1 partially served
+        assert eng.cancel(r1) is True
+        done = eng.run()
+        assert sorted(done) == [r2]      # r1 never reaches done
+        assert eng.cancel(r2) is False   # completed; result kept
+        with pytest.raises(KeyError, match="unknown request id"):
+            eng.cancel(999)
+
+    def test_idle_run_with_done_and_cancelled_does_not_spin(self):
+        """Regression: an idle engine — non-empty ``done`` plus queued-then-
+        cancelled requests — must return immediately instead of burning
+        ``max_ticks`` no-op ticks (or worse, raising)."""
+        eng = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        done = eng.run()
+        assert rid in done
+        cancelled = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=10 ** 6)
+        eng.cancel(cancelled)
+        n_before = eng.executor.n_dispatches
+        assert eng.run(max_ticks=3) == done          # no RuntimeError
+        assert eng.executor.n_dispatches == n_before  # and zero dispatches
+        assert eng.tick() is False
+
+    def test_max_ticks_counts_on_device_ticks(self):
+        """A multi-tick dispatch consumes its depth from the budget, so
+        ``max_ticks`` bounds device work, not just host round trips."""
+        eng = SDESampleEngine(term(), jnp.ones(3),
+                              SDESampleConfig(slots=1, ticks_per_dispatch=4))
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=8)
+        with pytest.raises(RuntimeError, match="max_ticks"):
+            eng.run(max_ticks=6)
+        assert eng.executor.n_ticks == 6  # 4-stack + 2 single ticks
+        # the capped remainder must not compile a (sig, 2) stack
+        assert {k[1] for k in eng._compiled} == {4, 1}
