@@ -281,6 +281,13 @@ def sdeint_ticks(
             "sdeint(..., batch_keys=keys)"
         )
     batched = _batched_fn(jax.vmap(one), leaf.shape[1], mesh, mesh_axis)
+    if leaf.shape[0] == 1:
+        # Serving-tail fast path: a depth-1 stack needs no on-device tick
+        # loop — run the single batch directly and restore the tick axis.
+        # Bitwise-identical: the lax.map body below is this same batched fn,
+        # and per-tick bits are key-determined (regression-tested).
+        out = batched(jax.tree_util.tree_map(lambda k: k[0], tick_keys))
+        return jax.tree_util.tree_map(lambda x: x[None], out)
     return jax.lax.map(batched, tick_keys)
 
 

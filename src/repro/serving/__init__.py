@@ -1,23 +1,31 @@
 """repro.serving — batched engines.
 
-  engine     — LM continuous-batching decode engine (fixed-slot serve_step)
-  scheduler  — host-side SDE serving core: FIFO queue, signature grouping,
-               slot plans, result scatter/retirement (device-free)
-  executor   — device-side SDE serving core: jit'd on-device multi-tick
-               dispatch, optional mesh-sharded slot axis
-  sde_engine — Monte-Carlo SDE sampling engine (façade over the two layers)
+  engine       — LM continuous-batching decode engine (fixed-slot serve_step)
+  scheduler    — host-side SDE serving core: priority/FIFO queue, signature
+                 grouping, slot plans, admission control, result
+                 scatter/retirement (device-free)
+  executor     — device-side SDE serving core: jit'd on-device multi-tick
+                 dispatch, optional mesh-sharded slot axis
+  sde_engine   — Monte-Carlo SDE sampling engine (façade over the two layers)
+  async_engine — asyncio continuous-batching serving plane: awaitable
+                 submit/result with backpressure, cross-signature
+                 interleaving, host-side double buffering, device-resident
+                 results
 """
+from .async_engine import AsyncSDESampleEngine
 from .engine import Engine, ServeConfig
 from .executor import TickExecutor
-from .scheduler import Scheduler, SlotPlan
+from .scheduler import QueueFull, Scheduler, SlotPlan
 from .sde_engine import SampleRequest, SampleResult, SDESampleConfig, SDESampleEngine
 
 __all__ = [
     "Engine",
     "ServeConfig",
+    "QueueFull",
     "Scheduler",
     "SlotPlan",
     "TickExecutor",
+    "AsyncSDESampleEngine",
     "SDESampleEngine",
     "SDESampleConfig",
     "SampleRequest",

@@ -1,0 +1,319 @@
+"""Async continuous-batching serving plane over the scheduler/executor core.
+
+:class:`AsyncSDESampleEngine` is the event-loop counterpart of the
+synchronous :class:`~repro.serving.sde_engine.SDESampleEngine` façade: the
+same host-side :class:`~repro.serving.scheduler.Scheduler` and device-side
+:class:`~repro.serving.executor.TickExecutor` underneath, but driven by a
+single asyncio serve task that keeps the device busy on a *continuous*
+mixed-signature request stream instead of drain-style ``run()`` calls.
+What the async plane adds:
+
+* **Awaitable API** — ``rid = await eng.submit(...)`` and
+  ``res = await eng.result(rid)``.  ``submit`` applies admission control
+  with *backpressure*: when the bounded queue (``max_queue_requests`` /
+  ``max_queue_paths`` in :class:`~repro.serving.sde_engine.SDESampleConfig`)
+  is full, the coroutine waits for space instead of raising the
+  :class:`~repro.serving.scheduler.QueueFull` a sync ``submit`` sees.
+* **Cross-signature interleaving** — instead of exhausting one signature
+  group before touching the next, the serve loop round-robins compiled
+  stacks across the signature groups of the best pending priority class
+  (``Scheduler.signatures``), so a long homogeneous burst cannot starve a
+  different-signature request of its first tick for the whole burst.
+* **Host-side double buffering** — jax dispatch is asynchronous, so right
+  after stack N is handed to the device the loop scatters N's results
+  *lazily* (device-resident slices), resolves any retired futures, and
+  immediately plans + key-packs stack N+1 on the host while the device
+  integrates.  At most two dispatches are in flight: before dispatching
+  N+2 the loop awaits N's buffers off-thread (``asyncio.to_thread``), which
+  also keeps the event loop responsive for submitters.
+* **Device-resident results** — delivery slices and stacks dispatch outputs
+  as jax arrays (``Scheduler.deliver(..., stack=jnp.stack)``); nothing is
+  copied to host numpy unless the caller asks
+  (``await eng.result(rid, numpy=True)``), so a large ``n_paths`` drain
+  whose consumer feeds another device computation never round-trips
+  through the host.
+
+Determinism is inherited, not re-proved: samples are pure functions of
+``(seed, path index)`` and every slot-plan invariant is shared with the
+sync engine, so the async plane returns results **bitwise-identical** to
+``SDESampleEngine.run()`` for the same request stream — across dispatch
+depths, priorities, and interleavings (regression-tested in
+``tests/test_serving.py``).
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scheduler import STAT_FIELDS, QueueFull, SampleResult
+from .sde_engine import SDESampleConfig, SDESampleEngine
+
+__all__ = ["AsyncSDESampleEngine"]
+
+
+def _result_leaves(res: SampleResult) -> List:
+    fields = [res.y_final, res.ys] + [getattr(res, n) for n in STAT_FIELDS]
+    return [x for x in jax.tree_util.tree_leaves(fields)]
+
+
+class AsyncSDESampleEngine:
+    """Serve a continuous stream of Monte-Carlo sampling requests.
+
+    Construction mirrors :class:`~repro.serving.sde_engine.SDESampleEngine`
+    (``term``/``y0`` define the process; :class:`SDESampleConfig` sizes the
+    plane — ``max_queue_paths`` is what turns ``submit`` backpressure on).
+    Use as an async context manager, or call :meth:`close` explicitly::
+
+        async with AsyncSDESampleEngine(term, y0, cfg) as eng:
+            rid = await eng.submit("ees25", t1=1.0, n_steps=32, n_paths=4096)
+            res = await eng.result(rid)        # device-resident jax arrays
+
+    The serve task starts lazily with the first ``submit`` and idles (no
+    polling, no device work) whenever the queue is empty.
+    """
+
+    def __init__(self, term, y0, cfg: SDESampleConfig = SDESampleConfig(),
+                 args=None, noise_shape=None):
+        self._eng = SDESampleEngine(term, y0, cfg, args=args,
+                                    noise_shape=noise_shape)
+        self.cfg = self._eng.cfg
+        self.scheduler = self._eng.scheduler
+        self.executor = self._eng.executor
+        self._task: Optional[asyncio.Task] = None
+        self._work = asyncio.Event()    # set: queue may hold plannable work
+        self._space = asyncio.Event()   # set: admission capacity may exist
+        self._waiters: Dict[int, asyncio.Future] = {}
+        self._last_sig: Optional[Tuple] = None
+        self._closed = False
+
+    # -- client surface ------------------------------------------------------
+
+    @property
+    def done(self) -> Dict[int, SampleResult]:
+        """Completed results (device-resident jax arrays) by request id."""
+        return self.scheduler.done
+
+    def pending(self) -> Dict[int, int]:
+        return self._eng.pending()
+
+    async def submit(self, solver: str, *, t1: float, n_steps: int,
+                     n_paths: int, t0: float = 0.0,
+                     save_every: Optional[int] = None,
+                     seed: Optional[int] = None,
+                     rtol: Optional[float] = None,
+                     atol: Optional[float] = None, save_at=None,
+                     priority: int = 0) -> int:
+        """Queue a sampling request; returns its request id.
+
+        Same options and validation as the sync engine's ``submit`` (plus
+        the same ``priority`` semantics), but admission control applies
+        *backpressure*: a full bounded queue makes this coroutine wait for
+        space — it only raises for malformed requests, never
+        :class:`QueueFull`."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        self._ensure_serving()
+        while True:
+            try:
+                # Validation errors (bad spec, n_paths=0, save_at dtype, ...)
+                # propagate immediately — only QueueFull waits.
+                rid = self._eng.submit(
+                    solver, t1=t1, n_steps=n_steps, n_paths=n_paths, t0=t0,
+                    save_every=save_every, seed=seed, rtol=rtol, atol=atol,
+                    save_at=save_at, priority=priority,
+                )
+                break
+            except QueueFull:
+                # Single-threaded event loop: capacity can only appear via
+                # the serve task (retirement) or cancel(), both of which set
+                # the event after this clear — no lost wakeup.
+                self._space.clear()
+                await self._space.wait()
+        self._work.set()
+        return rid
+
+    async def result(self, request_id: int, *, numpy: bool = False
+                     ) -> SampleResult:
+        """Await a request's :class:`SampleResult`.
+
+        Returns device-resident jax arrays once every path is integrated
+        (the await covers device completion, not just retirement);
+        ``numpy=True`` additionally materialises host copies off-thread.
+        Raises ``asyncio.CancelledError`` if the request was (or gets)
+        cancelled, ``KeyError`` for ids this engine never issued."""
+        res = self.done.get(request_id)
+        if res is None:
+            if request_id in self.scheduler._cancelled_ids:
+                raise asyncio.CancelledError(
+                    f"request {request_id} was cancelled")
+            if not any(p.request.request_id == request_id
+                       for p in self.scheduler.queue):
+                raise KeyError(f"unknown request id {request_id}")
+            self._ensure_serving()
+            fut = self._waiters.get(request_id)
+            if fut is None:
+                fut = asyncio.get_running_loop().create_future()
+                self._waiters[request_id] = fut
+            res = await asyncio.shield(fut)
+        # Block on the device buffers off-thread so concurrent submitters
+        # and the serve loop keep running while XLA finishes.
+        await asyncio.to_thread(jax.block_until_ready, _result_leaves(res))
+        if numpy:
+            res = await asyncio.to_thread(self._to_numpy, res)
+        return res
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a queued request (see the sync engine's ``cancel``); any
+        coroutine awaiting its result receives ``CancelledError``, and one
+        blocked ``submit`` may be admitted into the freed capacity."""
+        cancelled = self._eng.cancel(request_id)
+        if cancelled:
+            fut = self._waiters.pop(request_id, None)
+            if fut is not None and not fut.done():
+                fut.cancel(f"request {request_id} was cancelled")
+            self._space.set()
+        return cancelled
+
+    async def drain(self) -> Dict[int, SampleResult]:
+        """Await every currently queued request; returns ``done``."""
+        rids = list(self.pending())
+        for rid in rids:
+            try:
+                await self.result(rid)
+            except asyncio.CancelledError:
+                pass  # cancelled mid-drain by another client; nothing owed
+        return self.done
+
+    async def close(self) -> None:
+        """Stop the serve task.  Queued-but-unserved requests are abandoned:
+        their ``result`` awaiters receive ``CancelledError`` (``drain``
+        first for a graceful shutdown); completed results stay in ``done``."""
+        self._closed = True
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        for fut in self._waiters.values():
+            if not fut.done():
+                fut.cancel("engine closed")
+        self._waiters.clear()
+
+    async def __aenter__(self):
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.close()
+
+    # -- serve loop ----------------------------------------------------------
+
+    def _ensure_serving(self) -> None:
+        if self._task is not None and self._task.done():
+            # Surface a crashed serve loop to the caller instead of hanging.
+            exc = self._task.exception()
+            self._task = None
+            if exc is not None:
+                raise exc
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(
+                self._serve(), name="sde-serve-loop")
+
+    def _next_plan(self):
+        """Round-robin compiled stacks across the signature groups of the
+        best pending priority class — the continuous-batching interleave
+        (a strict head-of-queue drain would starve other signatures for a
+        whole burst)."""
+        sigs = self.scheduler.signatures()
+        if not sigs:
+            return None
+        best = max(prio for _, prio in sigs)
+        top = [sig for sig, prio in sigs if prio == best]
+        if self._last_sig in top and len(top) > 1:
+            sig = top[(top.index(self._last_sig) + 1) % len(top)]
+        else:
+            sig = top[0]
+        self._last_sig = sig
+        return self.scheduler.plan(self.cfg.slots,
+                                   self.cfg.ticks_per_dispatch,
+                                   signature=sig)
+
+    def _deliver_device(self, plan, result) -> List[int]:
+        """Scatter a dispatch lazily: slot slices and per-request stacks are
+        jax operations on device buffers, so delivery never blocks on (or
+        copies to) the host."""
+        outputs = {"y_final": result.y_final, "ys": result.ys}
+        for name in STAT_FIELDS:
+            outputs[name] = getattr(result, name, None)
+        retired = self.scheduler.deliver(plan, outputs, stack=jnp.stack)
+        for rid in retired:
+            self._eng._key_cache.pop(rid, None)
+            fut = self._waiters.pop(rid, None)
+            if fut is not None and not fut.done():
+                fut.set_result(self.done[rid])
+        if retired:
+            self._space.set()
+        return retired
+
+    async def _serve(self) -> None:
+        try:
+            await self._serve_loop()
+        except Exception as exc:  # fail awaiters loudly, never hang them
+            for fut in self._waiters.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            self._waiters.clear()
+            raise
+
+    async def _serve_loop(self) -> None:
+        inflight: Optional[List] = None  # previous dispatch's device buffers
+        while True:
+            plan = self._next_plan()
+            if plan is None:
+                if inflight is not None:
+                    await asyncio.to_thread(jax.block_until_ready, inflight)
+                    inflight = None
+                    continue  # a submit may have landed during the await
+                self._work.clear()
+                if self.scheduler.signatures():
+                    continue  # raced with clear(): serve it, don't sleep
+                await self._work.wait()
+                continue
+            keys = self._eng._plan_keys(plan)
+            offset = 0
+            subplans = self._eng._split_subplans(plan)
+            for sp in subplans:
+                sp_keys = keys if len(subplans) == 1 else \
+                    keys[offset:offset + sp.n_ticks]
+                offset += sp.n_ticks
+                if self.executor.has_compiled(sp.signature, sp.n_ticks):
+                    out = self.executor.dispatch(sp.signature, sp_keys)
+                else:
+                    # First dispatch of a (signature, depth) pays XLA
+                    # compile; run it off-thread so submit()/result() stay
+                    # live meanwhile.
+                    out = await asyncio.to_thread(
+                        self.executor.dispatch, sp.signature, sp_keys)
+                self._deliver_device(sp, out)
+                if inflight is not None:
+                    # Double-buffer depth 2: the *previous* stack must land
+                    # before a third enters flight.  Until it does, the plan
+                    # and key-pack work above already overlapped the device.
+                    await asyncio.to_thread(jax.block_until_ready, inflight)
+                inflight = jax.tree_util.tree_leaves((out.y_final, out.ys))
+            # Let submitters/cancellers interleave between stacks even when
+            # everything above completed synchronously.
+            await asyncio.sleep(0)
+
+    @staticmethod
+    def _to_numpy(res: SampleResult) -> SampleResult:
+        conv = lambda x: None if x is None else np.asarray(x)  # noqa: E731
+        return SampleResult(
+            y_final=conv(res.y_final), ys=conv(res.ys),
+            **{n: conv(getattr(res, n)) for n in STAT_FIELDS},
+        )

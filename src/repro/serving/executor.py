@@ -110,6 +110,13 @@ class TickExecutor:
             self._compiled[cache_key] = jax.jit(stack, donate_argnums=donate)
         return self._compiled[cache_key]
 
+    def has_compiled(self, sig: Tuple, n_ticks: int) -> bool:
+        """Whether a ``dispatch(sig, <n_ticks-deep stack>)`` will re-enter a
+        cached executable.  False means the call pays tracing + XLA compile —
+        the async engine runs such first dispatches in a worker thread so
+        the event loop (other submitters/awaiters) stays responsive."""
+        return (sig, n_ticks) in self._compiled
+
     def dispatch(self, sig: Tuple, tick_keys):
         """Run a ``(n_ticks, slots, ...)`` key stack; one host round trip.
 

@@ -28,12 +28,32 @@ device — and is therefore unit-testable without one:
   ``done`` in queue order;
 * cancellation (lazy — a cancelled entry is skipped by the planner and
   pruned from the queue on the next plan, so ``cancel`` is O(1)) and
-  :meth:`Scheduler.pending` introspection for polling clients.
+  :meth:`Scheduler.pending` introspection for polling clients;
+* **priority classes**: every request carries a ``priority`` (higher is
+  served sooner); planning walks the queue in *service order* — a stable
+  sort by descending priority, so equal priorities keep strict FIFO and the
+  default ``priority=0`` workload behaves exactly as before.  Priority only
+  reorders *when* a request is served, never *what* it receives (samples are
+  a pure function of ``(seed, path index)``);
+* **admission control**: optional ``max_requests`` / ``max_paths`` bounds
+  turn :meth:`Scheduler.enqueue` into a bounded queue that raises
+  :class:`QueueFull` instead of growing without limit — the hook the async
+  engine's backpressure (``await submit``) and a sync caller's load shedding
+  both build on;
+* **plan-ahead reservations** (:meth:`Scheduler.plan` with
+  ``reserve=True``): a reserved plan marks its paths in flight so the *next*
+  plan starts beyond them — this is what lets an engine build and stage
+  stack N+1 while the device still runs stack N (host-side double
+  buffering).  Reserved plans must be delivered in the order they were
+  planned; an undispatched reserved plan can be returned via
+  :meth:`Scheduler.release` (LIFO — newest first), e.g. when every request
+  in a staged stack was cancelled before its dispatch.
 
 The scheduler never touches a PRNG key: a plan names ``(request, path
 index)`` pairs, and sampling reproducibility comes from the engine mapping
 pair ``(r, i)`` to ``fold_in(PRNGKey(seed_r), i)`` — independent of slot
-assignment, tick boundaries, dispatch grouping, and device placement.
+assignment, tick boundaries, dispatch grouping, device placement, priority
+ordering, and double buffering.
 """
 from __future__ import annotations
 
@@ -46,6 +66,7 @@ import numpy as np
 from repro.core import canonical_spec, parse_solver_spec, solver_kind
 
 __all__ = [
+    "QueueFull",
     "SampleRequest",
     "SampleResult",
     "PendingRequest",
@@ -53,6 +74,13 @@ __all__ = [
     "Scheduler",
     "make_request",
 ]
+
+
+class QueueFull(RuntimeError):
+    """Admission control refused a submit: the bounded queue is at capacity.
+
+    Sync callers should shed load (or retry later); the async engine's
+    ``await submit`` catches this and waits for space instead."""
 
 # Per-path adaptive statistics riding along with every delivery.
 STAT_FIELDS = ("t_final", "n_accepted", "n_rejected")
@@ -73,6 +101,10 @@ class SampleRequest:
     rtol: Optional[float] = None
     atol: Optional[float] = None
     save_at: Optional[Tuple[float, ...]] = None
+    # Service-order class: higher priorities are planned sooner; equal
+    # priorities keep strict FIFO.  Never part of the signature — priority
+    # says when a request runs, not what executable runs it.
+    priority: int = 0
 
     @property
     def signature(self) -> Tuple:
@@ -109,6 +141,10 @@ class SampleResult:
 class PendingRequest:
     request: SampleRequest
     delivered: int = 0
+    # Paths named by a not-yet-delivered *reserved* plan (see Scheduler.plan
+    # with reserve=True): planning starts beyond delivered + reserved, so a
+    # staged stack and the live one never overlap.
+    reserved: int = 0
     cancelled: bool = False
     y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
     ys: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -127,11 +163,13 @@ class SlotPlan:
     paths each.  ``ticks[t][s]`` names the (pending, path-index) pair that
     owns slot ``s`` of tick ``t``; trailing slots of a tick may be unassigned
     (the engine pads them with dummy keys and the planner never references
-    their outputs)."""
+    their outputs).  ``reserved`` plans hold their paths in flight until
+    delivered (or released) — see :meth:`Scheduler.plan`."""
 
     signature: Tuple
     slots: int
     ticks: List[List[Tuple[PendingRequest, int]]]
+    reserved: bool = False
 
     @property
     def n_ticks(self) -> int:
@@ -141,12 +179,18 @@ class SlotPlan:
     def n_paths(self) -> int:
         return sum(len(t) for t in self.ticks)
 
+    @property
+    def live(self) -> bool:
+        """False once every owning request was cancelled — a dead stack an
+        engine should skip (releasing it) instead of dispatching no-ops."""
+        return any(not p.cancelled for tick in self.ticks for p, _ in tick)
+
 
 def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
                  n_steps: int, n_paths: int, t0: float = 0.0,
                  save_every: Optional[int] = None, seed: Optional[int] = None,
                  rtol: Optional[float] = None, atol: Optional[float] = None,
-                 save_at=None) -> SampleRequest:
+                 save_at=None, priority: int = 0) -> SampleRequest:
     """Validate request options and build a :class:`SampleRequest`.
 
     Raises on anything malformed — this runs at submit time, not at the
@@ -182,7 +226,16 @@ def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
             "save_at=<sequence of times> instead"
         )
     if save_at is not None:
-        save_at = tuple(float(t) for t in save_at)
+        try:
+            save_at = tuple(float(t) for t in save_at)
+        except (TypeError, ValueError):
+            # A 2-D array, complex dtype, strings, ... must die HERE with the
+            # argument named, not as a dtype error inside jit at the queue
+            # head.
+            raise ValueError(
+                "save_at must be a flat sequence of real (float-convertible) "
+                f"times, got {save_at!r}"
+            ) from None
         if not save_at:
             raise ValueError("save_at must be a non-empty sequence of times")
         if not all(float(t0) <= t <= float(t1) for t in save_at):
@@ -195,6 +248,8 @@ def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
             raise ValueError(
                 f"save_every={save_every} does not divide n_steps={n_steps}"
             )
+    if int(priority) != priority:
+        raise ValueError(f"priority must be an int, got {priority!r}")
     return SampleRequest(
         request_id=request_id, solver=solver, t0=float(t0), t1=float(t1),
         n_steps=n_steps, n_paths=int(n_paths), save_every=save_every,
@@ -202,15 +257,22 @@ def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
         rtol=None if rtol is None else float(rtol),
         atol=None if atol is None else float(atol),
         save_at=save_at,
+        priority=int(priority),
     )
 
 
 class Scheduler:
-    """FIFO scheduler over :class:`PendingRequest` entries (host-side only)."""
+    """Priority-FIFO scheduler over :class:`PendingRequest` entries (host-side
+    only).  ``max_requests`` / ``max_paths`` bound the live queue (admission
+    control): an :meth:`enqueue` that would exceed either raises
+    :class:`QueueFull` without enqueueing."""
 
-    def __init__(self):
+    def __init__(self, max_requests: Optional[int] = None,
+                 max_paths: Optional[int] = None):
         self.queue: Deque[PendingRequest] = deque()
         self.done: Dict[int, SampleResult] = {}
+        self.max_requests = max_requests
+        self.max_paths = max_paths
         self._next_id = 0
         self._cancelled_ids: set = set()
 
@@ -228,6 +290,22 @@ class Scheduler:
         return rid
 
     def enqueue(self, request: SampleRequest) -> int:
+        live = [p for p in self.queue if not p.cancelled]
+        if (self.max_requests is not None
+                and len(live) + 1 > self.max_requests):
+            raise QueueFull(
+                f"queue holds {len(live)} live request(s); admission limit is "
+                f"max_requests={self.max_requests} — drain, cancel, or raise "
+                "the limit (the async engine awaits space instead)"
+            )
+        if self.max_paths is not None:
+            owed = sum(p.remaining for p in live)
+            if owed + request.n_paths > self.max_paths:
+                raise QueueFull(
+                    f"queue owes {owed} path(s) and this request adds "
+                    f"{request.n_paths}; admission limit is max_paths="
+                    f"{self.max_paths}"
+                )
         self._next_id = max(self._next_id, request.request_id + 1)
         self.queue.append(PendingRequest(request))
         return request.request_id
@@ -262,17 +340,56 @@ class Scheduler:
 
     # -- planning -----------------------------------------------------------
 
-    def plan(self, slots: int, max_ticks: int = 1) -> Optional[SlotPlan]:
-        """Build the next dispatch: up to ``max_ticks`` ticks of the head
-        signature, or None when no work is queued.
+    def _service_order(self) -> List[PendingRequest]:
+        """Live queue entries in service order: a *stable* sort by descending
+        priority, so equal priorities (incl. the default 0) keep strict FIFO
+        and the all-default workload plans exactly as the plain FIFO did."""
+        return sorted((p for p in self.queue if not p.cancelled),
+                      key=lambda p: -p.request.priority)
+
+    @staticmethod
+    def _unplanned(p: PendingRequest) -> int:
+        return p.request.n_paths - p.delivered - p.reserved
+
+    def signatures(self) -> List[Tuple[Tuple, int]]:
+        """Unique signatures with plannable (live, unreserved) work, in
+        service order, each with the best priority among its requests — what
+        an interleaving serve loop round-robins over."""
+        out: List[Tuple[Tuple, int]] = []
+        seen = set()
+        for p in self._service_order():
+            if self._unplanned(p) <= 0:
+                continue
+            sig = p.request.signature
+            if sig not in seen:
+                seen.add(sig)
+                out.append((sig, p.request.priority))
+        return out
+
+    def plan(self, slots: int, max_ticks: int = 1, *,
+             signature: Optional[Tuple] = None,
+             reserve: bool = False) -> Optional[SlotPlan]:
+        """Build the next dispatch: up to ``max_ticks`` ticks of one
+        signature group, or None when no plannable work is queued.
 
         Prunes cancelled entries first (their partial results are dropped),
-        then fills tick after tick over the head-signature group exactly as
+        then fills tick after tick over the chosen signature group exactly as
         successive single-tick plans over that group would — multi-tick
         dispatch never changes *which* path runs in which slot.  It can
-        change cross-signature service order: the stack keeps draining the
-        head signature, so an other-signature request queued in between
-        waits for the next dispatch (see the module docstring).
+        change cross-signature service order: the stack keeps draining one
+        signature, so an other-signature request queued in between waits for
+        the next dispatch (see the module docstring).
+
+        ``signature`` pins the group (an interleaving serve loop round-robins
+        :meth:`signatures`); by default the group of the first plannable
+        request in service order — highest priority, then FIFO — is drained.
+
+        ``reserve=True`` marks the planned paths in flight, so a later
+        ``plan`` call (before this one is delivered) starts beyond them —
+        the double-buffering hook.  Reserved plans must be **delivered in
+        planning order** (path scatter is ordered per request); an
+        undispatched reserved plan is returned via :meth:`release`, newest
+        first.
         """
         if any(p.cancelled for p in self.queue):
             live = [p for p in self.queue if not p.cancelled]
@@ -280,20 +397,26 @@ class Scheduler:
             # façade exposes it), so rebinding would strand held references
             self.queue.clear()
             self.queue.extend(live)
-        if not self.queue:
+        order = self._service_order()
+        sig = signature
+        if sig is None:
+            for p in order:
+                if self._unplanned(p) > 0:
+                    sig = p.request.signature
+                    break
+        if sig is None:
             return None
-        sig = self.queue[0].request.signature
         taken: Dict[PendingRequest, int] = {}
         ticks: List[List[Tuple[PendingRequest, int]]] = []
         for _ in range(max_ticks):
             tick: List[Tuple[PendingRequest, int]] = []
             budget = slots
-            for p in self.queue:
+            for p in order:
                 if budget == 0:
                     break
                 if p.request.signature != sig:
                     continue
-                start = p.delivered + taken.get(p, 0)
+                start = p.delivered + p.reserved + taken.get(p, 0)
                 take = min(budget, p.request.n_paths - start)
                 tick.extend((p, start + j) for j in range(take))
                 if take:
@@ -304,18 +427,44 @@ class Scheduler:
             ticks.append(tick)
         if not ticks:
             return None
-        return SlotPlan(signature=sig, slots=slots, ticks=ticks)
+        if reserve:
+            for p, n in taken.items():
+                p.reserved += n
+        return SlotPlan(signature=sig, slots=slots, ticks=ticks,
+                        reserved=reserve)
+
+    def release(self, plan: SlotPlan) -> None:
+        """Return an undispatched *reserved* plan's paths to the queue.
+
+        Only valid LIFO — release the most recently planned outstanding
+        reservation first — because planning cursors grow past every live
+        reservation: releasing an older plan while a newer one still holds
+        later paths would let the next plan re-issue the newer plan's work.
+        The engine only ever stages (and therefore releases) the newest plan.
+        """
+        if not plan.reserved:
+            raise ValueError("release() takes a plan built with reserve=True")
+        counts: Dict[PendingRequest, int] = {}
+        for tick in plan.ticks:
+            for p, _ in tick:
+                counts[p] = counts.get(p, 0) + 1
+        for p, n in counts.items():
+            p.reserved -= n  # cancelled husks unwind too; harmless
 
     # -- delivery -----------------------------------------------------------
 
     def deliver(self, plan: SlotPlan,
-                outputs: Dict[str, Optional[np.ndarray]]) -> List[int]:
+                outputs: Dict[str, Optional[np.ndarray]],
+                *, stack=np.stack) -> List[int]:
         """Scatter dispatch outputs back to their requests and retire.
 
         ``outputs`` maps field name (``y_final`` / ``ys`` / the adaptive
-        stats) to a stacked host array with leading ``(n_ticks, slots)``
-        axes, or None for fields this signature does not produce.  Returns
-        the ids retired into ``done``, in queue order.
+        stats) to a stacked array with leading ``(n_ticks, slots)`` axes, or
+        None for fields this signature does not produce.  Returns the ids
+        retired into ``done``, in service order.  ``stack`` builds each
+        retired result's per-request arrays — ``np.stack`` (default) lands
+        results on the host; the async engine passes ``jnp.stack`` so
+        results stay device-resident until the caller materialises them.
         """
         for t, tick in enumerate(plan.ticks):
             for s, (p, i) in enumerate(tick):
@@ -332,15 +481,17 @@ class Scheduler:
                     if outputs.get(name) is not None:
                         getattr(p, name).append(outputs[name][t, s])
                 p.delivered += 1
+                if plan.reserved:
+                    p.reserved -= 1
         retired = []
         for p in dict.fromkeys(p for tick in plan.ticks for p, _ in tick):
             if p.delivered == p.request.n_paths and not p.cancelled:
                 self.queue.remove(p)
                 rid = p.request.request_id
                 self.done[rid] = SampleResult(
-                    y_final=np.stack(p.y_final),
-                    ys=np.stack(p.ys) if p.ys else None,
-                    **{name: (np.stack(getattr(p, name))
+                    y_final=stack(p.y_final),
+                    ys=stack(p.ys) if p.ys else None,
+                    **{name: (stack(getattr(p, name))
                               if getattr(p, name) else None)
                        for name in STAT_FIELDS},
                 )

@@ -34,6 +34,18 @@ Three properties make the slicing and the dispatch grouping safe:
   stack depth — steady-state serving never recompiles, and each cached
   entry donates its key buffer on backends that support donation.
 
+Since PR 6 the engine **double-buffers** by default: jax dispatch is
+asynchronous, so right after a stack is handed to the device the engine
+plans and key-packs the *next* stack (``Scheduler.plan(reserve=True)``)
+while the device is still integrating — reservations keep the cursor
+arithmetic identical to plan-after-deliver, so the plan sequence and all
+samples are bitwise-unchanged (``double_buffer=False`` restores the strict
+sequential loop).  ``submit`` takes a ``priority`` class and is bounded by
+``max_queue_requests`` / ``max_queue_paths`` admission control
+(:class:`QueueFull`); :class:`repro.serving.AsyncSDESampleEngine` builds the
+fully asynchronous, cross-signature-interleaving serving plane on the same
+two layers (see ``docs/serving.md``).
+
 Adaptive requests (an ``"ees25:adaptive"``-style spec) run the single
 forward-only controller pass (``bounded=False`` — sampling needs no second
 sweep; bitwise-identical to realize-then-solve) on a Virtual Brownian Tree —
@@ -57,6 +69,7 @@ import numpy as np
 from .executor import TickExecutor
 from .scheduler import (
     STAT_FIELDS,
+    QueueFull,
     SampleRequest,
     SampleResult,
     Scheduler,
@@ -64,7 +77,8 @@ from .scheduler import (
     make_request,
 )
 
-__all__ = ["SDESampleConfig", "SampleRequest", "SampleResult", "SDESampleEngine"]
+__all__ = ["SDESampleConfig", "SampleRequest", "SampleResult",
+           "SDESampleEngine", "QueueFull"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +88,16 @@ class SDESampleConfig:
     ticks_per_dispatch: int = 1  # ticks per host round trip (on-device loop)
     mesh: Any = None             # device mesh to shard the slot axis over
     mesh_axis: Optional[str] = None  # mesh axis name (slots % axis size == 0)
+    # Host-side double buffering: build + key-pack slot plan N+1 while the
+    # device still runs stack N (jax dispatch is asynchronous, so the host
+    # work overlaps device compute).  Plan sequence and samples are
+    # bitwise-unchanged; False restores strict plan-after-deliver.
+    double_buffer: bool = True
+    # Admission control: bound the live queue (requests / owed paths); a
+    # submit over either limit raises QueueFull instead of growing the
+    # queue without bound.  None = unbounded (the PR-5 behaviour).
+    max_queue_requests: Optional[int] = None
+    max_queue_paths: Optional[int] = None
 
 
 class SDESampleEngine:
@@ -113,13 +137,17 @@ class SDESampleEngine:
         self.cfg = cfg
         self.args = args
         self.noise_shape = noise_shape
-        self.scheduler = Scheduler()
+        self.scheduler = Scheduler(max_requests=cfg.max_queue_requests,
+                                   max_paths=cfg.max_queue_paths)
         self.executor = TickExecutor(
             term, y0, args=args, noise_shape=noise_shape, dtype=cfg.dtype,
             mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
         )
         self._key_cache: Dict[int, np.ndarray] = {}
         self._pad_key = np.asarray(jax.random.PRNGKey(0))
+        # Double buffering: the (reserved plan, packed key stack) staged
+        # while the device ran the previous dispatch.
+        self._staged: Optional[Tuple[SlotPlan, jax.Array]] = None
 
     # The queue, result store, and compiled-executable cache live on the two
     # layers; these views keep the engine's original surface (and tests).
@@ -138,7 +166,8 @@ class SDESampleEngine:
     def submit(self, solver: str, *, t1: float, n_steps: int, n_paths: int,
                t0: float = 0.0, save_every: Optional[int] = None,
                seed: Optional[int] = None, rtol: Optional[float] = None,
-               atol: Optional[float] = None, save_at=None) -> int:
+               atol: Optional[float] = None, save_at=None,
+               priority: int = 0) -> int:
         """Queue a sampling request; returns its request id.
 
         Parameters
@@ -167,6 +196,18 @@ class SDESampleEngine:
         save_at:
             Adaptive only: sequence of output times in ``[t0, t1]`` — dense
             output interpolated between accepted steps.
+        priority:
+            Service class (default 0): higher priorities are planned sooner;
+            equal priorities keep strict FIFO.  Priority reorders *when* a
+            request is served, never its samples (pure function of
+            ``(seed, path)``).
+
+        Raises
+        ------
+        ValueError / KeyError on any malformed option — always here at
+        submit time, never inside jit at the queue head.
+        :class:`~repro.serving.scheduler.QueueFull` when admission control
+        (``max_queue_requests`` / ``max_queue_paths``) rejects the request.
 
         Example
         -------
@@ -184,7 +225,7 @@ class SDESampleEngine:
             self.scheduler.next_request_id, solver, term_kind=term_kind,
             t0=t0, t1=t1, n_steps=n_steps, n_paths=n_paths,
             save_every=save_every, seed=seed, rtol=rtol, atol=atol,
-            save_at=save_at,
+            save_at=save_at, priority=priority,
         )
         return self.scheduler.enqueue(req)
 
@@ -235,30 +276,78 @@ class SDESampleEngine:
                 s = e
         return jnp.asarray(buf)
 
-    def _dispatch_next(self, tick_limit: int) -> int:
-        """Plan, dispatch, and deliver one tick stack; returns the number of
-        ticks served (0 when idle — nothing live in the queue).
+    def _split_subplans(self, plan: SlotPlan) -> list:
+        """Split a plan into dispatch units that only ever touch the full
+        ``ticks_per_dispatch`` stack executable or the single-tick one.
 
-        A plan shallower than the requested depth (the queue tail) is served
-        tick-by-tick through the single-tick executable rather than as a
-        fresh variable-depth stack — otherwise every distinct tail depth
-        would trigger a full XLA recompile of the solve, and a drain would
-        touch up to ``ticks_per_dispatch`` executables per signature instead
-        of two (full stack + single tick)."""
+        A plan shallower than the configured depth (the queue tail, or a
+        ``max_ticks``-capped budget) is served tick-by-tick through the
+        single-tick executable rather than as a fresh variable-depth stack —
+        otherwise every distinct tail depth would trigger a full XLA
+        recompile of the solve, and a drain would touch up to
+        ``ticks_per_dispatch`` executables per signature instead of two."""
+        if plan.n_ticks in (1, self.cfg.ticks_per_dispatch):
+            return [plan]
+        return [SlotPlan(plan.signature, plan.slots, [tick],
+                         reserved=plan.reserved)
+                for tick in plan.ticks]
+
+    def _take_plan(self, depth: int):
+        """The next (plan, key stack) to dispatch: the staged pair when it is
+        still live and fits the tick budget, else a fresh reserved plan.
+
+        A staged stack whose every request was cancelled since staging is
+        *released*, never dispatched — a fully-cancelled stack must not burn
+        a no-op device dispatch (regression-tested: ``n_dispatches`` stays
+        flat when a cancel empties the queue mid-run)."""
+        while self._staged is not None:
+            plan, keys = self._staged
+            self._staged = None
+            if not plan.live:
+                self.scheduler.release(plan)   # skip, don't dispatch no-ops
+                continue
+            if plan.n_ticks > depth:
+                # The budget shrank since staging (run(max_ticks=...) tail):
+                # unwind the reservation — staged is always the newest plan,
+                # so LIFO release is safe — and replan at the allowed depth.
+                self.scheduler.release(plan)
+                continue
+            return plan, keys
+        plan = self.scheduler.plan(self.cfg.slots, depth, reserve=True)
+        if plan is None:
+            return None, None
+        return plan, self._plan_keys(plan)
+
+    def _stage_next(self) -> None:
+        """Plan and key-pack the next dispatch while the device is still
+        running the current one (host-side double buffering): reservations
+        make the cursor arithmetic identical to planning after delivery, so
+        the plan sequence — and therefore every sample — is unchanged."""
+        if self._staged is None:
+            plan = self.scheduler.plan(self.cfg.slots,
+                                       self.cfg.ticks_per_dispatch,
+                                       reserve=True)
+            if plan is not None:
+                self._staged = (plan, self._plan_keys(plan))
+
+    def _dispatch_next(self, tick_limit: int) -> int:
+        """Plan (or unstage), dispatch, and deliver one tick stack; returns
+        the number of ticks served (0 when idle — nothing live queued)."""
         depth = min(tick_limit, self.cfg.ticks_per_dispatch)
-        plan = self.scheduler.plan(self.cfg.slots, depth)
+        plan, keys = self._take_plan(depth)
         if plan is None:
             return 0
-        # Only the configured full depth (and single ticks) may compile:
-        # a budget-capped or tail plan of any other depth is served
-        # tick-by-tick through the (signature, 1) executable.
-        if plan.n_ticks in (1, self.cfg.ticks_per_dispatch):
-            subplans = [plan]
-        else:
-            subplans = [SlotPlan(plan.signature, plan.slots, [tick])
-                        for tick in plan.ticks]
-        for sp in subplans:
-            result = self.executor.dispatch(sp.signature, self._plan_keys(sp))
+        subplans = self._split_subplans(plan)
+        offset = 0
+        for i, sp in enumerate(subplans):
+            sp_keys = keys if len(subplans) == 1 else \
+                keys[offset:offset + sp.n_ticks]
+            offset += sp.n_ticks
+            result = self.executor.dispatch(sp.signature, sp_keys)
+            if i == len(subplans) - 1 and self.cfg.double_buffer:
+                # Device is (asynchronously) chewing on the stack we just
+                # dispatched; overlap the next plan's host work with it.
+                self._stage_next()
             outputs = {"y_final": np.asarray(result.y_final),
                        "ys": (None if result.ys is None
                               else np.asarray(result.ys))}

@@ -8,7 +8,7 @@ milliseconds and proves the queueing logic independently of jax.
 import numpy as np
 import pytest
 
-from repro.serving.scheduler import Scheduler, make_request
+from repro.serving.scheduler import QueueFull, Scheduler, make_request
 
 pytest.importorskip("jax")  # registry parsing imports jax (no device init)
 
@@ -241,3 +241,126 @@ class TestMakeRequest:
         r = make_request(7, "ees25", term_kind="euclidean", t1=1.0,
                          n_steps=8, n_paths=1, seed=42)
         assert r.seed == 42
+
+
+class TestPriority:
+    def test_higher_priority_plans_first_equal_priority_keeps_fifo(self):
+        s = Scheduler()
+        a = submit(s, n_paths=2)                 # default priority 0
+        b = submit(s, n_paths=2, priority=5)
+        c = submit(s, n_paths=2, priority=5)     # same class as b: FIFO
+        plan = s.plan(slots=4, max_ticks=2)
+        assert plan_layout(plan) == [
+            [(b, 0), (b, 1), (c, 0), (c, 1)],
+            [(a, 0), (a, 1)],
+        ]
+
+    def test_priority_not_part_of_signature(self):
+        """Priority says when a request runs, not what executable runs it:
+        different classes still share one compiled batch."""
+        s = Scheduler()
+        lo = submit(s, n_paths=1)
+        hi = submit(s, n_paths=1, priority=9)
+        assert (s.queue[0].request.signature == s.queue[1].request.signature)
+        plan = s.plan(slots=2, max_ticks=1)
+        assert plan_layout(plan) == [[(hi, 0), (lo, 0)]]
+
+    def test_signatures_lists_plannable_groups_in_service_order(self):
+        s = Scheduler()
+        a = submit(s, "ees25", n_paths=2)
+        submit(s, "reversible_heun", n_paths=2, priority=3)
+        sigs = s.signatures()
+        assert [sig[0] for sig, _ in sigs] == ["reversible-heun", "ees25"]
+        assert [prio for _, prio in sigs] == [3, 0]
+        s.cancel(a)
+        assert [prio for _, prio in s.signatures()] == [3]
+
+    def test_plan_pinned_to_signature(self):
+        s = Scheduler()
+        submit(s, "ees25", n_paths=2)
+        b = submit(s, "reversible_heun", n_paths=2)
+        plan = s.plan(slots=4, max_ticks=1,
+                      signature=s.queue[1].request.signature)
+        assert plan_layout(plan) == [[(b, 0), (b, 1)]]
+
+
+class TestReservations:
+    def test_reserved_plan_advances_the_planning_cursor(self):
+        """plan(reserve=True) then plan() must hand out disjoint paths —
+        the double-buffering invariant (staged and live stacks never
+        overlap)."""
+        s = Scheduler()
+        rid = submit(s, n_paths=6)
+        first = s.plan(slots=2, max_ticks=1, reserve=True)
+        second = s.plan(slots=2, max_ticks=1, reserve=True)
+        assert plan_layout(first) == [[(rid, 0), (rid, 1)]]
+        assert plan_layout(second) == [[(rid, 2), (rid, 3)]]
+        # pending() reports owed paths by *delivered* count — reservations
+        # are in flight, not done
+        assert s.pending() == {rid: 6}
+        s.deliver(first, fake_outputs(first))
+        assert s.pending() == {rid: 4}
+        s.deliver(second, fake_outputs(second))
+        third = s.plan(slots=2, max_ticks=1)
+        assert plan_layout(third) == [[(rid, 4), (rid, 5)]]
+
+    def test_release_returns_paths_to_the_queue(self):
+        s = Scheduler()
+        rid = submit(s, n_paths=4)
+        staged = s.plan(slots=2, max_ticks=1, reserve=True)
+        s.release(staged)
+        replan = s.plan(slots=4, max_ticks=1)
+        assert plan_layout(replan) == [[(rid, i) for i in range(4)]]
+
+    def test_release_rejects_unreserved_plans(self):
+        s = Scheduler()
+        submit(s, n_paths=2)
+        plan = s.plan(slots=2, max_ticks=1)
+        with pytest.raises(ValueError, match="reserve=True"):
+            s.release(plan)
+
+    def test_dead_staged_plan_detected_and_released(self):
+        """Cancel every owner of a staged stack: the plan goes non-live (the
+        engine skips dispatch), release unwinds the husk reservations, and
+        the queue drains clean."""
+        s = Scheduler()
+        a = submit(s, n_paths=2)
+        b = submit(s, n_paths=2)
+        staged = s.plan(slots=4, max_ticks=1, reserve=True)
+        assert staged.live
+        s.cancel(a), s.cancel(b)
+        assert not staged.live
+        s.release(staged)
+        assert s.plan(slots=4, max_ticks=1) is None
+        assert not s.queue
+
+
+class TestAdmission:
+    def test_max_requests_bounds_live_queue(self):
+        s = Scheduler(max_requests=2)
+        submit(s, n_paths=1)
+        rid = submit(s, n_paths=1)
+        with pytest.raises(QueueFull, match="max_requests=2"):
+            submit(s, n_paths=1)
+        s.cancel(rid)  # cancelled entries do not count against admission
+        submit(s, n_paths=1)
+
+    def test_max_paths_counts_owed_not_submitted(self):
+        s = Scheduler(max_paths=4)
+        rid = submit(s, n_paths=3)
+        with pytest.raises(QueueFull, match="max_paths=4"):
+            submit(s, n_paths=2)
+        submit(s, n_paths=1)  # exactly fits
+        plan = s.plan(slots=3, max_ticks=1)
+        s.deliver(plan, fake_outputs(plan))  # retires rid: 3 paths freed
+        assert rid in s.done
+        submit(s, n_paths=3)
+
+    def test_rejected_enqueue_leaves_queue_untouched(self):
+        s = Scheduler(max_requests=1)
+        submit(s, n_paths=1)
+        before = list(s.queue)
+        with pytest.raises(QueueFull):
+            submit(s, n_paths=1)
+        assert list(s.queue) == before
+        assert s.pending() == {before[0].request.request_id: 1}

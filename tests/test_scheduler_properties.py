@@ -1,0 +1,286 @@
+"""Property-based scheduler/executor-invariant harness (device-free, tier-1).
+
+Random interleavings of submit / cancel / stage / release / tick-drain ops
+drive the real :class:`~repro.serving.scheduler.Scheduler` against a trivial
+**sequential oracle**: for one signature group, the next plan's flattened
+ticks must equal "live same-signature requests in service order, each
+contributing its next undelivered+unreserved paths, truncated to
+``slots * max_ticks`` and chunked into ``slots``-wide ticks".  Everything the
+serving plane relies on falls out of checking that plus delivery accounting:
+
+* no request is ever lost or duplicated (every (request, path) pair is
+  delivered exactly once; every non-cancelled request retires with its full,
+  in-order path set);
+* retirement respects queue order within a signature (equal priorities are
+  strict FIFO);
+* ``pending()`` stays consistent with delivered counts at every step;
+* a cancel before dispatch never occupies a slot in any later plan;
+* staged (``reserve=True``) plans — the double-buffering hook — never
+  overlap the live plan's paths, survive cancels of their owners, and
+  ``release`` returns their paths intact.
+
+Runs under hypothesis when it is installed (CI) and always additionally runs
+a seeded ``random.Random`` sweep sharing the same op generator, so the
+default lane exercises >= 200 interleavings with no optional dependency.
+"""
+import random
+from collections import deque
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")  # solver-registry parsing imports jax (host only)
+
+from repro.serving.scheduler import Scheduler, make_request
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container lane: the seeded sweep below still runs
+    HAVE_HYPOTHESIS = False
+
+# Three distinct signatures (n_steps differs), same solver kind.
+N_STEPS_CHOICES = (8, 16, 32)
+FALLBACK_SEEDS = range(220)  # >= 200 interleavings without hypothesis
+
+
+# -- op generation (shared by the hypothesis and seeded paths) ---------------
+
+def gen_ops(rng: random.Random, n_ops: int = 14):
+    """A random op trace.  Ops reference requests positionally (k-th
+    submitted) so traces are self-contained and replayable from a seed."""
+    ops = []
+    n_submitted = 0
+    for _ in range(n_ops):
+        roll = rng.random()
+        if n_submitted == 0 or roll < 0.40:
+            ops.append(("submit", rng.choice(N_STEPS_CHOICES),
+                        rng.randint(1, 9),
+                        rng.choice((0, 0, 0, 1, 5))))  # bias: default prio
+            n_submitted += 1
+        elif roll < 0.55:
+            ops.append(("cancel", rng.randrange(n_submitted)))
+        elif roll < 0.70:
+            ops.append(("stage", rng.randint(1, 5), rng.randint(1, 4)))
+        elif roll < 0.78:
+            ops.append(("release",))
+        elif roll < 0.86:
+            ops.append(("deliver_staged",))
+        else:
+            ops.append(("drain", rng.randint(1, 5), rng.randint(1, 4)))
+    return ops
+
+
+# -- the oracle --------------------------------------------------------------
+
+class OracleReq:
+    def __init__(self, rid, n_steps, n_paths, priority):
+        self.rid = rid
+        self.n_steps = n_steps  # stands in for the full signature
+        self.n_paths = n_paths
+        self.priority = priority
+        self.delivered = 0
+        self.reserved = 0
+        self.cancelled = False
+
+
+class Oracle:
+    """Sequential flat-fill model of the scheduler.  Deliberately trivial:
+    no slot bookkeeping, just cursors over a priority-stable-sorted list."""
+
+    def __init__(self):
+        self.reqs = []
+
+    def order(self):
+        return sorted((r for r in self.reqs if not r.cancelled),
+                      key=lambda r: -r.priority)
+
+    def pick_signature(self):
+        for r in self.order():
+            if r.n_paths - r.delivered - r.reserved > 0:
+                return r.n_steps
+        return None
+
+    def fill(self, slots, max_ticks, sig, reserve):
+        """Flat fill: same-signature live requests in service order, each
+        from its cursor, truncated to slots*max_ticks, chunked by slots."""
+        flat = []
+        for r in self.order():
+            if r.n_steps != sig:
+                continue
+            start = r.delivered + r.reserved
+            flat.extend((r, i) for i in range(start, r.n_paths))
+        flat = flat[: slots * max_ticks]
+        if not flat:
+            return None
+        if reserve:
+            for r, _ in flat:
+                r.reserved += 1
+        return [flat[k:k + slots] for k in range(0, len(flat), slots)]
+
+
+# -- trace interpreter -------------------------------------------------------
+
+def check_pending(sched, oracle):
+    want = {r.rid: r.n_paths - r.delivered
+            for r in oracle.reqs if not r.cancelled and not r.done_expected}
+    assert sched.pending() == want
+
+
+def run_trace(ops):
+    sched = Scheduler()
+    oracle = Oracle()
+    # staged: FIFO-delivered, LIFO-released (mirrors the engines: reserved
+    # plans are delivered in planning order; only the newest is released)
+    staged = deque()
+    delivered_pairs = set()   # (rid, path) — each must appear exactly once
+    retired_log = []
+
+    def fake_outputs(plan):
+        y = np.zeros((plan.n_ticks, plan.slots, 1))
+        for t, tick in enumerate(plan.ticks):
+            for s, (p, i) in enumerate(tick):
+                y[t, s] = p.request.request_id * 1000 + i
+        return {"y_final": y, "ys": None}
+
+    def check_plan(plan, chunks):
+        if plan is None:
+            assert chunks is None
+            return
+        got = [[(p.request.request_id, i) for p, i in tick]
+               for tick in plan.ticks]
+        want = [[(r.rid, i) for r, i in chunk] for chunk in chunks]
+        assert got == want, f"plan diverged from oracle: {got} != {want}"
+        for tick in got:
+            for rid, i in tick:
+                assert rid not in cancelled_before, \
+                    f"cancelled request {rid} occupies a slot"
+
+    def deliver(plan, chunks):
+        retired = sched.deliver(plan, fake_outputs(plan))
+        for chunk in chunks:
+            for r, i in chunk:
+                assert (r.rid, i) not in delivered_pairs, \
+                    f"path ({r.rid}, {i}) delivered twice"
+                delivered_pairs.add((r.rid, i))
+                r.delivered += 1
+                if plan.reserved:
+                    r.reserved -= 1
+        want_retired = [r.rid for r in oracle.order()
+                        if r.delivered == r.n_paths and not r.done_expected]
+        for r in oracle.reqs:
+            if r.delivered == r.n_paths and not r.cancelled:
+                r.done_expected = True
+        assert retired == want_retired
+        retired_log.extend(retired)
+        for rid in retired:
+            res = sched.done[rid]
+            r = next(r for r in oracle.reqs if r.rid == rid)
+            want = np.array([rid * 1000 + i
+                             for i in range(r.n_paths)])[:, None]
+            assert np.array_equal(res.y_final, want), \
+                f"request {rid} retired with wrong/misordered paths"
+
+    cancelled_before = set()  # rids cancelled while still fully unplanned
+    for op in ops:
+        if op[0] == "submit":
+            _, n_steps, n_paths, priority = op
+            rid = sched.new_request_id()
+            req = make_request(rid, "ees25", term_kind="euclidean", t1=1.0,
+                               n_steps=n_steps, n_paths=n_paths,
+                               priority=priority)
+            sched.enqueue(req)
+            r = OracleReq(rid, n_steps, n_paths, priority)
+            r.done_expected = False
+            oracle.reqs.append(r)
+        elif op[0] == "cancel":
+            r = oracle.reqs[op[1]]
+            got = sched.cancel(r.rid)
+            want = not r.cancelled and not r.done_expected
+            assert got == want
+            if got and r.delivered == 0 and r.reserved == 0:
+                cancelled_before.add(r.rid)
+            r.cancelled = r.cancelled or got
+        elif op[0] == "stage":
+            _, slots, max_ticks = op
+            sig = oracle.pick_signature()
+            plan = sched.plan(slots, max_ticks, reserve=True)
+            chunks = None if sig is None else \
+                oracle.fill(slots, max_ticks, sig, reserve=True)
+            check_plan(plan, chunks)
+            if plan is not None:
+                staged.append((plan, chunks))
+        elif op[0] == "release":
+            if staged:
+                plan, chunks = staged.pop()  # newest first: LIFO only
+                sched.release(plan)
+                for chunk in chunks:
+                    for r, _ in chunk:
+                        r.reserved -= 1
+        elif op[0] == "deliver_staged":
+            if staged:
+                plan, chunks = staged.popleft()  # planning order
+                deliver(plan, chunks)
+        elif op[0] == "drain":
+            _, slots, max_ticks = op
+            if staged:
+                continue  # unreserved plans would double-issue staged paths
+            sig = oracle.pick_signature()
+            plan = sched.plan(slots, max_ticks)
+            chunks = None if sig is None else \
+                oracle.fill(slots, max_ticks, sig, reserve=False)
+            check_plan(plan, chunks)
+            if plan is not None:
+                deliver(plan, chunks)
+        check_pending(sched, oracle)
+
+    # Epilogue: flush staged plans in planning order, then drain to empty.
+    while staged:
+        plan, chunks = staged.popleft()
+        deliver(plan, chunks)
+    while True:
+        sig = oracle.pick_signature()
+        plan = sched.plan(4, 3)
+        if plan is None:
+            assert sig is None
+            break
+        deliver(plan, oracle.fill(4, 3, sig, reserve=False))
+        check_pending(sched, oracle)
+
+    # Global accounting: nothing lost, nothing duplicated.
+    assert not sched.pending()
+    live = [r for r in oracle.reqs if not r.cancelled]
+    assert sorted(sched.done) == sorted(r.rid for r in live)
+    for r in live:
+        assert all((r.rid, i) in delivered_pairs for i in range(r.n_paths)), \
+            f"request {r.rid} lost paths"
+    # Retirement respects queue order within a signature + priority class:
+    # among equal-priority same-signature requests, retirement ids ascend.
+    pos = {rid: k for k, rid in enumerate(retired_log)}
+    by_class = {}
+    for r in live:
+        by_class.setdefault((r.n_steps, r.priority), []).append(r.rid)
+    for rids in by_class.values():
+        order = [pos[rid] for rid in rids]
+        assert order == sorted(order), \
+            f"same-class requests retired out of FIFO order: {rids}"
+
+
+# -- entry points ------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+def test_random_interleavings_seeded(seed):
+    run_trace(gen_ops(random.Random(seed)))
+
+
+def test_long_traces_seeded():
+    for seed in range(40):
+        run_trace(gen_ops(random.Random(10_000 + seed), n_ops=40))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1),
+           st.integers(min_value=4, max_value=40))
+    def test_random_interleavings_hypothesis(seed, n_ops):
+        run_trace(gen_ops(random.Random(seed), n_ops=n_ops))

@@ -6,13 +6,16 @@ The mesh-sharded serving case lives in ``test_launch_distributed.py`` (it
 needs a subprocess with faked devices); everything here runs on the single
 real CPU device.
 """
+import asyncio
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import SDETerm, sdeint, sdeint_ticks
-from repro.serving import SDESampleConfig, SDESampleEngine
+from repro.serving import (AsyncSDESampleEngine, QueueFull, SDESampleConfig,
+                           SDESampleEngine)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -229,3 +232,215 @@ class TestCancellationAndRun:
         assert eng.executor.n_ticks == 6  # 4-stack + 2 single ticks
         # the capped remainder must not compile a (sig, 2) stack
         assert {k[1] for k in eng._compiled} == {4, 1}
+
+    def test_cancelled_staged_stack_is_skipped_not_dispatched(self):
+        """Regression: with double buffering the engine plans stack N+1 while
+        N executes; if every owner of the staged stack is cancelled before
+        its turn, the dead stack must be released — NOT dispatched as a
+        no-op (``n_dispatches`` stays flat)."""
+        eng = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        r1 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2, seed=3)
+        r2 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        eng.tick()               # serves r1, stages r2's stack
+        assert eng.cancel(r2) is True
+        n_before = eng.executor.n_dispatches
+        done = eng.run()
+        assert eng.executor.n_dispatches == n_before  # dead stack skipped
+        assert sorted(done) == [r1]
+        # and the release returned the reservation cleanly: new same-paths
+        # work plans from scratch with identical samples
+        r3 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2, seed=3)
+        np.testing.assert_array_equal(eng.run()[r3].y_final, done[r1].y_final)
+
+    def test_double_buffer_off_matches_on(self):
+        """``double_buffer=False`` (no plan-ahead) is the PR-5 drain loop;
+        staging must not change samples, dispatch counts, or compiled keys."""
+        outs = []
+        for db in (True, False):
+            eng = SDESampleEngine(
+                term(), jnp.ones(3),
+                SDESampleConfig(slots=2, ticks_per_dispatch=2,
+                                double_buffer=db))
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=11, seed=1)
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=4, seed=2)
+            done = eng.run()
+            outs.append((done, eng.executor.n_dispatches,
+                         set(eng._compiled)))
+        (done_a, nd_a, keys_a), (done_b, nd_b, keys_b) = outs
+        assert nd_a == nd_b and keys_a == keys_b
+        for rid in done_a:
+            np.testing.assert_array_equal(done_a[rid].y_final,
+                                          done_b[rid].y_final)
+
+
+class TestAdmissionAndPriority:
+    def test_queue_full_raises_on_sync_submit(self):
+        cfg = SDESampleConfig(slots=2, max_queue_requests=1)
+        eng = SDESampleEngine(term(), jnp.ones(3), cfg)
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        with pytest.raises(QueueFull, match="max_requests=1"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        cfg = SDESampleConfig(slots=2, max_queue_paths=4)
+        eng = SDESampleEngine(term(), jnp.ones(3), cfg)
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=3)
+        with pytest.raises(QueueFull, match="max_paths=4"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=1)  # exactly fits
+        eng.run()
+        eng.submit("ees25", t1=1.0, n_steps=8, n_paths=4)  # drained: space
+
+    def test_priority_changes_service_order_not_samples(self):
+        """Higher priority classes retire first, but samples are pure
+        functions of (seed, path) — identical to the all-default run."""
+        def serve(prios):
+            eng = SDESampleEngine(term(), jnp.ones(3),
+                                  SDESampleConfig(slots=4))
+            r1 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=8, seed=1,
+                            priority=prios[0])
+            r2 = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=4, seed=2,
+                            priority=prios[1])
+            return r1, r2, eng.run()
+        r1, r2, flat = serve((0, 0))
+        assert list(flat) == [r1, r2]          # FIFO retirement
+        p1, p2, prio = serve((0, 5))
+        assert list(prio) == [p2, p1]          # high class served first
+        for a, b in ((r1, p1), (r2, p2)):
+            np.testing.assert_array_equal(flat[a].y_final, prio[b].y_final)
+
+    def test_error_paths_raise_at_submit_time(self):
+        """Malformed requests die loudly at submit() — named argument, clear
+        message — never at the queue head inside jit."""
+        eng = SDESampleEngine(term(), jnp.ones(3), SDESampleConfig(slots=2))
+        with pytest.raises(KeyError, match="unknown solver"):
+            eng.submit("not-a-solver", t1=1.0, n_steps=8, n_paths=2)
+        with pytest.raises(ValueError, match="n_paths must be >= 1"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=0)
+        with pytest.raises(ValueError, match="save_at must be a flat"):
+            eng.submit("ees25:adaptive", t1=1.0, n_steps=8, n_paths=2,
+                       rtol=1e-3, save_at=[[0.5, 1.0]])
+        with pytest.raises(ValueError, match="priority must be an int"):
+            eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2, priority=0.5)
+        assert eng.pending() == {}  # nothing half-enqueued
+
+
+class TestAsyncEngine:
+    """The asyncio continuous-batching plane over the same scheduler/executor
+    core.  Tests run the loop to completion inside ``asyncio.run`` (no
+    pytest-asyncio dependency)."""
+
+    REQS = [("ees25", dict(t1=1.0, n_steps=16, n_paths=10, seed=5)),
+            ("ees25", dict(t1=1.0, n_steps=8, n_paths=3, seed=9,
+                           save_every=4)),
+            ("ees25", dict(t1=1.0, n_steps=16, n_paths=7, seed=2))]
+
+    def sync_reference(self, cfg, prios):
+        eng = SDESampleEngine(term(), jnp.ones(3), cfg)
+        rids = [eng.submit(s, priority=p, **kw)
+                for (s, kw), p in zip(self.REQS, prios)]
+        done = eng.run()
+        return [done[r] for r in rids]
+
+    def async_results(self, cfg, prios):
+        async def main():
+            async with AsyncSDESampleEngine(term(), jnp.ones(3), cfg) as eng:
+                rids = [await eng.submit(s, priority=p, **kw)
+                        for (s, kw), p in zip(self.REQS, prios)]
+                return [await eng.result(r, numpy=True) for r in rids]
+        return asyncio.run(main())
+
+    @pytest.mark.parametrize("ticks_per_dispatch", [1, 4])
+    @pytest.mark.parametrize("prios", [(0, 0, 0), (0, 5, 1)])
+    def test_async_bitwise_equals_sync_drain(self, ticks_per_dispatch, prios):
+        """Acceptance criterion: the async plane returns results bitwise
+        identical to the synchronous drain, across dispatch depths and with
+        priorities on/off (samples are (seed, path)-pure)."""
+        cfg = SDESampleConfig(slots=4, ticks_per_dispatch=ticks_per_dispatch)
+        for a, b in zip(self.sync_reference(cfg, prios),
+                        self.async_results(cfg, prios)):
+            np.testing.assert_array_equal(np.asarray(a.y_final), b.y_final)
+            if a.ys is not None:
+                np.testing.assert_array_equal(np.asarray(a.ys), b.ys)
+
+    def test_results_stay_device_resident_until_asked(self):
+        async def main():
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3), SDESampleConfig(slots=4)) as eng:
+                rid = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6)
+                res = await eng.result(rid)
+                assert isinstance(res.y_final, jax.Array)  # no host copy
+                host = await eng.result(rid, numpy=True)
+                assert isinstance(host.y_final, np.ndarray)
+                np.testing.assert_array_equal(np.asarray(res.y_final),
+                                              host.y_final)
+        asyncio.run(main())
+
+    def test_submit_backpressure_awaits_space(self):
+        """A full bounded queue makes ``submit`` wait (not raise); capacity
+        freed by retirement admits it, and the late request completes."""
+        async def main():
+            cfg = SDESampleConfig(slots=4, max_queue_paths=8)
+            async with AsyncSDESampleEngine(term(), jnp.ones(3), cfg) as eng:
+                r1 = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=8)
+                blocked = asyncio.create_task(
+                    eng.submit("ees25", t1=1.0, n_steps=8, n_paths=8))
+                await asyncio.sleep(0)
+                assert not blocked.done()  # parked on admission, no error
+                await eng.result(r1)       # retirement frees capacity
+                r2 = await blocked
+                res = await eng.result(r2)
+                assert res.y_final.shape[0] == 8
+        asyncio.run(main())
+
+    def test_cancel_wakes_waiter_and_frees_capacity(self):
+        async def main():
+            cfg = SDESampleConfig(slots=2, max_queue_requests=1)
+            async with AsyncSDESampleEngine(term(), jnp.ones(3), cfg) as eng:
+                # Park the serve loop behind a cancelled head-of-queue: the
+                # waiter gets CancelledError, the blocked submit is admitted.
+                r1 = await eng.submit("ees25", t1=1.0, n_steps=8,
+                                      n_paths=1000)
+                blocked = asyncio.create_task(
+                    eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2, seed=4))
+                waiter = asyncio.create_task(eng.result(r1))
+                await asyncio.sleep(0)
+                assert eng.cancel(r1) is True
+                with pytest.raises(asyncio.CancelledError):
+                    await waiter
+                r2 = await blocked
+                res = await eng.result(r2, numpy=True)
+                assert res.y_final.shape[0] == 2
+                with pytest.raises(asyncio.CancelledError):
+                    await eng.result(r1)   # stays cancelled on re-await
+                with pytest.raises(KeyError, match="unknown request id"):
+                    await eng.result(999)
+        asyncio.run(main())
+
+    def test_submit_validation_errors_do_not_wait(self):
+        async def main():
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3), SDESampleConfig(slots=2)) as eng:
+                with pytest.raises(KeyError, match="unknown solver"):
+                    await eng.submit("not-a-solver", t1=1.0, n_steps=8,
+                                     n_paths=2)
+                with pytest.raises(ValueError, match="n_paths must be >= 1"):
+                    await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=0)
+                with pytest.raises(ValueError, match="save_at must be a flat"):
+                    await eng.submit("ees25:adaptive", t1=1.0, n_steps=8,
+                                     n_paths=2, rtol=1e-3,
+                                     save_at=np.ones((2, 2)))
+                assert eng.pending() == {}
+        asyncio.run(main())
+
+    def test_drain_and_reuse_after_idle(self):
+        """The serve loop idles when the queue empties and wakes for new
+        work; ``drain`` awaits everything queued so far."""
+        async def main():
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3), SDESampleConfig(slots=4)) as eng:
+                a = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6)
+                done = await eng.drain()
+                assert sorted(done) == [a]
+                b = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
+                done = await eng.drain()
+                assert sorted(done) == [a, b]
+        asyncio.run(main())
