@@ -1,0 +1,148 @@
+"""Large-step stability frontiers: EES vs Reversible Heun vs Milstein.
+
+Integrates the contractive linear test SDE
+
+    dy = -lam * y dt + mu * y dW          (diagonal multiplicative noise)
+
+across a stiffness sweep ``lam`` x a dyadic *evaluation budget* sweep, with
+every solver spending the same number of vector-field evaluations per unit
+time (matched cost: ``n_steps = budget / evals_per_step``, so a 5-stage EES
+scheme takes 5x larger steps than Euler-family schemes at the same budget).
+The true solution is mean-square contractive
+(``E|y_T|^2 = exp((-2 lam + mu^2) T)``), so a run is classified **stable**
+iff its Monte-Carlo mean square is finite and non-expansive
+(``E|y_T|^2 <= E|y_0|^2``).
+
+Per solver the **blow-up frontier** records, for each stiffness, the largest
+stable step size (and the smallest stable budget).  The paper's headline
+(Theorem 2.1 + Section 3): Reversible Heun's linear stability region is the
+imaginary segment [-i, i], so *any* real negative ``lam * h`` is unstable at
+any step size — its frontier is empty — while the EES(2,m) schemes hold a
+real-axis interval (EES25 reaches ``lam * h ~ 3.2``), so their frontiers
+dominate at every stiffness.  The CI bench lane gates on exactly that
+containment plus finiteness of every EES frontier entry.
+
+Emits ``BENCH_stability.json`` next to the repo root.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_stability [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SDETerm, sdeint
+
+from .common import emit
+
+jax.config.update("jax_enable_x64", True)
+
+SOLVERS = ("ees25", "ees27", "reversible-heun", "milstein")
+STIFFNESS = (2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+BUDGETS = (32, 64, 128, 256, 512, 1024, 2048)  # evals over [0, T1] per path
+N_PATHS = 64
+DIM = 4
+T1 = 1.0
+MU = 0.5          # multiplicative noise level
+MS_THRESHOLD = 1.0  # stable iff E[y_T^2] <= E[y_0^2] (y0 = 1, contractive SDE)
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_stability.json",
+)
+
+
+def linear_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: -a * y,
+        diffusion=lambda t, y, a: MU * y,
+        noise="diagonal",
+    )
+
+
+def evals_per_step(spec: str) -> int:
+    from repro.core import get_solver
+
+    return int(get_solver(spec).evals_per_step)
+
+
+def mean_square_final(spec, term, lam, n_steps, keys, y0):
+    """E[y_T^2] (per-component mean over paths and dims) on a fixed grid."""
+    out = jax.jit(jax.vmap(lambda k: sdeint(
+        term, spec, 0.0, T1, n_steps, y0, k, args=jnp.float64(lam)
+    ).y_final))(keys)
+    return float(jnp.mean(out ** 2))
+
+
+def run(out_path: str = DEFAULT_OUT):
+    term = linear_term()
+    y0 = jnp.ones(DIM, jnp.float64)
+    keys = jax.random.split(jax.random.PRNGKey(0), N_PATHS)
+
+    records = []
+    frontiers = {}
+    for spec in SOLVERS:
+        eps = evals_per_step(spec)
+        frontiers[spec] = {}
+        for lam in STIFFNESS:
+            max_stable_h = 0.0
+            min_stable_budget = None
+            for budget in BUDGETS:
+                n_steps = max(1, round(budget / eps))
+                h = T1 / n_steps
+                ms = mean_square_final(spec, term, lam, n_steps, keys, y0)
+                stable = math.isfinite(ms) and ms <= MS_THRESHOLD
+                records.append({
+                    "solver": spec,
+                    "stiffness": lam,
+                    "budget": budget,
+                    "n_steps": n_steps,
+                    "h": h,
+                    "ms_final": ms if math.isfinite(ms) else None,
+                    "stable": stable,
+                })
+                if stable:
+                    max_stable_h = max(max_stable_h, h)
+                    if min_stable_budget is None or budget < min_stable_budget:
+                        min_stable_budget = budget
+            frontiers[spec][f"{lam:g}"] = {
+                "max_stable_h": max_stable_h,
+                "min_stable_budget": min_stable_budget,
+            }
+            emit(f"bench_stability/{spec}/lam{lam:g}", 0.0,
+                 f"max_stable_h={max_stable_h:.4g},"
+                 f"min_budget={min_stable_budget}")
+
+    payload = {
+        "device": jax.devices()[0].platform,
+        "n_paths": N_PATHS,
+        "dim": DIM,
+        "t1": T1,
+        "mu": MU,
+        "ms_threshold": MS_THRESHOLD,
+        "stiffness": list(STIFFNESS),
+        "budgets": list(BUDGETS),
+        "solvers": list(SOLVERS),
+        "records": records,
+        "frontiers": frontiers,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ from .registry import (
     list_solvers,
     parse_solver_spec,
     register_solver,
+    select_solver,
     solver_kind,
 )
 from .sdeint import sdeint, sdeint_ticks
@@ -52,11 +53,14 @@ from .lie import (
     Torus,
 )
 from .solvers import (
+    VALID_NOISE,
     ButcherSolver,
     LowStorageSolver,
     MCFSolver,
+    Milstein,
     ReversibleHeun,
     SDETerm,
+    SRKAdditive,
     ees25_solver,
     ees27_solver,
 )
@@ -74,6 +78,7 @@ __all__ = [
     "register_solver",
     "canonical_spec",
     "solver_kind",
+    "select_solver",
     "BrownianPath",
     "brownian_path",
     "VirtualBrownianTree",
@@ -84,10 +89,13 @@ __all__ = [
     "integrate_adaptive",
     "realize_grid",
     "SDETerm",
+    "VALID_NOISE",
     "ButcherSolver",
     "LowStorageSolver",
     "ReversibleHeun",
     "MCFSolver",
+    "Milstein",
+    "SRKAdditive",
     "ees25_solver",
     "ees27_solver",
     "ManifoldSDETerm",

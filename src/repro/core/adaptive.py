@@ -104,6 +104,7 @@ def _controller_loop(solver, term, y0, driver, args, *, t0, t1, rtol, atol,
     """
     span = t1 - t0
     has_noise = getattr(term, "noise", "diagonal") != "none"
+    needs_levy = getattr(solver, "needs_levy_area", False)
     tdt = jnp.result_type(float)
     eps_end = 1e-9 * span
     h_floor = 1e-7 * span
@@ -133,6 +134,11 @@ def _controller_loop(solver, term, y0, driver, args, *, t0, t1, rtol, atol,
         if has_noise:
             w_prop = driver.weval(t + h_eff)
             dW = tree_sub(w_prop, w)
+            if needs_levy:
+                # Levy-area solvers consume the (dW, dH) pair; rejected trials
+                # re-query over a smaller interval, and the salted Levy family
+                # keeps each query a pure function of its endpoints.
+                dW = (dW, driver.levy_area(t, t + h_eff))
         else:
             w_prop, dW = w, None
         y_new, err = solver.step_with_error(term, y, t, h_eff, dW, args)

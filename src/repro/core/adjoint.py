@@ -46,6 +46,7 @@ import numpy as np
 from .brownian import BrownianPath
 from .grid import TimeGrid, fill_saves, save_mask
 from .pytree import tree_add, tree_select
+from .solvers import _PrediffusedTerm
 
 __all__ = ["SolveResult", "solve"]
 
@@ -148,8 +149,11 @@ def _make_stepper(solver, term, grid: TimeGrid, args, masked, dWs=None):
     """
     driver = grid.driver
     stream = dWs is None and driver is not None and hasattr(driver, "weval")
+    needs_levy = getattr(solver, "needs_levy_area", False)
 
     if dWs is not None:
+        # For Levy-area solvers the buffer is the stacked (dWs, dHs) pair
+        # (see TimeGrid.levy_increments); _pick_step indexes the pair pytree.
         def init_w():
             return None
 
@@ -169,6 +173,8 @@ def _make_stepper(solver, term, grid: TimeGrid, args, masked, dWs=None):
             t, h = grid.t_of(n), grid.h_of(n)
             w_next = driver.weval(grid.ts[n + 1])
             dW = jax.tree_util.tree_map(jnp.subtract, w_next, w)
+            if needs_levy:
+                dW = (dW, driver.levy_area(grid.ts[n], grid.ts[n + 1]))
             new = solver.step(term, state, t, h, dW, args)
             if masked:
                 new = tree_select(h > 0, new, state)
@@ -179,7 +185,8 @@ def _make_stepper(solver, term, grid: TimeGrid, args, masked, dWs=None):
 
         def step(carry, n):
             state, w = carry
-            t, h, dW = grid.t_of(n), grid.h_of(n), grid.increment(n)
+            t, h = grid.t_of(n), grid.h_of(n)
+            dW = grid.levy_increment(n) if needs_levy else grid.increment(n)
             new = solver.step(term, state, t, h, dW, args)
             if masked:
                 new = tree_select(h > 0, new, state)
@@ -280,6 +287,7 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
     n_steps = grid.n_steps
     n_seg, seg_len = _segment_counts(n_steps, save_every)
     masked = not grid.is_uniform
+    needs_levy = getattr(solver, "needs_levy_area", False)
     if save_at is not None:
         save_ts, eps_end, h_floor = _save_consts(grid, save_at)
 
@@ -332,7 +340,11 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
         def body(carry, n):
             state, ct_state, ct_args = carry
             t, h = grid.t_of(n), grid.h_of(n)
-            dW = grid.increment(n) if dWs is None else _pick_step(dWs, n)
+            if dWs is None:
+                dW = (grid.levy_increment(n) if needs_levy
+                      else grid.increment(n))
+            else:
+                dW = _pick_step(dWs, n)
             live = (h > 0) if masked else True
             # 1. Reconstruct the pre-step state (O(h^{m+1}) drift for EES;
             #    exact for algebraically reversible solvers).  Padding steps
@@ -426,6 +438,39 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
 # ---------------------------------------------------------------------------
 # Public entry point.
 # ---------------------------------------------------------------------------
+
+def _maybe_prediffuse(solver, term, y0, grid, args, adjoint, dWs):
+    """Additive-noise fast path: hoist the diffusion out of the scan.
+
+    With ``noise="additive"`` the diffusion matrix is independent of ``t``
+    and ``y`` (the additive contract — it may still depend on ``args``), so
+    ``g * dW[n]`` can be computed for every step in ONE broadcast pass over
+    the bulk Brownian buffer instead of re-evaluating ``g`` inside the
+    sequential loop.  The substituted :class:`_PrediffusedTerm` then combines
+    ``f * h + w`` per step — the same IEEE multiply, hoisted, so results and
+    gradients are bitwise-equal to the standard route.
+
+    Excluded cases keep their general route:
+
+    * ``adjoint="reversible"`` — its backward pass returns zero cotangents
+      for the noise buffer (it is data), so gradients through a precomputed
+      ``g(args) * dW`` buffer would cut the diffusion-parameter cotangents.
+    * per-step generation (``dWs is None``) — nothing to hoist over.
+    * solvers that read ``term.diffusion`` directly (Milstein, SRK) or
+      consume Levy-area pairs — the buffer layout is not a plain increment.
+    """
+    if (
+        dWs is None
+        or getattr(term, "noise", None) != "additive"
+        or adjoint not in ("full", "recursive")
+        or getattr(solver, "needs_levy_area", False)
+        or getattr(solver, "needs_diffusion", False)
+    ):
+        return term, dWs
+    g0 = term.diffusion(grid.t0, y0, args)
+    ws = jax.tree_util.tree_map(lambda gi, wi: gi * wi, g0, dWs)
+    return _PrediffusedTerm(base=term), ws
+
 
 def solve(
     solver,
@@ -525,7 +570,12 @@ def solve(
             f"granularity and has no effect under adjoint={adjoint!r} — "
             "drop it or use adjoint='recursive'"
         )
-    dWs = grid.increments() if bulk_increments else None
+    needs_levy = getattr(solver, "needs_levy_area", False)
+    if bulk_increments:
+        dWs = grid.levy_increments() if needs_levy else grid.increments()
+    else:
+        dWs = None
+    term, dWs = _maybe_prediffuse(solver, term, y0, grid, args, adjoint, dWs)
     if adjoint == "full":
         return _solve_scan(solver, term, y0, grid, args, save_every, None,
                            save_at, dWs)

@@ -42,6 +42,13 @@ def _is_simple_shape(x) -> bool:
     return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
 
 
+# Key-space salt separating the space-time Levy-area stream from the path
+# stream: ``fold_in(key, _LEVY_SALT)`` derives an independent key family, so
+# adding Levy queries never perturbs a single bit of the W draws ("LEVY" in
+# ASCII; well inside int32 for fold_in).
+_LEVY_SALT = 0x4C455659
+
+
 # The bulk realizations run under their own jit so the generated *bits* are
 # independent of the calling context: an eager caller runs the same compiled
 # computation that an outer jit inlines (op-by-op execution would fuse the
@@ -58,6 +65,20 @@ def _bulk_path_increments(bm: "BrownianPath"):
 def _bulk_tree_increments(tree: "VirtualBrownianTree", ts):
     w = jax.vmap(tree.weval)(ts)
     return jax.tree_util.tree_map(lambda x: x[1:] - x[:-1], w)
+
+
+@jax.jit
+def _bulk_path_levy(bm: "BrownianPath"):
+    ns = jnp.arange(bm.n_steps)
+    return jax.vmap(bm.increment)(ns), jax.vmap(bm.levy_area_step)(ns)
+
+
+@jax.jit
+def _bulk_tree_levy(tree: "VirtualBrownianTree", ts):
+    w = jax.vmap(tree.weval)(ts)
+    dWs = jax.tree_util.tree_map(lambda x: x[1:] - x[:-1], w)
+    dHs = jax.vmap(tree.levy_area)(ts[:-1], ts[1:])
+    return dWs, dHs
 
 
 
@@ -146,6 +167,44 @@ class BrownianPath:
         keys = jax.random.split(sub, len(leaves))
         outs = [scale * jax.random.normal(k, s, self.dtype) for k, s in zip(keys, leaves)]
         return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def levy_area_step(self, n):
+        """Space-time Levy area ``DH`` over step ``n``: ``N(0, h/12)``.
+
+        ``DH = DZ/h - DW/2`` with ``DZ`` the time integral of the bridged
+        path — independent of ``DW`` with variance ``h/12``, drawn from the
+        salted key family ``fold_in(fold_in(key, _LEVY_SALT), n)`` so the
+        ``W`` bits are untouched.  Pure function of ``(key, n)``:
+        recomputable in any order, which the reversible backward sweep and
+        the bulk pass rely on.
+        """
+        sub = jax.random.fold_in(jax.random.fold_in(self.key, _LEVY_SALT), n)
+        scale = jnp.sqrt(jnp.asarray(self.h / 12.0, self.dtype))
+        if _is_simple_shape(self.shape):
+            return scale * jax.random.normal(sub, self.shape, self.dtype)
+        leaves, treedef = jax.tree_util.tree_flatten(self.shape, is_leaf=_is_simple_shape)
+        keys = jax.random.split(sub, len(leaves))
+        outs = [scale * jax.random.normal(k, s, self.dtype) for k, s in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def grid_levy_increment(self, ts, n):
+        """The ``(dW, dH)`` pair over step ``n`` (Levy-augmented driver query)."""
+        return self.grid_increment(ts, n), self.levy_area_step(n)
+
+    def grid_levy_increments(self, ts):
+        """All per-step ``(dWs, dHs)`` pairs in one stacked threefry pass.
+
+        Row ``n`` is bitwise-equal to :meth:`grid_levy_increment`\\ ``(ts, n)``
+        (``ts`` must be this path's native grid)."""
+        n_grid = ts.shape[0] - 1
+        if n_grid != self.n_steps:
+            raise ValueError(
+                f"grid of {n_grid} steps does not match this BrownianPath's "
+                f"native {self.n_steps}-step grid; increments are indexed by "
+                "step (fold_in(key, n)) — use a VirtualBrownianTree for "
+                "arbitrary (realized) grids"
+            )
+        return _bulk_path_levy(self)
 
     def increment_over(self, s, t):
         """W(t) - W(s) for *grid-aligned* s < t (driver-protocol entry point).
@@ -333,6 +392,52 @@ class VirtualBrownianTree:
         """W(t) - W(s) for arbitrary ``t0 <= s <= t <= t1`` (two tree descents)."""
         ws, wt = self.weval(s), self.weval(t)
         return jax.tree_util.tree_map(jnp.subtract, wt, ws)
+
+    def levy_area(self, s, t):
+        """Space-time Levy area ``DH`` over ``[s, t]``: ``N(0, (t-s)/12)``.
+
+        ``DH = DZ/(t-s) - DW/2`` (``DZ`` the time integral of the bridge
+        deviation): mean zero, variance ``(t-s)/12``, independent of ``DW``
+        over the same interval.  The draw is keyed on the interval's
+        endpoints quantized to the tree's leaf resolution and salted into an
+        independent key family (``fold_in(key, _LEVY_SALT)``), so it is a
+        pure function of ``(key, s, t)`` — re-queries, the reversible
+        backward sweep, and bulk realization all see identical bits, and the
+        ``W`` stream itself is untouched.  Exact in law per queried interval
+        (and jointly, across the disjoint steps of any one grid); unlike
+        ``W``, the areas of ``[s, m]`` and ``[m, t]`` do not chain
+        pathwise to the area of ``[s, t]`` — the standard
+        independent-increment approximation for space-time areas.
+        """
+        span = self.t1 - self.t0
+        tdt = jnp.result_type(float)
+        res = jnp.asarray(2.0 ** self.depth, tdt)
+        i0 = jnp.round((jnp.asarray(s, tdt) - self.t0) / span * res).astype(jnp.int32)
+        i1 = jnp.round((jnp.asarray(t, tdt) - self.t0) / span * res).astype(jnp.int32)
+        sub = jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(self.key, _LEVY_SALT), i0), i1)
+        h = jnp.maximum(jnp.asarray(t, tdt) - jnp.asarray(s, tdt), 0.0)
+        scale = jnp.sqrt(h.astype(self.dtype) / 12.0)
+        if _is_simple_shape(self.shape):
+            return scale * jax.random.normal(sub, self.shape, self.dtype)
+        leaves, treedef = jax.tree_util.tree_flatten(self.shape, is_leaf=_is_simple_shape)
+        keys = jax.random.split(sub, len(leaves))
+        outs = [scale * jax.random.normal(k, sh, self.dtype)
+                for k, sh in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def levy_increment_over(self, s, t):
+        """The ``(dW, dH)`` pair over ``[s, t]`` (Levy-augmented query)."""
+        return self.increment_over(s, t), self.levy_area(s, t)
+
+    def grid_levy_increment(self, ts, n):
+        """The ``(dW, dH)`` pair over step ``n`` of an arbitrary grid ``ts``."""
+        return self.grid_increment(ts, n), self.levy_area(ts[n], ts[n + 1])
+
+    def grid_levy_increments(self, ts):
+        """All per-step ``(dWs, dHs)`` pairs in one batched pass; row ``n``
+        is bitwise-equal to :meth:`grid_levy_increment`\\ ``(ts, n)``."""
+        return _bulk_tree_levy(self, ts)
 
     def grid_increment(self, ts, n):
         """dW over step ``n`` of an arbitrary (realized) grid ``ts``.

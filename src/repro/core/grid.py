@@ -107,6 +107,33 @@ class TimeGrid:
             return None
         return self.driver.grid_increments(self.ts)
 
+    def _require_levy(self):
+        if self.driver is None:
+            raise ValueError(
+                "this solver needs space-time Levy areas but the grid has no "
+                "Brownian driver (ODE mode)"
+            )
+        if not hasattr(self.driver, "grid_levy_increment"):
+            raise ValueError(
+                f"this solver needs space-time Levy areas but driver "
+                f"{type(self.driver).__name__} has no grid_levy_increment — "
+                "use a BrownianPath or VirtualBrownianTree"
+            )
+
+    def levy_increment(self, n):
+        """The ``(dW, dH)`` pair over step ``n`` for Levy-area solvers (SRK)."""
+        self._require_levy()
+        return self.driver.grid_levy_increment(self.ts, n)
+
+    def levy_increments(self):
+        """All per-step ``(dWs, dHs)`` pairs, stacked — the bulk realization
+        for solvers that advertise ``needs_levy_area`` (see
+        :meth:`increments` for the streaming contract)."""
+        self._require_levy()
+        if not hasattr(self.driver, "grid_levy_increments"):
+            return None
+        return self.driver.grid_levy_increments(self.ts)
+
     # -- constructors -------------------------------------------------------
 
     @classmethod

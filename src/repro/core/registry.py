@@ -30,13 +30,22 @@ included — instead of a uniform grid.
 from __future__ import annotations
 
 import ast
+import inspect
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from . import tableaux
-from .solvers import ButcherSolver, MCFSolver, ReversibleHeun, ees25_solver, ees27_solver
+from .solvers import (
+    ButcherSolver,
+    MCFSolver,
+    Milstein,
+    ReversibleHeun,
+    SRKAdditive,
+    ees25_solver,
+    ees27_solver,
+)
 
 __all__ = ["register_solver", "get_solver", "list_solvers", "parse_solver_spec",
-           "canonical_spec", "solver_kind"]
+           "canonical_spec", "solver_kind", "select_solver"]
 
 
 _REGISTRY: Dict[str, Tuple[Callable[..., Any], str]] = {}
@@ -152,6 +161,33 @@ def solver_kind(spec: str) -> str:
     return _lookup(name)[1]
 
 
+def _check_spec_keys(name: str, factory: Callable[..., Any],
+                     kwargs: Dict[str, Any]) -> None:
+    """Reject unknown spec kwargs up front, naming the offending key.
+
+    Without this, a typo'd flag key (``"ees25:use_kernel s=True"``,
+    ``"milstein:from=ito"``) dies inside the factory call with a bare
+    ``TypeError`` — here it fails at parse/resolve time with the valid keys
+    listed.  Factories taking ``**kwargs`` opt out (they accept anything).
+    """
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):  # pragma: no cover — builtins/C factories
+        return
+    params = sig.parameters.values()
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return
+    valid = {p.name for p in params
+             if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                           inspect.Parameter.KEYWORD_ONLY)}
+    for key in kwargs:
+        if key not in valid:
+            raise ValueError(
+                f"unknown option {key!r} for solver {name!r}; valid keys: "
+                + (", ".join(sorted(valid) + ["adaptive"]))
+            )
+
+
 def get_solver(spec, **overrides):
     """Resolve a solver spec string (or pass a solver object through).
 
@@ -189,6 +225,7 @@ def get_solver(spec, **overrides):
     factory, _ = _lookup(name)
     kwargs.update(overrides)
     adaptive = bool(kwargs.pop("adaptive", False))
+    _check_spec_keys(name, factory, kwargs)
     solver = factory(**kwargs)
     if adaptive:
         try:
@@ -231,6 +268,60 @@ def _ees25_butcher(x: float = 0.1):
 
 register_solver("ees25-butcher", _ees25_butcher)
 register_solver("ees27-butcher", lambda: ButcherSolver(tableaux.ees27_tableau()))
+
+
+# -- noise-specialized schemes (PR 7) ----------------------------------------
+
+def _milstein_factory(form):
+    return lambda use_kernels=False: Milstein(form=form, use_kernels=use_kernels)
+
+
+register_solver("milstein", _milstein_factory("ito"))
+register_solver("strat-milstein", _milstein_factory("stratonovich"))
+register_solver("srk", lambda noise="additive": SRKAdditive(noise=noise))
+
+
+def select_solver(noise: str = "diagonal", stiffness: float = 0.0,
+                  dt: Optional[float] = None) -> str:
+    """Auto-select a registry spec from the request's noise/stiffness profile.
+
+    The decision is by the *stability margin* ``z = |stiffness| * dt`` (how
+    far a real-axis eigenvalue pushes one step into the stability region)
+    first, then by noise structure:
+
+    * ``z > 2.8`` — near/past EES25's real-axis limit (~3.2): ``"ees27"``,
+      whose longer 2N sweep buys the larger region.
+    * ``z > 1.0`` — stiffness-dominated but within range: ``"ees25"``.
+      (Reversible Heun is never auto-selected for stiff drift: its stability
+      region is the imaginary segment [-i, i] — Theorem 2.1 — so *any* real
+      negative eigenvalue is unstable at any step size.)
+    * otherwise — noise-specialized: ``"srk:noise=additive"`` (strong order
+      1.5) for additive noise, ``"milstein"`` (strong order 1) for diagonal
+      or scalar noise, ``"ees25"`` for everything else (none/general).
+
+    Returns a spec string — resolve it with :func:`get_solver`; the serving
+    engine calls this for ``"auto"`` request specs.
+
+    >>> select_solver(noise="additive", stiffness=0.5, dt=0.01)
+    'srk:noise=additive'
+    >>> select_solver(noise="diagonal", stiffness=100.0, dt=0.05)
+    'ees27'
+    """
+    if noise not in ("none", "diagonal", "additive", "scalar", "general"):
+        raise ValueError(
+            f"unknown noise mode {noise!r} for select_solver; valid modes: "
+            "'none', 'diagonal', 'additive', 'scalar', 'general'"
+        )
+    z = abs(float(stiffness)) * float(dt) if dt is not None else 0.0
+    if z > 2.8:
+        return "ees27"
+    if z > 1.0:
+        return "ees25"
+    if noise == "additive":
+        return "srk:noise=additive"
+    if noise in ("diagonal", "scalar"):
+        return "milstein"
+    return "ees25"
 
 
 def _register_manifold():

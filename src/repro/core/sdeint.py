@@ -51,8 +51,10 @@ def _infer_noise_shape(term, y0):
             "noise='general' needs an explicit noise_shape=(..., m) — the "
             "number of driving channels is not derivable from the state"
         )
-    # diagonal: dW matches the state pytree leaf-for-leaf (for a bare-array
-    # state this unflattens straight back to its shape tuple)
+    if noise == "scalar":
+        return ()  # ONE shared channel: the increment is a scalar
+    # diagonal/additive: dW matches the state pytree leaf-for-leaf (for a
+    # bare-array state this unflattens straight back to its shape tuple)
     leaves, treedef = jax.tree_util.tree_flatten(y0)
     return jax.tree_util.tree_unflatten(treedef, [tuple(l.shape) for l in leaves])
 

@@ -45,6 +45,29 @@ except Exception:  # pragma: no cover — kernels layer absent
     _williamson2n_update = None
 
 
+def _rk_strong_orders(b, c):
+    """Documented strong orders of a driver-weighted RK scheme, from b.c.
+
+    The driver-weighted increment ``F.dX = f h + g dW`` makes the scheme's
+    SDE limit a function of ``sum_i b_i c_i`` alone: 0 gives the Ito
+    integral (Euler), 1/2 the Stratonovich one (every order->=2 scheme).
+    Schemes with ``b.c = 1/2`` additionally reproduce the Milstein
+    ``(1/2) g g' dW^2`` term through their stage evaluations, so they are
+    strong order 1 for commutative (componentwise-diagonal / scalar) noise
+    and order 1 for additive noise; ``b.c = 0`` stays at the Euler rates.
+    General non-commutative noise is order 1/2 for all of them.
+    """
+    bc = float(sum(bi * ci for bi, ci in zip(b, c)))
+    if abs(bc - 0.5) < 1e-12:
+        return "stratonovich", {"diagonal": 1.0, "scalar": 1.0,
+                                "additive": 1.0, "general": 0.5}
+    if bc == 0.0:
+        return "ito", {"diagonal": 0.5, "scalar": 0.5,
+                       "additive": 1.0, "general": 0.5}
+    return None, {"diagonal": 0.5, "scalar": 0.5,
+                  "additive": 1.0, "general": 0.5}
+
+
 def _resolve_use_kernels(use_kernels, use_kernel):
     """One boolean from the current flag and its pre-PR-4 spelling.
 
@@ -61,10 +84,13 @@ def _resolve_use_kernels(use_kernels, use_kernel):
 
 __all__ = [
     "SDETerm",
+    "VALID_NOISE",
     "ButcherSolver",
     "LowStorageSolver",
     "ReversibleHeun",
     "MCFSolver",
+    "Milstein",
+    "SRKAdditive",
     "ees25_solver",
     "ees27_solver",
     # Re-exported from .pytree for backwards compatibility — the canonical
@@ -78,6 +104,13 @@ __all__ = [
 
 # -- SDE term ----------------------------------------------------------------
 
+#: Noise structures an :class:`SDETerm` may declare, from most to least
+#: specialized: "none" (ODE), "scalar" (one shared channel), "additive"
+#: (state/time-independent diffusion), "diagonal" (elementwise channels),
+#: "general" (full (d, m) diffusion matrix).
+VALID_NOISE = ("none", "diagonal", "additive", "scalar", "general")
+
+
 @dataclasses.dataclass(frozen=True)
 class SDETerm:
     """Drift + diffusion with a declared noise structure.
@@ -85,15 +118,38 @@ class SDETerm:
     noise:
       * "none"     — ODE; ``diffusion`` is ignored.
       * "diagonal" — ``diffusion(t,y,args)`` has the same pytree structure as
-        ``y``; ``dW`` likewise; the product is elementwise.  (Additive noise is
-        the special case where ``diffusion`` ignores ``y``.)
+        ``y``; ``dW`` likewise; the product is elementwise.
+      * "additive" — diagonal arithmetic, plus the *contract* that
+        ``diffusion`` is independent of ``t`` and ``y`` (it may depend on
+        ``args``, e.g. a learned constant).  Declaring it unlocks the bulk
+        fast path: :func:`~repro.core.adjoint.solve` pre-weights the whole
+        increment buffer ``g . dW`` in one pass and the step loop never
+        evaluates ``diffusion`` again (bitwise-equal to the diagonal route).
+      * "scalar"   — ONE Brownian channel shared by every state component:
+        ``dW`` is a scalar, ``diffusion`` matches the state pytree, the
+        product broadcasts.
       * "general"  — array state ``(..., d)``; ``diffusion`` returns
         ``(..., d, m)``; ``dW`` is ``(..., m)``.
+
+    The mode is validated at construction (not mid-``combine``, mid-jit) so a
+    typo fails with the offending name before any tracing starts.
     """
 
     drift: Callable[..., Any]
     diffusion: Optional[Callable[..., Any]] = None
     noise: str = "diagonal"
+
+    def __post_init__(self):
+        if self.noise not in VALID_NOISE:
+            raise ValueError(
+                f"unknown noise mode {self.noise!r} for SDETerm; valid modes: "
+                + ", ".join(repr(n) for n in VALID_NOISE)
+            )
+        if self.noise != "none" and self.diffusion is None:
+            raise ValueError(
+                f"SDETerm(noise={self.noise!r}) requires a diffusion callable; "
+                "only noise='none' (ODE mode) may omit it"
+            )
 
     def evals(self, t, y, args):
         """Vector-field evaluation, returned as a (f, g) pair."""
@@ -104,28 +160,70 @@ class SDETerm:
     def combine(self, f, g, h, dW, use_kernels: bool = False):
         """f * h + g . dW  (the driver-weighted increment).
 
-        ``use_kernels=True`` routes diagonal/general noise through the fused
-        :mod:`repro.kernels.sde_step` op (single pass on TPU, ``ref.py``-twin
-        arithmetic elsewhere); the default path is the classic tree_map chain,
-        bitwise-unchanged.
+        ``use_kernels=True`` routes diagonal/additive/general noise through
+        the fused :mod:`repro.kernels.sde_step` op (single pass on TPU,
+        ``ref.py``-twin arithmetic elsewhere); the default path is the classic
+        tree_map chain, bitwise-unchanged.  Additive noise shares the
+        diagonal kernel (identical elementwise arithmetic); scalar noise
+        stays on the plain path (its ``dW`` is a broadcast scalar).
         """
         if self.noise == "none" or g is None:
             return tree_scale(h, f)
         if use_kernels and _fused_ops is not None and self.noise in (
-                "diagonal", "general"):
-            return _fused_ops.tree_increment(f, g, dW, h, noise=self.noise)
+                "diagonal", "additive", "general"):
+            kernel_noise = "diagonal" if self.noise == "additive" else self.noise
+            return _fused_ops.tree_increment(f, g, dW, h, noise=kernel_noise)
         out = tree_scale(h, f)
-        if self.noise == "diagonal":
+        if self.noise in ("diagonal", "additive"):
             return jax.tree_util.tree_map(lambda o, gi, wi: o + gi * wi, out, g, dW)
-        if self.noise == "general":
-            return jax.tree_util.tree_map(
-                lambda o, gi, wi: o + jnp.einsum("...dm,...m->...d", gi, wi), out, g, dW
-            )
-        raise ValueError(f"unknown noise mode {self.noise!r}")
+        if self.noise == "scalar":
+            return jax.tree_util.tree_map(lambda o, gi: o + gi * dW, out, g)
+        return jax.tree_util.tree_map(
+            lambda o, gi, wi: o + jnp.einsum("...dm,...m->...d", gi, wi), out, g, dW
+        )
 
     def increment(self, t, y, args, h, dW, use_kernels: bool = False):
         f, g = self.evals(t, y, args)
         return self.combine(f, g, h, dW, use_kernels=use_kernels)
+
+
+@dataclasses.dataclass(frozen=True)
+class _PrediffusedTerm:
+    """An additive-noise term whose diffusion increments were pre-weighted.
+
+    Built by :func:`repro.core.adjoint.solve` when an ``"additive"`` term
+    meets the bulk Brownian buffer under the full/recursive adjoints: the
+    whole ``g . dW`` buffer is computed in ONE pass (``g`` is t/y-independent
+    by the additive contract) and the per-step ``dW`` handed to solvers is
+    *already* the diffusion increment — ``combine`` is just ``f*h + w``,
+    one fewer operand stream per stage (see the ``"prediffused"`` fused
+    kernel variants).  Bitwise-equal to the standard additive route: the
+    multiply ``g*dW`` is the same IEEE multiply, merely hoisted out of the
+    scan.
+    """
+
+    base: SDETerm
+    noise: str = "prediffused"
+
+    @property
+    def drift(self):
+        return self.base.drift
+
+    def evals(self, t, y, args):
+        f = self.base.drift(t, y, args)
+        # Placeholder diffusion: ``combine`` ignores it (dW is pre-weighted),
+        # but solvers that gate their fused path on ``g is None`` (and
+        # Reversible Heun, which carries g in its scan state) need an array.
+        return f, jax.tree_util.tree_map(jnp.ones_like, f)
+
+    def combine(self, f, g, h, dW, use_kernels: bool = False):
+        if use_kernels and _fused_ops is not None:
+            return _fused_ops.tree_increment(f, None, dW, h, noise="prediffused")
+        return jax.tree_util.tree_map(lambda fi, wi: fi * h + wi, f, dW)
+
+    def increment(self, t, y, args, h, dW, use_kernels: bool = False):
+        f = self.base.drift(t, y, args)
+        return self.combine(f, None, h, dW, use_kernels=use_kernels)
 
 
 # -- Butcher-form RK solver ---------------------------------------------------
@@ -146,6 +244,7 @@ class ButcherSolver:
         self.evals_per_step = tab.stages
         self.is_reversible = tab.sym_order > tab.order  # effectively symmetric
         self.use_kernels = bool(use_kernels) and _fused_ops is not None
+        self.sde_form, self.strong_orders = _rk_strong_orders(tab.b, tab.c)
 
     def init(self, term, t0, y0, args):
         return y0
@@ -227,6 +326,11 @@ class LowStorageSolver:
         # `use_kernel` is the pre-PR-4 spelling, kept so existing spec
         # strings ("ees25:use_kernel=True") keep selecting the fused path.
         self.use_kernels = _resolve_use_kernels(use_kernels, use_kernel)
+        # EES schemes are order 2 (b.c = 1/2): Stratonovich limit, order-1
+        # strong rate for commutative noise (see _rk_strong_orders).
+        self.sde_form = "stratonovich"
+        self.strong_orders = {"diagonal": 1.0, "scalar": 1.0,
+                              "additive": 1.0, "general": 0.5}
 
     def init(self, term, t0, y0, args):
         return y0
@@ -261,8 +365,13 @@ class LowStorageSolver:
         """
         ls = self.ls
         noise = getattr(term, "noise", "diagonal")
+        # Additive noise shares the diagonal stage kernel (same elementwise
+        # arithmetic); prediffused terms hit the cheaper f*h + w variant;
+        # scalar noise stays on the plain path (its dW is a broadcast scalar).
+        if noise == "additive":
+            noise = "diagonal"
         fused = (self.use_kernels and _fused_ops is not None
-                 and noise in ("diagonal", "general"))
+                 and noise in ("diagonal", "general", "prediffused"))
         y = state
         delta = tree_zeros_like(y)
         y_prev = y
@@ -323,6 +432,10 @@ class ReversibleHeun:
     name = "ReversibleHeun"
     evals_per_step = 1
     is_reversible = True
+    # Trapezoidal in the driver (b.c = 1/2): Stratonovich limit.
+    sde_form = "stratonovich"
+    strong_orders = {"diagonal": 1.0, "scalar": 1.0,
+                     "additive": 1.0, "general": 0.5}
 
     def __init__(self, use_kernels: bool = False):
         # Fused driver-weighted increments (repro.kernels.sde_step); the
@@ -376,6 +489,8 @@ class MCFSolver:
         self.evals_per_step = 2 * base.stages
         self.is_reversible = True
         self.use_kernels = self.base.use_kernels
+        self.sde_form = self.base.sde_form
+        self.strong_orders = self.base.strong_orders
 
     def _psi(self, term, z, t, h, dW, args):
         return tree_sub(self.base.step(term, z, t, h, dW, args), z)
@@ -410,6 +525,184 @@ class MCFSolver:
             ),
         )
         return (y, z)
+
+
+# -- Noise-specialized schemes -------------------------------------------------
+
+class Milstein:
+    """Milstein's method: Euler-Maruyama plus the first-order noise correction.
+
+        y' = y + f h + g dW + (1/2) (g . grad g) (dW^2 - h)     [Ito]
+        y' = y + f h + g dW + (1/2) (g . grad g) dW^2           [Stratonovich]
+
+    ``g . grad g`` is computed exactly with one ``jax.jvp`` of the diffusion
+    at tangent ``g``.  Strong order 1 for scalar noise (any ``g``), for
+    diagonal noise whose channels are componentwise (``g_i`` depends on
+    ``y_i`` only — the standard diagonal assumption), and trivially for
+    additive noise (the correction vanishes identically, recovering
+    order-1 Euler-Maruyama).  General (non-commutative) noise would need
+    full Levy areas and is rejected up front with the offending mode named.
+
+    ``form`` selects the Ito or Stratonovich correction; the two limits
+    differ by the usual ``-(1/2) g g' h`` drift conversion.
+
+    ``reverse`` subtracts the full Milstein increment evaluated at the step's
+    endpoint — O(h^{3/2}) per-step reconstruction error.  (The naive
+    negated-driver replay used by the RK schemes would NOT work here: the
+    correction is even in ``dW``, so it fails to cancel at O(h).)  Prefer the
+    full/recursive adjoints for training; the reversible adjoint runs but
+    reconstructs with O(sqrt h) accumulated drift.
+    """
+
+    evals_per_step = 2  # one drift + one diffusion (the jvp re-uses the latter)
+    is_reversible = False
+    # Reads term.diffusion directly (for the jvp) — opt out of the
+    # prediffused additive fast path (see adjoint._maybe_prediffuse).
+    needs_diffusion = True
+    #: documented strong convergence order per supported noise mode
+    strong_orders = {"diagonal": 1.0, "scalar": 1.0, "additive": 1.0}
+
+    def __init__(self, form: str = "ito", use_kernels: bool = False):
+        if form not in ("ito", "stratonovich"):
+            raise ValueError(
+                f"unknown Milstein form {form!r}; valid forms: 'ito', "
+                "'stratonovich'"
+            )
+        self.form = form
+        self.sde_form = form  # the correction pins the interpretation directly
+        self.name = f"Milstein-{form}"
+        self.use_kernels = bool(use_kernels) and _fused_ops is not None
+
+    def init(self, term, t0, y0, args):
+        noise = getattr(term, "noise", "diagonal")
+        if noise not in ("none", "diagonal", "additive", "scalar"):
+            raise ValueError(
+                f"Milstein does not support noise={noise!r}: general "
+                "(non-commutative) noise needs full Levy areas; supported "
+                "modes: 'diagonal', 'additive', 'scalar', 'none'"
+            )
+        return y0
+
+    def extract(self, state):
+        return state
+
+    def _correction(self, term, t, y, g, h, dW, args):
+        """(1/2) (g . grad g) (dW^2 [- h]) as a pytree increment."""
+
+        def g_fn(yy):
+            return term.diffusion(t, yy, args)
+
+        _, gdg = jax.jvp(g_fn, (y,), (g,))
+        if getattr(term, "noise", "diagonal") == "scalar":
+            w2 = dW * dW - h if self.form == "ito" else dW * dW
+            return jax.tree_util.tree_map(lambda d: 0.5 * d * w2, gdg)
+        if self.form == "ito":
+            return jax.tree_util.tree_map(
+                lambda d, w: 0.5 * d * (w * w - h), gdg, dW)
+        return jax.tree_util.tree_map(lambda d, w: 0.5 * d * (w * w), gdg, dW)
+
+    def _increment(self, term, y, t, h, dW, args):
+        f, g = term.evals(t, y, args)
+        inc = term.combine(f, g, h, dW, use_kernels=self.use_kernels)
+        if g is None:
+            return inc
+        return tree_add(inc, self._correction(term, t, y, g, h, dW, args))
+
+    def step(self, term, state, t, h, dW, args):
+        return tree_add(state, self._increment(term, state, t, h, dW, args))
+
+    def step_with_error(self, term, state, t, h, dW, args):
+        """Milstein step with the Ito/Stratonovich correction as the embedded
+        error estimate (the difference from the order-1/2 Euler companion)."""
+        f, g = term.evals(t, state, args)
+        euler = term.combine(f, g, h, dW, use_kernels=self.use_kernels)
+        out = tree_add(state, euler)
+        if g is None:
+            return out, tree_zeros_like(out)
+        corr = self._correction(term, t, state, g, h, dW, args)
+        return tree_add(out, corr), corr
+
+    def reverse(self, term, state, t, h, dW, args):
+        # Subtract the increment re-evaluated at the endpoint (time t + h).
+        return tree_sub(state, self._increment(term, state, t + h, h, dW, args))
+
+
+class SRKAdditive:
+    """SRA1 (Roessler 2010): strong order 1.5 for additive noise.
+
+    Two drift stages plus the space-time Levy area ``DH`` (with
+    ``DZ = h (DH + DW/2)`` the time-integrated Brownian bridge)::
+
+        k1 = f(t, y)
+        y2 = y + (3/4) h k1 + (3/2) g (DH + DW/2)
+        y' = y + h (k1/3 + 2 k2/3) + g DW,     k2 = f(t + 3h/4, y2)
+
+    The driver increment is the *pair* ``(dW, dH)`` — solvers advertising
+    ``needs_levy_area`` receive it from the Levy-augmented driver queries
+    (:meth:`repro.core.brownian.VirtualBrownianTree.levy_area` /
+    ``grid_levy_increments``), so bulk realization, adaptive grids, and the
+    reversible adjoint's backward re-queries all keep working.  ``reverse``
+    replays with the whole pair negated (the scheme is a stage-2 RK in the
+    driver, so the negated replay inverts to O(h^2) per step).
+    """
+
+    name = "SRA1"
+    evals_per_step = 2
+    is_reversible = False
+    needs_levy_area = True
+    # Reads term.diffusion directly — opt out of the prediffused fast path.
+    needs_diffusion = True
+    sde_form = "ito"  # == stratonovich: additive noise has no correction
+    #: documented strong convergence order per supported noise mode
+    strong_orders = {"additive": 1.5}
+
+    def __init__(self, noise: str = "additive"):
+        if noise != "additive":
+            raise ValueError(
+                f"srk supports noise='additive' only (t/y-independent "
+                f"diffusion), got noise={noise!r}"
+            )
+
+    def init(self, term, t0, y0, args):
+        noise = getattr(term, "noise", "diagonal")
+        if noise != "additive":
+            raise ValueError(
+                f"SRA1 requires an SDETerm with noise='additive', got "
+                f"noise={noise!r} — declare the term additive (diffusion "
+                "independent of t and y) or pick another solver"
+            )
+        return y0
+
+    def extract(self, state):
+        return state
+
+    def step(self, term, state, t, h, dW_pair, args):
+        dW, dH = dW_pair
+        y = state
+        k1 = term.drift(t, y, args)
+        g = term.diffusion(t, y, args)
+        # DZ/h = dH + dW/2 (exact scalar weights; no h division).
+        y2 = jax.tree_util.tree_map(
+            lambda yi, ki, gi, wi, hi: yi + 0.75 * h * ki
+            + 1.5 * gi * (hi + 0.5 * wi),
+            y, k1, g, dW, dH)
+        k2 = term.drift(t + 0.75 * h, y2, args)
+        third = 1.0 / 3.0
+        return jax.tree_util.tree_map(
+            lambda yi, a, b, gi, wi: yi + h * (third * a + 2.0 * third * b)
+            + gi * wi,
+            y, k1, k2, g, dW)
+
+    def step_with_error(self, term, state, t, h, dW_pair, args):
+        """SRA1 step with its Euler companion as the embedded estimate."""
+        dW, _ = dW_pair
+        out = self.step(term, state, t, h, dW_pair, args)
+        f, g = term.evals(t, state, args)
+        y_low = tree_add(state, term.combine(f, g, h, dW))
+        return out, tree_sub(out, y_low)
+
+    def reverse(self, term, state, t, h, dW_pair, args):
+        return self.step(term, state, t + h, -h, tree_scale(-1.0, dW_pair), args)
 
 
 def ees25_solver(x: float = 0.1, use_kernels: Optional[bool] = None,

@@ -152,10 +152,44 @@ def _increment_bwd(mode, noise, res, ct):
 _increment.defvjp(_increment_fwd, _increment_bwd)
 
 
+# -- prediffused increment (additive fast path: dW is already g.dW) ----------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _increment_pre(mode: str, f, w, h):
+    if mode == "ref":
+        return _ref.increment_pre_ref(f, w, h)
+    out = _k.increment_pre_2d(_to2d(f), _to2d(w), _h_arr(h, f.dtype),
+                              interpret=mode == "interpret")
+    return _from2d(out, f.shape, f.size)
+
+
+def _increment_pre_fwd(mode, f, w, h):
+    return _increment_pre(mode, f, w, h), (f, h)
+
+
+def _increment_pre_bwd(mode, res, ct):
+    f, h = res
+    ct_h = jnp.sum(f * ct).astype(h.dtype).reshape(jnp.shape(h))
+    return h * ct, ct, ct_h
+
+
+_increment_pre.defvjp(_increment_pre_fwd, _increment_pre_bwd)
+
+
 def fused_increment(f, g, dW, h, *, noise: str, interpret: bool = False):
-    """``k = f*h + g.dW`` for one leaf; fused on TPU, ref elsewhere."""
+    """``k = f*h + g.dW`` for one leaf; fused on TPU, ref elsewhere.
+
+    ``noise="prediffused"`` takes ``dW`` as the pre-weighted ``g.dW``
+    increment (``g`` is ignored) — the additive fast path's cheaper variant.
+    """
+    if noise == "prediffused":
+        return _increment_pre(_mode(f, interpret), f, dW,
+                              jnp.asarray(h, f.dtype))
     if noise not in ("diagonal", "general"):
-        raise ValueError(f"unknown noise mode {noise!r}")
+        raise ValueError(
+            f"unknown noise mode {noise!r}; valid kernel modes: 'diagonal', "
+            "'general', 'prediffused'"
+        )
     aligned = noise == "diagonal" or (
         f.shape[-1] % _k.SUBLANE == 0 and dW.shape[-1] % _k.LANE == 0)
     mode = _mode(f, interpret, aligned)
@@ -213,11 +247,48 @@ def _ws_stage_bwd(mode, noise, a, b, res, ct):
 _ws_stage.defvjp(_ws_stage_fwd, _ws_stage_bwd)
 
 
+# -- prediffused Williamson stage ---------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ws_stage_pre(mode: str, a: float, b: float, delta, y, f, w, h):
+    if mode == "ref":
+        return _ref.ws_stage_pre_ref(delta, y, f, w, h, a, b)
+    d2, y2 = _k.ws_stage_pre_2d(
+        _to2d(delta), _to2d(y), _to2d(f), _to2d(w), _h_arr(h, f.dtype),
+        a=a, b=b, interpret=mode == "interpret")
+    return _from2d(d2, delta.shape, delta.size), _from2d(y2, y.shape, y.size)
+
+
+def _ws_stage_pre_fwd(mode, a, b, delta, y, f, w, h):
+    return _ws_stage_pre(mode, a, b, delta, y, f, w, h), (f, h)
+
+
+def _ws_stage_pre_bwd(mode, a, b, res, ct):
+    f, h = res
+    ct_d2, ct_y2 = ct
+    common = ct_d2 + b * ct_y2
+    ct_h = jnp.sum(f * common).astype(h.dtype).reshape(jnp.shape(h))
+    return a * common, ct_y2, h * common, common, ct_h
+
+
+_ws_stage_pre.defvjp(_ws_stage_pre_fwd, _ws_stage_pre_bwd)
+
+
 def fused_ws_stage(delta, y, f, g, dW, h, *, a: float, b: float, noise: str,
                    interpret: bool = False):
-    """One fused Williamson stage for one leaf: returns ``(delta', y')``."""
+    """One fused Williamson stage for one leaf: returns ``(delta', y')``.
+
+    ``noise="prediffused"``: ``dW`` is already the diffusion increment
+    ``g.dW`` and ``g`` is ignored — one fewer operand stream per stage.
+    """
+    if noise == "prediffused":
+        return _ws_stage_pre(_mode(f, interpret), float(a), float(b),
+                             delta, y, f, dW, jnp.asarray(h, f.dtype))
     if noise not in ("diagonal", "general"):
-        raise ValueError(f"unknown noise mode {noise!r}")
+        raise ValueError(
+            f"unknown noise mode {noise!r}; valid kernel modes: 'diagonal', "
+            "'general', 'prediffused'"
+        )
     aligned = noise == "diagonal" or (
         f.shape[-1] % _k.SUBLANE == 0 and dW.shape[-1] % _k.LANE == 0)
     mode = _mode(f, interpret, aligned)
@@ -260,7 +331,16 @@ def fused_axpy_chain(y, incs, coeffs, *, interpret: bool = False):
 # -- pytree layer (what core/solvers.py calls) --------------------------------
 
 def tree_increment(f, g, dW, h, *, noise: str, interpret: bool = False):
-    """Leafwise :func:`fused_increment` over matching state pytrees."""
+    """Leafwise :func:`fused_increment` over matching state pytrees.
+
+    ``noise="prediffused"`` maps over ``(f, dW)`` only (``g`` is None — the
+    increment buffer is already diffusion-weighted).
+    """
+    if noise == "prediffused":
+        return jax.tree_util.tree_map(
+            lambda fi, wi: fused_increment(fi, None, wi, h, noise=noise,
+                                           interpret=interpret),
+            f, dW)
     return jax.tree_util.tree_map(
         lambda fi, gi, wi: fused_increment(fi, gi, wi, h, noise=noise,
                                            interpret=interpret),
@@ -277,11 +357,16 @@ def tree_ws_stage(delta, y, f, g, dW, h, a: float, b: float, *, noise: str,
     """
     d_leaves, treedef = jax.tree_util.tree_flatten(delta)
     leaves = lambda t: treedef.flatten_up_to(t)
+    if noise == "prediffused":
+        # g is a placeholder (dW is already g.dW): pair each leaf with None.
+        g_leaves = [None] * len(d_leaves)
+    else:
+        g_leaves = leaves(g)
     pairs = [
         fused_ws_stage(di, yi, fi, gi, wi, h, a=a, b=b, noise=noise,
                        interpret=interpret)
         for di, yi, fi, gi, wi in zip(d_leaves, leaves(y), leaves(f),
-                                      leaves(g), leaves(dW))
+                                      g_leaves, leaves(dW))
     ]
     delta2 = treedef.unflatten([p[0] for p in pairs])
     y2 = treedef.unflatten([p[1] for p in pairs])

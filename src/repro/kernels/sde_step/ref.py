@@ -20,6 +20,11 @@ def increment_general_ref(f, g, dW, h):
     return f * h + jnp.einsum("...dm,...m->...d", g, dW)
 
 
+def increment_pre_ref(f, w, h):
+    """k = f*h + w (prediffused additive noise: ``w`` is already ``g.dW``)."""
+    return f * h + w
+
+
 def ws_stage_diag_ref(delta, y, f, g, dW, h, a: float, b: float):
     """One fused Williamson 2N stage under diagonal noise.
 
@@ -34,6 +39,15 @@ def ws_stage_diag_ref(delta, y, f, g, dW, h, a: float, b: float):
 def ws_stage_general_ref(delta, y, f, g, dW, h, a: float, b: float):
     """One fused Williamson 2N stage under general (einsum) noise."""
     k = f * h + jnp.einsum("...dm,...m->...d", g, dW)
+    d2 = a * delta + k
+    y2 = y + b * d2
+    return d2, y2
+
+
+def ws_stage_pre_ref(delta, y, f, w, h, a: float, b: float):
+    """One fused Williamson 2N stage with a prediffused increment ``w = g.dW``:
+    one fewer operand stream than the diagonal variant."""
+    k = f * h + w
     d2 = a * delta + k
     y2 = y + b * d2
     return d2, y2

@@ -72,6 +72,26 @@ def increment_diag_2d(f, g, dw, h, *, block_rows: int = 256, interpret: bool = F
     )(f, g, dw, h)
 
 
+def _increment_pre_kernel(f_ref, w_ref, h_ref, out_ref):
+    h = h_ref[0, 0]
+    out_ref[...] = f_ref[...] * h + w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def increment_pre_2d(f, w, h, *, block_rows: int = 256, interpret: bool = False):
+    """k = f*h + w (prediffused: ``w`` is the pre-weighted ``g.dW`` buffer row)."""
+    grid, block_rows = _row_grid(f.shape[0], block_rows)
+    spec = _row_spec(block_rows)
+    return pl.pallas_call(
+        _increment_pre_kernel,
+        grid=grid,
+        in_specs=[spec, spec, _SCALAR_SPEC],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
+        interpret=interpret,
+    )(f, w, h)
+
+
 def _increment_general_kernel(f_ref, g_ref, dw_ref, h_ref, out_ref):
     h = h_ref[0, 0]
     gdw = jax.lax.dot_general(
@@ -167,6 +187,39 @@ def ws_stage_diag_bwd_2d(ct_d2, ct_y2, g, dw, h, *, a: float, b: float,
         out_shape=[shp] * 4,
         interpret=interpret,
     )(ct_d2, ct_y2, g, dw, h)
+
+
+def _ws_stage_pre_kernel(a, b, delta_ref, y_ref, f_ref, w_ref, h_ref,
+                         dout_ref, yout_ref):
+    h = h_ref[0, 0]
+    k = f_ref[...] * h + w_ref[...]
+    d2 = a * delta_ref[...] + k
+    dout_ref[...] = d2
+    yout_ref[...] = y_ref[...] + b * d2
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "block_rows", "interpret"))
+def ws_stage_pre_2d(delta, y, f, w, h, *, a: float, b: float,
+                    block_rows: int = 256, interpret: bool = False):
+    """Fused prediffused stage: ``k = f*h + w; delta' = a*delta + k;
+    y' = y + b*delta'`` — the additive fast path's one-fewer-stream variant
+    (no diffusion operand; ``w`` is already ``g.dW``).  The backward pass is
+    the plain XLA expression in ``ops.py`` (two outputs from four inputs is
+    already bandwidth-optimal there, matching the general-noise precedent).
+    """
+    grid, block_rows = _row_grid(delta.shape[0], block_rows)
+    spec = _row_spec(block_rows)
+    return pl.pallas_call(
+        functools.partial(_ws_stage_pre_kernel, a, b),
+        grid=grid,
+        in_specs=[spec] * 4 + [_SCALAR_SPEC],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(delta.shape, delta.dtype),
+            jax.ShapeDtypeStruct(y.shape, y.dtype),
+        ],
+        interpret=interpret,
+    )(delta, y, f, w, h)
 
 
 def _ws_stage_general_kernel(a, b, delta_ref, y_ref, f_ref, g_ref, dw_ref,

@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import parse_solver_spec, select_solver
 from .executor import TickExecutor
 from .scheduler import (
     STAT_FIELDS,
@@ -177,6 +178,11 @@ class SDESampleEngine:
             ``"ees25:adaptive"``, ...  An ``adaptive`` flag switches the
             request to tolerance-driven stepping on a Virtual Brownian Tree;
             ``n_steps`` then bounds trial steps instead of fixing a grid.
+            ``"auto"`` (or ``"auto:stiffness=<lam>"``) defers the choice to
+            :func:`repro.core.registry.select_solver`, fed with the engine
+            term's declared noise mode and the request's step size — the
+            resolved spec is what gets compiled and cached, so two requests
+            that auto-select the same solver share an executable.
         t0, t1:
             Integration window (``t1 > t0``).
         n_steps:
@@ -216,6 +222,19 @@ class SDESampleEngine:
         >>> eng.run()[rid].ys.shape
         (1000, 3, ...)
         """
+        if isinstance(solver, str):
+            name, auto_kw = parse_solver_spec(solver)
+            if name == "auto":
+                unknown = set(auto_kw) - {"stiffness", "noise"}
+                if unknown:
+                    raise ValueError(
+                        f"unknown option {sorted(unknown)[0]!r} for solver "
+                        "'auto'; valid keys: noise, stiffness"
+                    )
+                auto_kw.setdefault(
+                    "noise", getattr(self.term, "noise", "diagonal"))
+                solver = select_solver(
+                    dt=(t1 - t0) / max(int(n_steps), 1), **auto_kw)
         term_kind = ("manifold" if hasattr(self.term, "algebra_increment")
                      else "euclidean")
         # Validate against the *peeked* id: a rejected submit must not burn

@@ -1,0 +1,400 @@
+"""Noise-mode taxonomy: construction/parse-time validation, the additive
+fast path's bitwise equality to the general route, the scalar single-channel
+contract, prediffused-kernel parity, and engine round-trips for every new
+registry spec.
+
+Four layers of the PR-7 solver zoo under one roof:
+
+* **Validation** — every malformed noise mode, solver form, or spec kwarg
+  fails at construction/parse time with the offending name in the message
+  (not a ``TypeError`` from deep inside a factory or a trace).
+* **Additive fast path** — declaring ``noise="additive"`` pre-weights the
+  bulk diffusion increments once (``_PrediffusedTerm``); results must be
+  *bitwise* equal to the same callables declared ``"diagonal"`` and to the
+  per-step (non-bulk) route, across all three adjoints and with fused
+  kernels on/off.
+* **Scalar noise** — one shared Brownian channel: the inferred increment is
+  a scalar, so every state component sees the same noise.
+* **Serving** — each new spec string (``"milstein"``, ``"strat-milstein"``,
+  ``"srk:noise=additive"``, ``"auto"``, ``"auto:stiffness=..."``) round-trips
+  through the engine; ``"auto"`` resolves to the same executable as the
+  explicit spec it selects.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Milstein,
+    SDETerm,
+    SRKAdditive,
+    get_solver,
+    sdeint,
+    select_solver,
+)
+from repro.core.grid import TimeGrid
+from repro.kernels.sde_step import ops as sops
+from repro.kernels.sde_step import ref as sref
+from repro.serving import SDESampleConfig, SDESampleEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _args():
+    return {"nu": jnp.asarray(0.4), "mu": jnp.asarray(0.1),
+            "sigma": jnp.asarray(0.7)}
+
+
+def _term(noise):
+    """OU-type term whose diffusion is t/y-independent (additive-eligible),
+    so the same callables can be declared additive or diagonal."""
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+        noise=noise,
+    )
+
+
+def _general_term():
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.stack(
+            [jnp.ones_like(y), 0.5 * y], axis=-1),
+        noise="general",
+    )
+
+
+def _n(i, shape, dtype=jnp.float64):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Validation: every error names the offender.
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def test_sdeterm_unknown_noise(self):
+        with pytest.raises(ValueError,
+                           match=re.escape("unknown noise mode 'bogus' for SDETerm")):
+            SDETerm(drift=lambda t, y, a: y, noise="bogus")
+
+    def test_sdeterm_noise_without_diffusion(self):
+        with pytest.raises(ValueError,
+                           match=re.escape("requires a diffusion callable")):
+            SDETerm(drift=lambda t, y, a: y, noise="additive")
+
+    def test_ode_mode_omits_diffusion(self):
+        SDETerm(drift=lambda t, y, a: y, noise="none")  # must not raise
+
+    def test_milstein_unknown_form(self):
+        with pytest.raises(ValueError,
+                           match=re.escape("unknown Milstein form 'heun'")):
+            Milstein(form="heun")
+
+    def test_milstein_rejects_general_noise(self):
+        with pytest.raises(ValueError,
+                           match=re.escape("Milstein does not support noise='general'")):
+            Milstein().init(_general_term(), 0.0, jnp.ones(4), _args())
+
+    def test_srk_unknown_noise_kwarg(self):
+        with pytest.raises(ValueError,
+                           match=re.escape("srk supports noise='additive' only")):
+            SRKAdditive(noise="diagonal")
+
+    def test_srk_rejects_non_additive_term(self):
+        with pytest.raises(ValueError,
+                           match=re.escape("SRA1 requires an SDETerm with noise='additive'")):
+            SRKAdditive().init(_term("diagonal"), 0.0, jnp.ones(4), _args())
+
+    @pytest.mark.parametrize("spec,name", [
+        ("ees25:bogus=1", "ees25"),
+        ("milstein:from=ito", "milstein"),
+        ("srk:stiffness=2", "srk"),
+    ])
+    def test_registry_unknown_spec_key(self, spec, name):
+        key = spec.partition(":")[2].partition("=")[0]
+        with pytest.raises(ValueError, match=re.escape(
+                f"unknown option {key!r} for solver {name!r}; valid keys:")):
+            get_solver(spec)
+
+    def test_registry_adaptive_flag_still_accepted(self):
+        assert get_solver("ees25:adaptive").adaptive is True
+
+    def test_select_solver_unknown_noise(self):
+        with pytest.raises(ValueError, match=re.escape(
+                "unknown noise mode 'weird' for select_solver")):
+            select_solver(noise="weird")
+
+    def test_engine_auto_unknown_key(self):
+        eng = SDESampleEngine(_term("diagonal"), jnp.ones(3),
+                              SDESampleConfig(slots=2))
+        with pytest.raises(ValueError, match=re.escape(
+                "unknown option 'foo' for solver 'auto'")):
+            eng.submit("auto:foo=1", t1=1.0, n_steps=8, n_paths=2)
+
+    def test_grid_levy_requires_driver(self):
+        grid = TimeGrid.uniform(0.0, 1.0, 4)
+        with pytest.raises(ValueError,
+                           match=re.escape("no Brownian driver (ODE mode)")):
+            grid.levy_increment(0)
+
+    def test_grid_levy_requires_capable_driver(self):
+        class NoLevy:
+            t0, t1 = 0.0, 1.0
+
+            def increment_over(self, s, t):
+                return jnp.zeros(())
+
+            def grid_increment(self, ts, n):
+                return jnp.zeros(())
+
+        grid = TimeGrid.uniform(0.0, 1.0, 4, driver=NoLevy())
+        with pytest.raises(ValueError, match=re.escape(
+                "NoLevy has no grid_levy_increment")):
+            grid.levy_increment(0)
+
+
+class TestSelectSolver:
+    @pytest.mark.parametrize("kw,expect", [
+        (dict(noise="additive", stiffness=0.5, dt=0.01), "srk:noise=additive"),
+        (dict(noise="diagonal", stiffness=0.5, dt=0.01), "milstein"),
+        (dict(noise="scalar", stiffness=0.5, dt=0.01), "milstein"),
+        (dict(noise="general", stiffness=0.5, dt=0.01), "ees25"),
+        (dict(noise="none"), "ees25"),
+        (dict(noise="additive", stiffness=30.0, dt=0.05), "ees25"),
+        (dict(noise="diagonal", stiffness=100.0, dt=0.05), "ees27"),
+    ])
+    def test_decision_table(self, kw, expect):
+        spec = select_solver(**kw)
+        assert spec == expect
+        get_solver(spec)  # every selectable spec must resolve
+
+
+# ---------------------------------------------------------------------------
+# Additive fast path: bitwise-equal to the general (diagonal) route.
+# ---------------------------------------------------------------------------
+
+ADJOINTS = ("full", "recursive", "reversible")
+
+
+class TestAdditiveFastPath:
+    def _run(self, noise, *, adjoint, use_kernels=None, bulk=True,
+             spec="ees25"):
+        keys = jax.random.split(KEY, 3)
+        overrides = {} if use_kernels is None else {"use_kernels": use_kernels}
+        return sdeint(
+            _term(noise), get_solver(spec, **overrides),
+            0.0, 1.0, 16, jnp.ones(4, jnp.float64), None, args=_args(),
+            batch_keys=keys, adjoint=adjoint, bulk_increments=bulk,
+        ).y_final
+
+    @pytest.mark.parametrize("adjoint", ADJOINTS)
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_bitwise_vs_diagonal_relabel(self, adjoint, use_kernels):
+        """Same callables, same keys: declaring additive must not move a bit
+        (the fast path hoists the identical IEEE multiply out of the scan)."""
+        add = self._run("additive", adjoint=adjoint, use_kernels=use_kernels)
+        diag = self._run("diagonal", adjoint=adjoint, use_kernels=use_kernels)
+        np.testing.assert_array_equal(np.asarray(add), np.asarray(diag))
+
+    @pytest.mark.parametrize("adjoint", ADJOINTS)
+    def test_per_step_route_bitwise_vs_diagonal(self, adjoint):
+        """The per-step route never prediffuses: additive must STILL match
+        the diagonal relabel bitwise there, and bulk-vs-per-step drift stays
+        at the same sub-ulp level the diagonal route already exhibits (the
+        streamed-buffer scan compiles to a slightly different fusion than the
+        inline-RNG scan — pre-existing, not a fast-path artifact)."""
+        add_step = self._run("additive", adjoint=adjoint, bulk=False)
+        diag_step = self._run("diagonal", adjoint=adjoint, bulk=False)
+        np.testing.assert_array_equal(np.asarray(add_step),
+                                      np.asarray(diag_step))
+        bulk = self._run("additive", adjoint=adjoint, bulk=True)
+        np.testing.assert_allclose(np.asarray(bulk), np.asarray(add_step),
+                                   rtol=1e-13, atol=1e-13)
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_bitwise_under_interpret_kernels(self, use_kernels):
+        with sops.force_interpret():
+            add = self._run("additive", adjoint="full",
+                            use_kernels=use_kernels)
+            diag = self._run("diagonal", adjoint="full",
+                             use_kernels=use_kernels)
+        np.testing.assert_array_equal(np.asarray(add), np.asarray(diag))
+
+    @pytest.mark.parametrize("adjoint", ADJOINTS)
+    def test_gradients_match_diagonal_relabel(self, adjoint):
+        keys = jax.random.split(KEY, 3)
+
+        def loss(sigma, noise):
+            a = {"nu": jnp.asarray(0.4), "mu": jnp.asarray(0.1),
+                 "sigma": sigma}
+            out = sdeint(_term(noise), "ees25", 0.0, 1.0, 16,
+                         jnp.ones(4, jnp.float64), None, args=a,
+                         batch_keys=keys, adjoint=adjoint)
+            return jnp.sum(out.y_final ** 2)
+
+        sig = jnp.asarray(0.7)
+        g_add = jax.grad(loss)(sig, "additive")
+        g_diag = jax.grad(loss)(sig, "diagonal")
+        assert np.isfinite(g_add) and float(g_add) != 0.0
+        np.testing.assert_allclose(np.asarray(g_add), np.asarray(g_diag),
+                                   rtol=1e-12)
+
+    def test_milstein_and_srk_bypass_prediffusion(self):
+        """Solvers that read term.diffusion directly (needs_diffusion) must
+        keep the raw term — the run still completes and stays finite."""
+        for spec in ("milstein", "srk:noise=additive"):
+            out = self._run("additive", adjoint="full", spec=spec)
+            assert np.isfinite(np.asarray(out)).all()
+
+
+class TestScalarNoise:
+    def test_one_shared_channel(self):
+        """Scalar noise draws ONE increment per step: with zero drift and
+        unit diffusion every state component integrates the same W."""
+        term = SDETerm(drift=lambda t, y, a: jnp.zeros_like(y),
+                       diffusion=lambda t, y, a: jnp.ones_like(y),
+                       noise="scalar")
+        yf = sdeint(term, "euler", 0.0, 1.0, 64,
+                    jnp.zeros(4, jnp.float64), KEY).y_final
+        assert yf.shape == (4,)
+        np.testing.assert_array_equal(np.asarray(yf),
+                                      np.full(4, float(yf[0])))
+        assert float(yf[0]) != 0.0
+
+    def test_milstein_runs_on_scalar_noise(self):
+        term = SDETerm(drift=lambda t, y, a: 0.3 * y,
+                       diffusion=lambda t, y, a: 0.4 * y,
+                       noise="scalar")
+        yf = sdeint(term, "milstein", 0.0, 1.0, 32,
+                    jnp.ones(3, jnp.float64), KEY).y_final
+        assert np.isfinite(np.asarray(yf)).all()
+
+
+# ---------------------------------------------------------------------------
+# Prediffused kernel variants: interpret-mode parity vs ref, incl. gradients.
+# ---------------------------------------------------------------------------
+
+
+class TestPrediffusedKernels:
+    def test_increment_pre_parity(self):
+        f, w = _n(1, (37,)), _n(2, (37,))
+        h = jnp.asarray(0.01, f.dtype)
+        ref = sref.increment_pre_ref(f, w, h)
+        with sops.force_interpret():
+            got = sops.fused_increment(f, None, w, h, noise="prediffused")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-12, atol=1e-12)
+
+    def test_increment_pre_gradients(self):
+        f, w = _n(3, (37,)), _n(4, (37,))
+        h = jnp.asarray(0.01, f.dtype)
+
+        def loss(op):
+            return lambda fa, wa, ha: jnp.sum(jnp.sin(op(fa, wa, ha)))
+
+        g_ref = jax.grad(loss(sref.increment_pre_ref), argnums=(0, 1, 2))(
+            f, w, h)
+        with sops.force_interpret():
+            g_fus = jax.grad(
+                loss(lambda fa, wa, ha: sops.fused_increment(
+                    fa, None, wa, ha, noise="prediffused")),
+                argnums=(0, 1, 2))(f, w, h)
+        for a, b in zip(g_fus, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-10, atol=1e-12)
+
+    def test_ws_stage_pre_parity(self):
+        delta, y, f, w = (_n(5 + i, (41,)) for i in range(4))
+        h = jnp.asarray(0.02, f.dtype)
+        a, b = 0.3, 0.7
+        d_ref, y_ref = sref.ws_stage_pre_ref(delta, y, f, w, h, a, b)
+        with sops.force_interpret():
+            d_got, y_got = sops.fused_ws_stage(
+                delta, y, f, None, w, h, a=a, b=b, noise="prediffused")
+        np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_ref),
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_ref),
+                                   rtol=1e-12, atol=1e-12)
+
+    def test_ws_stage_pre_gradients(self):
+        delta, y, f, w = (_n(15 + i, (41,)) for i in range(4))
+        h = jnp.asarray(0.02, f.dtype)
+        a, b = 0.3, 0.7
+
+        def loss(op):
+            def run(da, ya, fa, wa, ha):
+                d2, y2 = op(da, ya, fa, wa, ha)
+                return jnp.sum(jnp.cos(d2)) + jnp.sum(jnp.sin(y2))
+            return run
+
+        g_ref = jax.grad(
+            loss(lambda da, ya, fa, wa, ha: sref.ws_stage_pre_ref(
+                da, ya, fa, wa, ha, a, b)),
+            argnums=(0, 1, 2, 3, 4))(delta, y, f, w, h)
+        with sops.force_interpret():
+            g_fus = jax.grad(
+                loss(lambda da, ya, fa, wa, ha: sops.fused_ws_stage(
+                    da, ya, fa, None, wa, ha, a=a, b=b, noise="prediffused")),
+                argnums=(0, 1, 2, 3, 4))(delta, y, f, w, h)
+        for got, ref in zip(g_fus, g_ref):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-10, atol=1e-12)
+
+    def test_unknown_kernel_noise_mode(self):
+        f = _n(25, (8,))
+        with pytest.raises(ValueError, match=re.escape(
+                "unknown noise mode 'weird'")):
+            sops.fused_increment(f, f, f, 0.1, noise="weird")
+
+
+# ---------------------------------------------------------------------------
+# Serving round-trips: every new spec string through the engine.
+# ---------------------------------------------------------------------------
+
+
+class TestEngineSpecs:
+    def _engine(self, noise):
+        term = SDETerm(
+            drift=lambda t, y, a: -0.5 * y,
+            diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+            noise=noise,
+        )
+        return SDESampleEngine(term, jnp.ones(3), SDESampleConfig(slots=4))
+
+    @pytest.mark.parametrize("spec,noise", [
+        ("milstein", "diagonal"),
+        ("strat-milstein", "diagonal"),
+        ("srk:noise=additive", "additive"),
+    ])
+    def test_round_trip(self, spec, noise):
+        eng = self._engine(noise)
+        rid = eng.submit(spec, t1=1.0, n_steps=16, n_paths=4, seed=3)
+        out = eng.run()[rid]
+        assert out.y_final.shape == (4, 3)
+        assert np.isfinite(np.asarray(out.y_final)).all()
+
+    def test_auto_matches_explicit_srk(self):
+        """An additive-term engine auto-selects SRA1; the resolved spec is
+        what compiles, so 'auto' and the explicit spec are bit-identical."""
+        eng = self._engine("additive")
+        r_auto = eng.submit("auto", t1=1.0, n_steps=16, n_paths=4, seed=3)
+        r_expl = eng.submit("srk:noise=additive", t1=1.0, n_steps=16,
+                            n_paths=4, seed=3)
+        done = eng.run()
+        np.testing.assert_array_equal(done[r_auto].y_final,
+                                      done[r_expl].y_final)
+
+    def test_auto_stiffness_picks_ees27(self):
+        """z = 100 * (1/16) = 6.25 > 2.8: stiff requests land on EES27."""
+        eng = self._engine("diagonal")
+        r_auto = eng.submit("auto:stiffness=100", t1=1.0, n_steps=16,
+                            n_paths=4, seed=3)
+        r_expl = eng.submit("ees27", t1=1.0, n_steps=16, n_paths=4, seed=3)
+        done = eng.run()
+        np.testing.assert_array_equal(done[r_auto].y_final,
+                                      done[r_expl].y_final)

@@ -117,9 +117,19 @@ class TestRegistry:
             term = ou_term("diagonal")
         solver = get_solver(spec)
         y0 = jnp.array([0.4, -1.1, 0.8], dtype=jnp.float64)
-        state = solver.init(term, 0.0, y0, ARGS)
         h = 1e-4
         dW = jnp.sqrt(h) * jax.random.normal(KEY, y0.shape, jnp.float64)
+        if getattr(solver, "needs_levy_area", False):
+            # Levy-augmented solvers (SRA1) validate noise="additive" at init
+            # and step on the (dW, dH) driver pair.
+            term = SDETerm(
+                drift=term.drift,
+                diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+                noise="additive")
+            dH = jnp.sqrt(h / 12.0) * jax.random.normal(
+                jax.random.fold_in(KEY, 1), y0.shape, jnp.float64)
+            dW = (dW, dH)
+        state = solver.init(term, 0.0, y0, ARGS)
         s1 = solver.step(term, state, 0.0, h, dW, ARGS)
         s0 = solver.reverse(term, s1, 0.0, h, dW, ARGS)
         moved = max(
