@@ -21,12 +21,17 @@ sweep changes dispatch cost only, never samples.
 Timing excludes compilation: every configuration is served twice and only
 the second (fully cache-warm) run is measured.
 
+``--profile DIR`` wraps the measured sweep in ``jax.profiler.trace(DIR)``
+(inspect with TensorBoard or Perfetto).
+
 Run:  PYTHONPATH=src python -m benchmarks.bench_serving [--out PATH]
       [--slots N] [--depths 4,8,16] [--ticks-per-dispatch 1,4,16]
+      [--profile DIR]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
@@ -82,40 +87,45 @@ def serve_queue(term, args, y0, *, depth: int, slots: int, tpd: int,
 
 def run(out_path: str = DEFAULT_OUT, *, slots: int = SLOTS,
         depths=QUEUE_DEPTHS, ticks_per_dispatch=TICKS_PER_DISPATCH,
-        n_steps: int = N_STEPS, dim: int = DIM, solver: str = SOLVER):
+        n_steps: int = N_STEPS, dim: int = DIM, solver: str = SOLVER,
+        profile_dir=None):
     term = ou_term()
     args = {"nu": jnp.float32(0.2), "mu": jnp.float32(0.1),
             "sigma": jnp.float32(2.0)}
     y0 = jnp.ones(dim, jnp.float32)
     records = []
-    for depth in depths:
-        for tpd in ticks_per_dispatch:
-            if tpd > depth:
-                continue  # a stack deeper than the queue adds nothing
-            secs, eng = serve_queue(term, args, y0, depth=depth, slots=slots,
-                                    tpd=tpd, n_steps=n_steps, solver=solver)
-            # counters cover both passes; each pass served `depth` ticks
-            n_ticks = eng.executor.n_ticks // 2
-            dispatches = eng.executor.n_dispatches // 2
-            records.append({
-                "solver": solver,
-                "queue_depth": depth,
-                "slots": slots,
-                "ticks_per_dispatch": tpd,
-                "n_steps": n_steps,
-                "dim": dim,
-                "n_ticks": n_ticks,
-                "host_dispatches": dispatches,
-                "dispatches_per_tick": dispatches / n_ticks,
-                "seconds": secs,
-                "requests_per_sec": depth / secs,
-                "paths_per_sec": depth * slots / secs,
-                "us_per_tick": secs * 1e6 / n_ticks,
-            })
-            emit(f"bench_serving/D{depth}/S{slots}/T{tpd}",
-                 secs * 1e6 / n_ticks,
-                 f"req_per_sec={depth / secs:.1f} "
-                 f"dispatches={dispatches}/{n_ticks}")
+    ctx = (jax.profiler.trace(profile_dir) if profile_dir
+           else contextlib.nullcontext())
+    with ctx:
+        for depth in depths:
+            for tpd in ticks_per_dispatch:
+                if tpd > depth:
+                    continue  # a stack deeper than the queue adds nothing
+                secs, eng = serve_queue(
+                    term, args, y0, depth=depth, slots=slots, tpd=tpd,
+                    n_steps=n_steps, solver=solver)
+                # counters cover both passes; each pass served `depth` ticks
+                n_ticks = eng.executor.n_ticks // 2
+                dispatches = eng.executor.n_dispatches // 2
+                records.append({
+                    "solver": solver,
+                    "queue_depth": depth,
+                    "slots": slots,
+                    "ticks_per_dispatch": tpd,
+                    "n_steps": n_steps,
+                    "dim": dim,
+                    "n_ticks": n_ticks,
+                    "host_dispatches": dispatches,
+                    "dispatches_per_tick": dispatches / n_ticks,
+                    "seconds": secs,
+                    "requests_per_sec": depth / secs,
+                    "paths_per_sec": depth * slots / secs,
+                    "us_per_tick": secs * 1e6 / n_ticks,
+                })
+                emit(f"bench_serving/D{depth}/S{slots}/T{tpd}",
+                     secs * 1e6 / n_ticks,
+                     f"req_per_sec={depth / secs:.1f} "
+                     f"dispatches={dispatches}/{n_ticks}")
     with open(out_path, "w") as f:
         json.dump({"device": jax.devices()[0].platform, "records": records},
                   f, indent=2)
@@ -132,12 +142,14 @@ def main():
                     default=",".join(map(str, TICKS_PER_DISPATCH)))
     ap.add_argument("--n-steps", type=int, default=N_STEPS)
     ap.add_argument("--dim", type=int, default=DIM)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the measured sweep in jax.profiler.trace(DIR)")
     args = ap.parse_args()
     run(args.out, slots=args.slots,
         depths=tuple(int(d) for d in args.depths.split(",")),
         ticks_per_dispatch=tuple(
             int(t) for t in args.ticks_per_dispatch.split(",")),
-        n_steps=args.n_steps, dim=args.dim)
+        n_steps=args.n_steps, dim=args.dim, profile_dir=args.profile)
 
 
 if __name__ == "__main__":

@@ -37,7 +37,11 @@ from repro.kernels.sde_step import ops as sde_step_ops
 from .common import emit, time_fn
 
 SOLVERS = ("ees25", "ees27", "reversible_heun")
-NOISES = ("diagonal", "general")
+# "prediffused" records the additive-noise fast path (PR 7): an
+# ``noise="additive"`` term whose diffusion is hoisted out of the scan
+# (adjoint._maybe_prediffuse), so the hot loop combines ``f*h + w`` through
+# the "prediffused" fused kernel variants.
+NOISES = ("diagonal", "general", "prediffused")
 BATCH_SIZES = (64, 1024)
 N_STEPS = 64
 DIM = 16
@@ -56,6 +60,14 @@ def make_term(noise: str) -> SDETerm:
             diffusion=lambda t, y, a: a["sigma"] * jnp.cos(y),
             noise="diagonal",
         )
+    if noise == "prediffused":
+        # Additive contract: diffusion independent of t/y, so solve() hoists
+        # g.dW into one bulk pass and the scan runs the prediffused variant.
+        return SDETerm(
+            drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+            diffusion=lambda t, y, a: a["sigma"] * jnp.ones_like(y),
+            noise="additive",
+        )
     return SDETerm(
         drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
         diffusion=lambda t, y, a: a["sigma"] * jnp.stack(
@@ -70,7 +82,7 @@ def term_args():
 
 
 def _solve_fn(term, solver, noise, n_steps, dim):
-    nshape = (dim,) if noise == "diagonal" else (N_CHANNELS,)
+    nshape = (N_CHANNELS,) if noise == "general" else (dim,)
     y0 = jnp.ones(dim, jnp.float32)
 
     def fn(keys, a):

@@ -19,8 +19,10 @@ from .adaptive import AdaptiveResult, RealizedGrid, integrate_adaptive, realize_
 from .adjoint import SolveResult, solve
 from .brownian import (
     BrownianPath,
+    PaddedBrownianPath,
     VirtualBrownianTree,
     brownian_path,
+    padded_brownian_path,
     virtual_brownian_tree,
 )
 from .grid import TimeGrid
@@ -81,6 +83,8 @@ __all__ = [
     "select_solver",
     "BrownianPath",
     "brownian_path",
+    "PaddedBrownianPath",
+    "padded_brownian_path",
     "VirtualBrownianTree",
     "virtual_brownian_tree",
     "TimeGrid",

@@ -192,6 +192,26 @@ def _make_stepper(solver, term, grid: TimeGrid, args, masked, dWs=None):
                 new = tree_select(h > 0, new, state)
             return (new, w), (t, h)
 
+    if getattr(grid, "is_padded", False):
+        # Padded-uniform grids (bucketed dispatch): skip steps at or past
+        # n_active with a lax.cond.  The predicate is a batch-uniform scalar
+        # — one n_active per grid, shared by every vmap lane — so it stays a
+        # real conditional under vmap: dead padding steps genuinely skip the
+        # solver body, and the live branch is its own computation, compiled
+        # exactly as the unpadded solve loop (a tree_select over both
+        # branches would change XLA's fusion of multi-register steps and
+        # drift the last bits; the cond provably does not —
+        # regression-tested bitwise across the solver zoo).
+        inner_step = step
+        n_active = grid.n_active
+
+        def step(carry, n):
+            return jax.lax.cond(
+                n < n_active,
+                lambda: inner_step(carry, n),
+                lambda: (carry, (grid.t_of(n), grid.h_of(n))),
+            )
+
     return init_w, step
 
 
@@ -400,6 +420,20 @@ def _solve_reversible(solver, term, y0, grid: TimeGrid, args, save_every,
                 ct_prev = tree_add(ct_prev, inc_prev)
             return (prev, ct_prev, _ct_add(ct_args, ct_args_inc)), None
 
+        if getattr(grid, "is_padded", False):
+            # Padding steps were skipped forward (lax.cond in the stepper);
+            # skip them backward the same way — the carry passes through
+            # untouched, so reconstruction and cotangents see only the live
+            # prefix (same batch-uniform predicate, same bitwise guarantee).
+            inner_body = body
+
+            def body(carry, n):
+                return jax.lax.cond(
+                    n < grid.n_active,
+                    lambda: inner_body(carry, n),
+                    lambda: (carry, None),
+                )
+
         (state0_rec, ct_state0, ct_args), _ = jax.lax.scan(
             body, (state_f, ct_state, ct_args), jnp.arange(n_steps - 1, -1, -1)
         )
@@ -564,6 +598,12 @@ def solve(
     grid = _as_grid(grid)
     if save_at is not None and save_every is not None:
         raise ValueError("save_every and save_at are mutually exclusive")
+    if grid.is_padded and (save_every is not None or save_at is not None):
+        raise ValueError(
+            "padded-uniform grids (bucketed dispatch) carry no saved "
+            "trajectories — save_every/save_at requests must run on an "
+            "exact (unpadded) grid"
+        )
     if remat_chunk is not None and adjoint != "recursive":
         raise ValueError(
             f"remat_chunk configures the recursive adjoint's checkpoint "

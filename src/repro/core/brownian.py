@@ -33,6 +33,8 @@ __all__ = [
     "BrownianDriver",
     "BrownianPath",
     "brownian_path",
+    "PaddedBrownianPath",
+    "padded_brownian_path",
     "VirtualBrownianTree",
     "virtual_brownian_tree",
 ]
@@ -294,6 +296,106 @@ def brownian_path(key, t0, t1, n_steps, shape=(), dtype=jnp.float32) -> Brownian
     if isinstance(shape, list):
         shape = tuple(shape)
     return BrownianPath(key, float(t0), float(t1), int(n_steps), shape, dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PaddedBrownianPath:
+    """Fixed-grid Brownian driver parameterised by its *step size*, not its
+    window — the driver of bucketed serving dispatch (PR 8).
+
+    A :class:`BrownianPath` derives ``h`` from ``(t1 - t0) / n_steps``; this
+    driver stores the exact Python-double ``h`` directly and extends the grid
+    to ``n_steps`` *padded* steps.  Because ``h`` is static (closed into the
+    executable, never traced), step ``n``'s increment —
+    ``sqrt(h) * normal(fold_in(key, n))`` — is bitwise-identical to a
+    ``BrownianPath`` over ``[t0, t0 + k*h]`` with the same key, for every
+    live step ``n < k``: requests that differ only in horizon length can
+    share one compiled solve whose padding steps are masked off by the grid
+    (see :meth:`~repro.core.grid.TimeGrid.padded_uniform`), without
+    perturbing a single bit of the samples.
+    """
+
+    key: jax.Array
+    t0: float
+    h: float                  # exact per-step size (static Python double)
+    n_steps: int              # padded grid length
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+
+    # -- pytree plumbing (key is a leaf; the rest is static) ----------------
+    def tree_flatten(self):
+        return (self.key,), (self.t0, self.h, self.n_steps, self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (key,) = children
+        t0, h, n_steps, shape, dtype = aux
+        return cls(key, t0, h, n_steps, shape, dtype)
+
+    @property
+    def t1(self) -> float:
+        """End of the *padded* window (live solves stop at ``t0 + k*h``)."""
+        return self.t0 + self.n_steps * self.h
+
+    def t_of(self, n) -> jax.Array:
+        return self.t0 + n * self.h
+
+    def _draw(self, sub, scale):
+        if _is_simple_shape(self.shape):
+            return scale * jax.random.normal(sub, self.shape, self.dtype)
+        leaves, treedef = jax.tree_util.tree_flatten(self.shape, is_leaf=_is_simple_shape)
+        keys = jax.random.split(sub, len(leaves))
+        outs = [scale * jax.random.normal(k, s, self.dtype) for k, s in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def increment(self, n):
+        """dW over step ``n`` — bitwise-equal to the same step of an unpadded
+        :class:`BrownianPath` sharing ``(key, t0, h)`` (same ``fold_in``
+        indexing, same static-``h`` scale)."""
+        sub = jax.random.fold_in(self.key, n)
+        return self._draw(sub, jnp.sqrt(jnp.asarray(self.h, self.dtype)))
+
+    def levy_area_step(self, n):
+        """Space-time Levy area ``DH`` over step ``n`` — the same salted key
+        family as :meth:`BrownianPath.levy_area_step` (``W`` bits untouched)."""
+        sub = jax.random.fold_in(jax.random.fold_in(self.key, _LEVY_SALT), n)
+        return self._draw(sub, jnp.sqrt(jnp.asarray(self.h / 12.0, self.dtype)))
+
+    def _check_grid(self, ts):
+        n_grid = ts.shape[0] - 1
+        if n_grid != self.n_steps:
+            raise ValueError(
+                f"grid of {n_grid} steps does not match this "
+                f"PaddedBrownianPath's {self.n_steps}-step padded grid"
+            )
+
+    def grid_increment(self, ts, n):
+        self._check_grid(ts)
+        return self.increment(n)
+
+    def grid_increments(self, ts):
+        """All padded per-step increments in one stacked threefry pass (row
+        ``n`` bitwise-equal to :meth:`increment`\\ ``(n)``; dead rows are
+        generated but masked off by the solve)."""
+        self._check_grid(ts)
+        return _bulk_path_increments(self)
+
+    def grid_levy_increment(self, ts, n):
+        self._check_grid(ts)
+        return self.increment(n), self.levy_area_step(n)
+
+    def grid_levy_increments(self, ts):
+        self._check_grid(ts)
+        return _bulk_path_levy(self)
+
+
+def padded_brownian_path(key, t0, h, n_steps, shape=(),
+                         dtype=jnp.float32) -> PaddedBrownianPath:
+    """Build a :class:`PaddedBrownianPath` (casts ``shape`` lists to tuples)."""
+    if isinstance(shape, list):
+        shape = tuple(shape)
+    return PaddedBrownianPath(key, float(t0), float(h), int(n_steps), shape, dtype)
 
 
 # ---------------------------------------------------------------------------

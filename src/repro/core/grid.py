@@ -59,16 +59,22 @@ class TimeGrid:
     t0: float
     t1: float
     uniform_h: Optional[float] = None
+    # Padded-uniform grids (bucketed serving dispatch, PR 8): the number of
+    # *live* steps as a traced int32 scalar; steps at or beyond it are
+    # skipped with a lax.cond in the solve loop.  None for ordinary grids.
+    n_active: Optional[jax.Array] = None
 
-    # -- pytree plumbing (ts/hs/driver are children; the window is static) --
+    # -- pytree plumbing (ts/hs/driver/n_active are children; the window is
+    # static) --
     def tree_flatten(self):
-        return (self.ts, self.hs, self.driver), (self.t0, self.t1, self.uniform_h)
+        return ((self.ts, self.hs, self.driver, self.n_active),
+                (self.t0, self.t1, self.uniform_h))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        ts, hs, driver = children
+        ts, hs, driver, n_active = children
         t0, t1, uniform_h = aux
-        return cls(ts, hs, driver, t0, t1, uniform_h)
+        return cls(ts, hs, driver, t0, t1, uniform_h, n_active)
 
     @property
     def n_steps(self) -> int:
@@ -77,6 +83,12 @@ class TimeGrid:
     @property
     def is_uniform(self) -> bool:
         return self.uniform_h is not None
+
+    @property
+    def is_padded(self) -> bool:
+        """True for a :meth:`padded_uniform` grid: uniform static step size,
+        but only the first ``n_active`` of ``n_steps`` steps are live."""
+        return self.n_active is not None
 
     def t_of(self, n):
         return self.ts[n]
@@ -159,6 +171,39 @@ class TimeGrid:
     def from_path(cls, bm) -> "TimeGrid":
         """The native grid of a :class:`~repro.core.brownian.BrownianPath`."""
         return cls.uniform(bm.t0, bm.t1, bm.n_steps, driver=bm)
+
+    @classmethod
+    def padded_uniform(cls, t0: float, h: float, n_active, n_padded: int,
+                       driver=None) -> "TimeGrid":
+        """Uniform grid of ``n_padded`` static steps, only ``n_active`` live.
+
+        The grid of **bucketed serving dispatch** (PR 8): the step size ``h``
+        is an exact static Python float shared by every request in a bucket,
+        ``n_padded`` is the bucket's ladder rung, and ``n_active`` — the one
+        traced quantity — is the request's true step count.  Live entries of
+        ``ts`` are ``t0 + n * h`` with the same int32-index arithmetic as
+        :meth:`uniform` (bitwise-equal times); entries at or past
+        ``n_active`` clamp to the final live time, and the solve loop skips
+        those steps with a ``lax.cond`` whose live branch is exactly the
+        unpadded computation — so a padded solve over ``n_active = k`` is
+        bitwise-identical to :meth:`uniform`\\ ``(t0, t0 + k*h, k)``.
+        ``uniform_h`` stays set: padding is masked by the conditional, never
+        by zero-length steps.
+        """
+        t0, h = float(t0), float(h)
+        n_padded = int(n_padded)
+        if n_padded < 1:
+            raise ValueError(f"need n_padded >= 1, got {n_padded}")
+        n_active = jnp.asarray(n_active, jnp.int32)
+        if n_active.ndim != 0:
+            raise ValueError(
+                f"n_active must be a scalar (one live-step count per grid), "
+                f"got shape {n_active.shape}"
+            )
+        idx = jnp.arange(n_padded + 1, dtype=jnp.int32)
+        ts = t0 + jnp.minimum(idx, n_active) * h
+        return cls(ts, None, driver, t0, t0 + n_padded * h, uniform_h=h,
+                   n_active=n_active)
 
 
 def save_mask(save_ts, live, t_old, t_new, t1, eps_end):

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 
 from .adaptive import integrate_adaptive
 from .adjoint import SolveResult, solve
-from .brownian import brownian_path, virtual_brownian_tree
+from .brownian import brownian_path, padded_brownian_path, virtual_brownian_tree
+from .grid import TimeGrid
 from .registry import get_solver
 
 __all__ = ["sdeint", "sdeint_ticks"]
@@ -251,6 +252,8 @@ def sdeint_ticks(
     *,
     mesh=None,
     mesh_axis: Optional[str] = None,
+    active_steps: Optional[jax.Array] = None,
+    step_size: Optional[float] = None,
     **kwargs,
 ):
     """Integrate a *stack* of key batches in one on-device multi-tick loop.
@@ -268,8 +271,20 @@ def sdeint_ticks(
     mesh exactly as in :func:`sdeint` (the tick axis stays sequential — ticks
     are the serving time dimension, not a parallel one).  All other keyword
     arguments are as for :func:`sdeint`.
+
+    **Padded bucketed mode** (``active_steps`` + ``step_size``, PR 8): the
+    stack becomes a *bucket* executable — ``n_steps`` is the padded grid
+    length (the bucket's ladder rung), ``step_size`` the exact static step
+    ``h`` every tick shares, and ``active_steps`` a ``(T,)`` int32 operand
+    giving each tick's true (live) step count.  Tick ``t`` is then bitwise
+    equal to ``sdeint(term, solver, t0, t0 + active_steps[t]*h,
+    active_steps[t], ...)`` over the same keys: padding steps are skipped by
+    a batch-uniform ``lax.cond`` whose live branch compiles to exactly the
+    unpadded solve (see :meth:`~repro.core.grid.TimeGrid.padded_uniform`).
+    One executable serves every horizon on the rung; ``t1`` is ignored in
+    this mode (the window is ``t0 + n_steps*step_size`` padded).  Fixed-grid
+    solves only — no ``save_every``/``save_at``/adaptive options.
     """
-    one = _trajectory_fn(term, solver, t0, t1, n_steps, y0, **kwargs)
     leaf = jax.tree_util.tree_leaves(tick_keys)[0]
     # A typed key array ((T, B)-shaped, prng_key dtype) carries no trailing
     # key-data axis; raw uint32 keys do — so a flat single-tick batch is
@@ -282,6 +297,35 @@ def sdeint_ticks(
             f"(dtype {leaf.dtype}); for a single flat batch call "
             "sdeint(..., batch_keys=keys)"
         )
+
+    if active_steps is not None:
+        if step_size is None:
+            raise ValueError(
+                "active_steps (padded bucketed dispatch) requires step_size "
+                "— the bucket's exact static step h shared by every tick"
+            )
+        active = jnp.asarray(active_steps, jnp.int32)
+        if active.ndim != 1 or active.shape[0] != leaf.shape[0]:
+            raise ValueError(
+                f"active_steps must be a (n_ticks,) = ({leaf.shape[0]},) "
+                f"int array (one live-step count per tick), got shape "
+                f"{tuple(active.shape)}"
+            )
+        one = _padded_trajectory_fn(term, solver, t0, n_steps, y0,
+                                    float(step_size), **kwargs)
+        batched = _batched_fn(jax.vmap(one, in_axes=(0, None)),
+                              leaf.shape[1], mesh, mesh_axis, n_operands=2)
+        if leaf.shape[0] == 1:
+            out = batched(jax.tree_util.tree_map(lambda k: k[0], tick_keys),
+                          active[0])
+            return jax.tree_util.tree_map(lambda x: x[None], out)
+        return jax.lax.map(lambda kn: batched(kn[0], kn[1]),
+                           (tick_keys, active))
+    if step_size is not None:
+        raise ValueError("step_size only applies with active_steps (padded "
+                         "bucketed dispatch)")
+
+    one = _trajectory_fn(term, solver, t0, t1, n_steps, y0, **kwargs)
     batched = _batched_fn(jax.vmap(one), leaf.shape[1], mesh, mesh_axis)
     if leaf.shape[0] == 1:
         # Serving-tail fast path: a depth-1 stack needs no on-device tick
@@ -368,8 +412,60 @@ def _trajectory_fn(
     return one
 
 
-def _batched_fn(batched, n_batch: int, mesh, mesh_axis):
-    """Wrap a vmap'd trajectory batch in shard_map when a mesh axis is named."""
+def _padded_trajectory_fn(
+    term, solver, t0, n_padded, y0, h, *, args=None, adjoint="full",
+    save_every=None, remat_chunk=None, adaptive=False, save_at=None,
+    rtol=None, atol=None, h0=None, bm_tol=None, bounded=True,
+    bulk_increments=True, noise_shape=None, dtype=None,
+):
+    """Build the padded single-trajectory ``(key, n_active) -> result`` fn
+    for bucketed dispatch: ``h`` is the bucket's exact static step size,
+    ``n_padded`` its ladder rung, ``n_active`` the (traced, batch-uniform)
+    true step count of one tick."""
+    solver = get_solver(solver)
+    if adaptive or getattr(solver, "adaptive", False):
+        raise ValueError(
+            "active_steps (padded bucketed dispatch) applies to fixed-grid "
+            "solves only; adaptive requests must dispatch exact"
+        )
+    if save_every is not None or save_at is not None:
+        raise ValueError(
+            "padded bucketed dispatch carries no saved trajectories; "
+            "save_every/save_at requests must dispatch exact"
+        )
+    for opt_name, bad in (("rtol", rtol is not None),
+                          ("atol", atol is not None),
+                          ("h0", h0 is not None),
+                          ("bm_tol", bm_tol is not None),
+                          ("bounded", bounded is not True)):
+        if bad:
+            raise ValueError(
+                f"{opt_name} only applies to adaptive solves, which cannot "
+                "run under padded bucketed dispatch"
+            )
+    if adjoint not in ("full", "recursive", "reversible"):
+        raise ValueError(f"unknown adjoint {adjoint!r}")
+    if noise_shape is None:
+        noise_shape = _infer_noise_shape(term, y0)
+    if dtype is None:
+        dtype = _infer_dtype(y0)
+
+    def one(k, n_active):
+        bm = padded_brownian_path(k, t0, h, n_padded, shape=noise_shape,
+                                  dtype=dtype)
+        grid = TimeGrid.padded_uniform(t0, h, n_active, n_padded, bm)
+        return solve(solver, term, y0, grid, args, adjoint=adjoint,
+                     remat_chunk=remat_chunk,
+                     bulk_increments=bulk_increments)
+
+    return one
+
+
+def _batched_fn(batched, n_batch: int, mesh, mesh_axis, n_operands: int = 1):
+    """Wrap a vmap'd trajectory batch in shard_map when a mesh axis is named.
+
+    ``n_operands > 1``: the batch fn takes extra *replicated* operands after
+    the sharded key batch (the padded path's batch-uniform ``n_active``)."""
     if mesh_axis is None:
         if mesh is not None:
             raise ValueError("mesh given without mesh_axis; name the axis to shard over")
@@ -385,12 +481,15 @@ def _batched_fn(batched, n_batch: int, mesh, mesh_axis):
             f"the batch of {n_batch} trajectories"
         )
     spec = P(mesh_axis)
+    in_specs = spec if n_operands == 1 else \
+        (spec,) + (P(),) * (n_operands - 1)
     try:  # jax <= 0.5
         from jax.experimental.shard_map import shard_map
 
-        return shard_map(batched, mesh=mesh, in_specs=spec, out_specs=spec,
-                         check_rep=False)
+        return shard_map(batched, mesh=mesh, in_specs=in_specs,
+                         out_specs=spec, check_rep=False)
     except ImportError:  # pragma: no cover — jax >= 0.6 (same shim as optim.compression)
         from jax import shard_map
 
-        return shard_map(batched, mesh=mesh, in_specs=spec, out_specs=spec)
+        return shard_map(batched, mesh=mesh, in_specs=in_specs,
+                         out_specs=spec)

@@ -6,6 +6,8 @@
                  scatter/retirement (device-free)
   executor     — device-side SDE serving core: jit'd on-device multi-tick
                  dispatch, optional mesh-sharded slot axis
+  bucketing    — signature coalescing: padded bucketed dispatch (ladder
+                 rungs + BucketKey planning groups, bitwise-identical)
   sde_engine   — Monte-Carlo SDE sampling engine (façade over the two layers)
   async_engine — asyncio continuous-batching serving plane: awaitable
                  submit/result with backpressure, cross-signature
@@ -13,8 +15,9 @@
                  results
 """
 from .async_engine import AsyncSDESampleEngine
+from .bucketing import BucketingConfig, BucketKey, bucket_key, group_key, ladder_rung
 from .engine import Engine, ServeConfig
-from .executor import TickExecutor
+from .executor import TickExecutor, enable_persistent_compile_cache
 from .scheduler import QueueFull, Scheduler, SlotPlan
 from .sde_engine import SampleRequest, SampleResult, SDESampleConfig, SDESampleEngine
 
@@ -25,6 +28,12 @@ __all__ = [
     "Scheduler",
     "SlotPlan",
     "TickExecutor",
+    "enable_persistent_compile_cache",
+    "BucketingConfig",
+    "BucketKey",
+    "bucket_key",
+    "group_key",
+    "ladder_rung",
     "AsyncSDESampleEngine",
     "SDESampleEngine",
     "SDESampleConfig",

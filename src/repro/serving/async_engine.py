@@ -43,7 +43,7 @@ depths, priorities, and interleavings (regression-tested in
 from __future__ import annotations
 
 import asyncio
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,7 +87,7 @@ class AsyncSDESampleEngine:
         self._work = asyncio.Event()    # set: queue may hold plannable work
         self._space = asyncio.Event()   # set: admission capacity may exist
         self._waiters: Dict[int, asyncio.Future] = {}
-        self._last_sig: Optional[Tuple] = None
+        self._last_group = None
         self._closed = False
 
     # -- client surface ------------------------------------------------------
@@ -97,8 +97,14 @@ class AsyncSDESampleEngine:
         """Completed results (device-resident jax arrays) by request id."""
         return self.scheduler.done
 
-    def pending(self) -> Dict[int, int]:
-        return self._eng.pending()
+    def pending(self, detail: bool = False):
+        return self._eng.pending(detail=detail)
+
+    def warmup(self, signatures) -> int:
+        """Ahead-of-time compile executables for expected traffic — see
+        :meth:`SDESampleEngine.warmup` (synchronous: call before serving, or
+        wrap in ``asyncio.to_thread`` from a live loop)."""
+        return self._eng.warmup(signatures)
 
     async def submit(self, solver: str, *, t1: float, n_steps: int,
                      n_paths: int, t0: float = 0.0,
@@ -225,23 +231,24 @@ class AsyncSDESampleEngine:
                 self._serve(), name="sde-serve-loop")
 
     def _next_plan(self):
-        """Round-robin compiled stacks across the signature groups of the
+        """Round-robin compiled stacks across the planning groups of the
         best pending priority class — the continuous-batching interleave
-        (a strict head-of-queue drain would starve other signatures for a
-        whole burst)."""
-        sigs = self.scheduler.signatures()
-        if not sigs:
+        (a strict head-of-queue drain would starve other groups for a whole
+        burst).  Groups are buckets where coalescing applies, so signatures
+        sharing a bucket drain as one stream through one executable."""
+        groups = self.scheduler.groups()
+        if not groups:
             return None
-        best = max(prio for _, prio in sigs)
-        top = [sig for sig, prio in sigs if prio == best]
-        if self._last_sig in top and len(top) > 1:
-            sig = top[(top.index(self._last_sig) + 1) % len(top)]
+        best = max(prio for _, prio in groups)
+        top = [g for g, prio in groups if prio == best]
+        if self._last_group in top and len(top) > 1:
+            g = top[(top.index(self._last_group) + 1) % len(top)]
         else:
-            sig = top[0]
-        self._last_sig = sig
+            g = top[0]
+        self._last_group = g
         return self.scheduler.plan(self.cfg.slots,
                                    self.cfg.ticks_per_dispatch,
-                                   signature=sig)
+                                   group=g)
 
     def _deliver_device(self, plan, result) -> List[int]:
         """Scatter a dispatch lazily: slot slices and per-request stacks are
@@ -291,14 +298,16 @@ class AsyncSDESampleEngine:
                 sp_keys = keys if len(subplans) == 1 else \
                     keys[offset:offset + sp.n_ticks]
                 offset += sp.n_ticks
-                if self.executor.has_compiled(sp.signature, sp.n_ticks):
-                    out = self.executor.dispatch(sp.signature, sp_keys)
+                ek = self._eng._exec_key(sp)
+                active = self._eng._active_steps(sp)
+                if self.executor.has_compiled(ek, sp.n_ticks):
+                    out = self.executor.dispatch(ek, sp_keys, active)
                 else:
-                    # First dispatch of a (signature, depth) pays XLA
-                    # compile; run it off-thread so submit()/result() stay
-                    # live meanwhile.
+                    # First dispatch of a (bucket-or-signature, depth) pays
+                    # XLA compile; run it off-thread so submit()/result()
+                    # stay live meanwhile.
                     out = await asyncio.to_thread(
-                        self.executor.dispatch, sp.signature, sp_keys)
+                        self.executor.dispatch, ek, sp_keys, active)
                 self._deliver_device(sp, out)
                 if inflight is not None:
                     # Double-buffer depth 2: the *previous* stack must land
@@ -315,5 +324,7 @@ class AsyncSDESampleEngine:
         conv = lambda x: None if x is None else np.asarray(x)  # noqa: E731
         return SampleResult(
             y_final=conv(res.y_final), ys=conv(res.ys),
+            bucket=res.bucket, n_padded_steps=res.n_padded_steps,
+            n_padded_paths=res.n_padded_paths,
             **{n: conv(getattr(res, n)) for n in STAT_FIELDS},
         )

@@ -28,14 +28,37 @@ produce bitwise-identical samples.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import parse_solver_spec, sdeint_ticks
 
-__all__ = ["TickExecutor"]
+from .bucketing import BucketKey
+
+__all__ = ["TickExecutor", "enable_persistent_compile_cache"]
+
+
+def enable_persistent_compile_cache(path: str) -> None:
+    """Point jax's persistent compilation cache at ``path``.
+
+    Compiled executables are written to (and reloaded from) the directory, so
+    a fresh process warm-starts: the first dispatch of a known
+    ``(bucket, depth)`` pays deserialization instead of XLA compilation.
+    The size/time floors are dropped so even the small CPU-smoke executables
+    persist — serving executables are few (that is the point of bucketing)
+    and re-compiling any of them stalls a tick.
+    """
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    # jax latches "no cache" at the first compile it ever runs (imports
+    # compile little helpers long before an engine exists), and config
+    # updates alone do not re-initialize it — reset so the new dir takes
+    # effect for every compile from here on.
+    from jax.experimental.compilation_cache import compilation_cache
+    compilation_cache.reset_cache()
 
 
 class TickExecutor:
@@ -68,40 +91,58 @@ class TickExecutor:
         self.n_dispatches = 0
         self.n_ticks = 0
 
-    def _stack_fn(self, sig: Tuple, n_ticks: int):
-        """The cached jit'd dispatch for ``(sig, n_ticks)``.
+    def _stack_fn(self, key: Union[Tuple, BucketKey], n_ticks: int):
+        """The cached jit'd dispatch for ``(key, n_ticks)``.
+
+        ``key`` is either an exact request signature (the classic path) or a
+        :class:`~repro.serving.bucketing.BucketKey`, whose executable
+        integrates the padded grid and takes a per-tick ``active_steps``
+        operand as its second argument.
 
         Steady-state serving re-enters the same executable every dispatch
-        (no per-tick re-jit: the cache key is the full signature plus the
-        stack depth, and the scheduler canonicalises specs at submit so
+        (no per-tick re-jit: the cache key is the signature-or-bucket plus
+        the stack depth, and the scheduler canonicalises specs at submit so
         equivalent spellings share an entry).  The key-stack argument is
         donated where the backend implements donation, letting XLA reuse
         the previous dispatch's buffer for each upload.
         """
-        cache_key = (sig, n_ticks)
+        cache_key = (key, n_ticks)
         if cache_key not in self._compiled:
-            solver, t0, t1, n_steps, save_every, rtol, atol, save_at = sig
-            extra = {}
-            if rtol is not None:
-                extra["rtol"] = rtol
-            if atol is not None:
-                extra["atol"] = atol
-            if save_at is not None:
-                extra["save_at"] = jnp.asarray(save_at)
+            if isinstance(key, BucketKey):
+                bk = key
 
-            if parse_solver_spec(solver)[1].get("adaptive", False):
-                # Serving is forward-only: the while-loop stepper stops when
-                # every path reaches t1 instead of padding to the n_steps
-                # budget (bitwise-identical results).
-                extra["bounded"] = False
+                def stack(tick_keys, active_steps):
+                    return sdeint_ticks(
+                        self.term, bk.solver, bk.t0,
+                        bk.t0 + bk.n_padded * bk.h, bk.n_padded, self.y0,
+                        tick_keys, active_steps=active_steps,
+                        step_size=bk.h, args=self.args,
+                        noise_shape=self.noise_shape, dtype=self.dtype,
+                        mesh=self.mesh, mesh_axis=self.mesh_axis,
+                    )
+            else:
+                solver, t0, t1, n_steps, save_every, rtol, atol, save_at = key
+                extra = {}
+                if rtol is not None:
+                    extra["rtol"] = rtol
+                if atol is not None:
+                    extra["atol"] = atol
+                if save_at is not None:
+                    extra["save_at"] = jnp.asarray(save_at)
 
-            def stack(tick_keys):
-                return sdeint_ticks(
-                    self.term, solver, t0, t1, n_steps, self.y0, tick_keys,
-                    args=self.args, save_every=save_every,
-                    noise_shape=self.noise_shape, dtype=self.dtype,
-                    mesh=self.mesh, mesh_axis=self.mesh_axis, **extra,
-                )
+                if parse_solver_spec(solver)[1].get("adaptive", False):
+                    # Serving is forward-only: the while-loop stepper stops
+                    # when every path reaches t1 instead of padding to the
+                    # n_steps budget (bitwise-identical results).
+                    extra["bounded"] = False
+
+                def stack(tick_keys):
+                    return sdeint_ticks(
+                        self.term, solver, t0, t1, n_steps, self.y0,
+                        tick_keys, args=self.args, save_every=save_every,
+                        noise_shape=self.noise_shape, dtype=self.dtype,
+                        mesh=self.mesh, mesh_axis=self.mesh_axis, **extra,
+                    )
 
             # Donate the key stack so its device buffer is reused across
             # dispatches.  CPU does not implement donation (jax would warn
@@ -110,22 +151,57 @@ class TickExecutor:
             self._compiled[cache_key] = jax.jit(stack, donate_argnums=donate)
         return self._compiled[cache_key]
 
-    def has_compiled(self, sig: Tuple, n_ticks: int) -> bool:
-        """Whether a ``dispatch(sig, <n_ticks-deep stack>)`` will re-enter a
+    def has_compiled(self, key: Union[Tuple, BucketKey],
+                     n_ticks: int) -> bool:
+        """Whether a ``dispatch(key, <n_ticks-deep stack>)`` will re-enter a
         cached executable.  False means the call pays tracing + XLA compile —
         the async engine runs such first dispatches in a worker thread so
         the event loop (other submitters/awaiters) stays responsive."""
-        return (sig, n_ticks) in self._compiled
+        return (key, n_ticks) in self._compiled
 
-    def dispatch(self, sig: Tuple, tick_keys):
+    def warmup(self, key: Union[Tuple, BucketKey], n_ticks: int,
+               slots: int) -> bool:
+        """Ahead-of-time compile the ``(key, n_ticks)`` executable.
+
+        Uses jit's ``lower(...).compile()`` AOT path on shape/dtype structs,
+        so no device work runs and no keys are materialised; the compiled
+        object is stored back in the cache (its call syntax matches the jit
+        wrapper's).  With a persistent compile cache enabled this both
+        populates and reads the on-disk cache.  Returns True when this call
+        actually lowered+compiled (False: the entry was already compiled).
+        """
+        fn = self._stack_fn(key, n_ticks)
+        if not hasattr(fn, "lower"):  # already AOT-compiled earlier
+            return False
+        keys_t = jax.ShapeDtypeStruct((n_ticks, slots, 2), jnp.uint32)
+        if isinstance(key, BucketKey):
+            active_t = jax.ShapeDtypeStruct((n_ticks,), jnp.int32)
+            compiled = fn.lower(keys_t, active_t).compile()
+        else:
+            compiled = fn.lower(keys_t).compile()
+        self._compiled[(key, n_ticks)] = compiled
+        return True
+
+    def dispatch(self, key: Union[Tuple, BucketKey], tick_keys,
+                 active_steps=None):
         """Run a ``(n_ticks, slots, ...)`` key stack; one host round trip.
+
+        For a :class:`BucketKey`, ``active_steps`` (shape ``(n_ticks,)``
+        int32 — each tick's true step count) is forwarded as the bucket
+        executable's second operand; exact signatures take keys only.
 
         Returns the solve result pytree with leading ``(n_ticks, slots)``
         axes on every leaf; tick ``t`` is bitwise equal to a single-tick
         dispatch of ``tick_keys[t]`` (see :func:`repro.core.sdeint_ticks`).
         """
         n_ticks = tick_keys.shape[0]
-        out = self._stack_fn(sig, n_ticks)(tick_keys)
+        fn = self._stack_fn(key, n_ticks)
+        if isinstance(key, BucketKey):
+            if active_steps is None:
+                raise ValueError("bucketed dispatch needs active_steps")
+            out = fn(tick_keys, jnp.asarray(active_steps, jnp.int32))
+        else:
+            out = fn(tick_keys)
         self.n_dispatches += 1
         self.n_ticks += n_ticks
         return out

@@ -128,13 +128,27 @@ class SampleResult:
     ``n_accepted`` / ``n_rejected`` (adaptive requests only) are the
     per-path realized-grid statistics: how many steps each path's controller
     accepted/rejected — the realized grid a client would replay offline (via
-    ``realize_grid`` with the same seed-derived key) for gradient work."""
+    ``realize_grid`` with the same seed-derived key) for gradient work.
+
+    ``bucket`` / ``n_padded_steps`` / ``n_padded_paths`` surface bucketed
+    dispatch (PR 8) for operators watching padding waste: ``bucket`` is the
+    :class:`~repro.serving.bucketing.BucketKey` this request was coalesced
+    into (None when it dispatched exact), ``n_padded_steps`` how many masked
+    padding steps its executable carried beyond the request's true
+    ``n_steps``, and ``n_padded_paths`` how many dead (dummy-key) slots rode
+    along in the ticks that served it.  Padding never changes the samples —
+    padding steps are skipped conditionals and dead slots are dropped before
+    scatter — these fields only quantify the compute the coalescing spent to
+    share an executable."""
 
     y_final: Any
     ys: Optional[Any]
     t_final: Optional[np.ndarray] = None
     n_accepted: Optional[np.ndarray] = None
     n_rejected: Optional[np.ndarray] = None
+    bucket: Any = None
+    n_padded_steps: int = 0
+    n_padded_paths: int = 0
 
 
 @dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
@@ -146,6 +160,11 @@ class PendingRequest:
     # staged stack and the live one never overlap.
     reserved: int = 0
     cancelled: bool = False
+    # Bucketing introspection (set when the request is first planned /
+    # delivered; see SampleResult for the field semantics).
+    bucket: Any = None
+    n_padded_steps: int = 0
+    n_padded_paths: int = 0
     y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
     ys: List[np.ndarray] = dataclasses.field(default_factory=list)
     t_final: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -159,17 +178,29 @@ class PendingRequest:
 
 @dataclasses.dataclass
 class SlotPlan:
-    """One dispatch: up to ``max_ticks`` same-signature ticks of ``slots``
+    """One dispatch: up to ``max_ticks`` same-*group* ticks of ``slots``
     paths each.  ``ticks[t][s]`` names the (pending, path-index) pair that
     owns slot ``s`` of tick ``t``; trailing slots of a tick may be unassigned
     (the engine pads them with dummy keys and the planner never references
     their outputs).  ``reserved`` plans hold their paths in flight until
-    delivered (or released) — see :meth:`Scheduler.plan`."""
+    delivered (or released) — see :meth:`Scheduler.plan`.
+
+    Without bucketing a group IS one signature and every tick shares it.
+    Under a bucketed group several *true* signatures (same bucket, different
+    horizons) may stack into one plan: each **tick** stays homogeneous in
+    true signature — ``tick_sigs[t]`` names tick ``t``'s — because the
+    executor's per-tick ``active_steps`` operand is one scalar per tick.
+    ``group`` carries the planning-group key (a
+    :class:`~repro.serving.bucketing.BucketKey` for bucketed plans);
+    ``signature`` remains the first tick's true signature for single-
+    signature consumers."""
 
     signature: Tuple
     slots: int
     ticks: List[List[Tuple[PendingRequest, int]]]
     reserved: bool = False
+    group: Any = None
+    tick_sigs: Optional[Tuple[Tuple, ...]] = None
 
     @property
     def n_ticks(self) -> int:
@@ -265,14 +296,22 @@ class Scheduler:
     """Priority-FIFO scheduler over :class:`PendingRequest` entries (host-side
     only).  ``max_requests`` / ``max_paths`` bound the live queue (admission
     control): an :meth:`enqueue` that would exceed either raises
-    :class:`QueueFull` without enqueueing."""
+    :class:`QueueFull` without enqueueing.
+
+    ``group_key`` maps a request signature to its *planning group* — the
+    unit :meth:`plan` fills a dispatch from.  The default (identity) keeps
+    the classic one-signature-per-plan behaviour; the bucketing layer passes
+    :func:`repro.serving.bucketing.group_key` so signatures sharing a padded
+    bucket plan together (see :class:`SlotPlan` for the per-tick homogeneity
+    contract)."""
 
     def __init__(self, max_requests: Optional[int] = None,
-                 max_paths: Optional[int] = None):
+                 max_paths: Optional[int] = None, group_key=None):
         self.queue: Deque[PendingRequest] = deque()
         self.done: Dict[int, SampleResult] = {}
         self.max_requests = max_requests
         self.max_paths = max_paths
+        self.group_key = group_key if group_key is not None else (lambda sig: sig)
         self._next_id = 0
         self._cancelled_ids: set = set()
 
@@ -312,10 +351,26 @@ class Scheduler:
 
     # -- introspection / cancellation ---------------------------------------
 
-    def pending(self) -> Dict[int, int]:
+    def pending(self, detail: bool = False) -> Dict[int, Any]:
         """Paths still owed per queued request id (FIFO order, cancelled
-        entries excluded) — what a polling client checks between ``run``s."""
-        return {p.request.request_id: p.remaining
+        entries excluded) — what a polling client checks between ``run``s.
+
+        ``detail=True`` returns a dict per request instead of a bare count:
+        ``remaining`` plus the bucketing introspection — ``bucket`` (the
+        :class:`~repro.serving.bucketing.BucketKey` the request coalesced
+        into once planned; None before planning or for exact dispatch),
+        ``n_padded_steps`` (masked padding steps its bucket executable
+        carries beyond the true ``n_steps``) and ``n_padded_paths`` (dead
+        slots that rode along in its delivered ticks so far)."""
+        if not detail:
+            return {p.request.request_id: p.remaining
+                    for p in self.queue if not p.cancelled}
+        return {p.request.request_id: {
+                    "remaining": p.remaining,
+                    "bucket": p.bucket,
+                    "n_padded_steps": p.n_padded_steps,
+                    "n_padded_paths": p.n_padded_paths,
+                }
                 for p in self.queue if not p.cancelled}
 
     def cancel(self, request_id: int) -> bool:
@@ -353,8 +408,7 @@ class Scheduler:
 
     def signatures(self) -> List[Tuple[Tuple, int]]:
         """Unique signatures with plannable (live, unreserved) work, in
-        service order, each with the best priority among its requests — what
-        an interleaving serve loop round-robins over."""
+        service order, each with the best priority among its requests."""
         out: List[Tuple[Tuple, int]] = []
         seen = set()
         for p in self._service_order():
@@ -366,23 +420,53 @@ class Scheduler:
                 out.append((sig, p.request.priority))
         return out
 
+    def groups(self) -> List[Tuple[Any, int]]:
+        """Unique *planning groups* with plannable work, in service order,
+        each with the best priority among its requests — what an
+        interleaving serve loop round-robins over.  With the identity
+        ``group_key`` this is exactly :meth:`signatures`; with bucketing the
+        list is shorter (bucketed signatures merge)."""
+        out: List[Tuple[Any, int]] = []
+        seen = set()
+        for p in self._service_order():
+            if self._unplanned(p) <= 0:
+                continue
+            g = self.group_key(p.request.signature)
+            if g not in seen:
+                seen.add(g)
+                out.append((g, p.request.priority))
+        return out
+
     def plan(self, slots: int, max_ticks: int = 1, *,
              signature: Optional[Tuple] = None,
+             group: Any = None,
              reserve: bool = False) -> Optional[SlotPlan]:
         """Build the next dispatch: up to ``max_ticks`` ticks of one
-        signature group, or None when no plannable work is queued.
+        planning group, or None when no plannable work is queued.
 
         Prunes cancelled entries first (their partial results are dropped),
-        then fills tick after tick over the chosen signature group exactly as
+        then fills tick after tick over the chosen group exactly as
         successive single-tick plans over that group would — multi-tick
         dispatch never changes *which* path runs in which slot.  It can
-        change cross-signature service order: the stack keeps draining one
-        signature, so an other-signature request queued in between waits for
-        the next dispatch (see the module docstring).
+        change cross-group service order: the stack keeps draining one
+        group, so an other-group request queued in between waits for the
+        next dispatch (see the module docstring).
 
-        ``signature`` pins the group (an interleaving serve loop round-robins
-        :meth:`signatures`); by default the group of the first plannable
-        request in service order — highest priority, then FIFO — is drained.
+        Within a group, ticks fill **one true signature at a time** in
+        service order of each signature's first plannable request, FIFO over
+        requests within a signature, contiguous over each request's path
+        indices; a tick never mixes signatures (the bucket executable takes
+        one ``active_steps`` scalar per tick), so switching signature closes
+        the current tick even if slots remain.  With the identity
+        ``group_key`` a group holds exactly one signature and this reduces
+        verbatim to the classic filling.
+
+        ``group`` pins the planning group (an interleaving serve loop
+        round-robins :meth:`groups`); ``signature`` pins the group *through*
+        a signature (kept for single-signature callers — it resolves to
+        ``group_key(signature)``).  By default the group of the first
+        plannable request in service order — highest priority, then FIFO —
+        is drained.
 
         ``reserve=True`` marks the planned paths in flight, so a later
         ``plan`` call (before this one is delivered) starts beyond them —
@@ -397,41 +481,67 @@ class Scheduler:
             # façade exposes it), so rebinding would strand held references
             self.queue.clear()
             self.queue.extend(live)
+        if signature is not None and group is not None:
+            raise ValueError("pass signature= or group=, not both")
         order = self._service_order()
-        sig = signature
-        if sig is None:
+        if signature is not None:
+            group = self.group_key(signature)
+        if group is None:
             for p in order:
                 if self._unplanned(p) > 0:
-                    sig = p.request.signature
+                    group = self.group_key(p.request.signature)
                     break
-        if sig is None:
+        if group is None:
             return None
+        # Members of the group, bucketed by true signature in service order
+        # of first appearance (each tick must stay signature-homogeneous).
+        by_sig: Dict[Tuple, List[PendingRequest]] = {}
+        sig_order: List[Tuple] = []
+        for p in order:
+            sig = p.request.signature
+            if self.group_key(sig) != group:
+                continue
+            if sig not in by_sig:
+                by_sig[sig] = []
+                sig_order.append(sig)
+            by_sig[sig].append(p)
         taken: Dict[PendingRequest, int] = {}
         ticks: List[List[Tuple[PendingRequest, int]]] = []
-        for _ in range(max_ticks):
-            tick: List[Tuple[PendingRequest, int]] = []
-            budget = slots
-            for p in order:
-                if budget == 0:
-                    break
-                if p.request.signature != sig:
-                    continue
-                start = p.delivered + p.reserved + taken.get(p, 0)
-                take = min(budget, p.request.n_paths - start)
-                tick.extend((p, start + j) for j in range(take))
-                if take:
-                    taken[p] = taken.get(p, 0) + take
-                    budget -= take
-            if not tick:
-                break  # signature group exhausted before max_ticks
-            ticks.append(tick)
+        tick_sigs: List[Tuple] = []
+        for sig in sig_order:
+            while len(ticks) < max_ticks:
+                tick: List[Tuple[PendingRequest, int]] = []
+                budget = slots
+                for p in by_sig[sig]:
+                    if budget == 0:
+                        break
+                    start = p.delivered + p.reserved + taken.get(p, 0)
+                    take = min(budget, p.request.n_paths - start)
+                    tick.extend((p, start + j) for j in range(take))
+                    if take:
+                        taken[p] = taken.get(p, 0) + take
+                        budget -= take
+                if not tick:
+                    break  # this signature exhausted; move to the next
+                ticks.append(tick)
+                tick_sigs.append(sig)
+            if len(ticks) >= max_ticks:
+                break
         if not ticks:
             return None
         if reserve:
             for p, n in taken.items():
                 p.reserved += n
-        return SlotPlan(signature=sig, slots=slots, ticks=ticks,
-                        reserved=reserve)
+        # Introspection: record the bucket (duck-typed — only bucket groups
+        # carry an n_padded rung) on every request the plan touches.
+        n_padded = getattr(group, "n_padded", None)
+        if n_padded is not None:
+            for p in taken:
+                p.bucket = group
+                p.n_padded_steps = n_padded - p.request.n_steps
+        return SlotPlan(signature=tick_sigs[0], slots=slots, ticks=ticks,
+                        reserved=reserve, group=group,
+                        tick_sigs=tuple(tick_sigs))
 
     def release(self, plan: SlotPlan) -> None:
         """Return an undispatched *reserved* plan's paths to the queue.
@@ -467,6 +577,9 @@ class Scheduler:
         results stay device-resident until the caller materialises them.
         """
         for t, tick in enumerate(plan.ticks):
+            dead = plan.slots - len(tick)
+            for p in dict.fromkeys(p for p, _ in tick):
+                p.n_padded_paths += dead
             for s, (p, i) in enumerate(tick):
                 if i != p.delivered:  # pragma: no cover — planner invariant
                     raise RuntimeError(
@@ -491,6 +604,9 @@ class Scheduler:
                 self.done[rid] = SampleResult(
                     y_final=stack(p.y_final),
                     ys=stack(p.ys) if p.ys else None,
+                    bucket=p.bucket,
+                    n_padded_steps=p.n_padded_steps,
+                    n_padded_paths=p.n_padded_paths,
                     **{name: (stack(getattr(p, name))
                               if getattr(p, name) else None)
                        for name in STAT_FIELDS},

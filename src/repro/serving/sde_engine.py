@@ -67,7 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import parse_solver_spec, select_solver
-from .executor import TickExecutor
+from .bucketing import BucketKey, BucketingConfig, bucket_key, group_key
+from .executor import TickExecutor, enable_persistent_compile_cache
 from .scheduler import (
     STAT_FIELDS,
     QueueFull,
@@ -99,6 +100,17 @@ class SDESampleConfig:
     # queue without bound.  None = unbounded (the PR-5 behaviour).
     max_queue_requests: Optional[int] = None
     max_queue_paths: Optional[int] = None
+    # Signature coalescing (PR 8): pad eligible fixed-grid requests up a
+    # powers-of-two step ladder so signatures that differ only in horizon
+    # length share one executable and stack into the same dispatch —
+    # bitwise-identical to exact dispatch (see repro.serving.bucketing).
+    # False is the exact opt-out: one executable per signature.
+    bucketing: bool = True
+    bucket_min_steps: int = 8
+    # Directory for jax's persistent compilation cache: compiled serving
+    # executables are written to disk and reloaded by later processes, so a
+    # restarted engine warm-starts instead of re-paying XLA compilation.
+    compile_cache_dir: Optional[str] = None
 
 
 class SDESampleEngine:
@@ -138,8 +150,15 @@ class SDESampleEngine:
         self.cfg = cfg
         self.args = args
         self.noise_shape = noise_shape
-        self.scheduler = Scheduler(max_requests=cfg.max_queue_requests,
-                                   max_paths=cfg.max_queue_paths)
+        if cfg.compile_cache_dir is not None:
+            enable_persistent_compile_cache(cfg.compile_cache_dir)
+        self._bucket_cfg = BucketingConfig(enabled=cfg.bucketing,
+                                           min_steps=cfg.bucket_min_steps)
+        self.scheduler = Scheduler(
+            max_requests=cfg.max_queue_requests,
+            max_paths=cfg.max_queue_paths,
+            group_key=lambda sig: group_key(sig, self._bucket_cfg),
+        )
         self.executor = TickExecutor(
             term, y0, args=args, noise_shape=noise_shape, dtype=cfg.dtype,
             mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
@@ -248,10 +267,49 @@ class SDESampleEngine:
         )
         return self.scheduler.enqueue(req)
 
-    def pending(self) -> Dict[int, int]:
+    def pending(self, detail: bool = False) -> Dict[int, Any]:
         """Paths still owed per queued request id — poll this between ticks
-        (cancelled requests drop out; completed ones move to ``done``)."""
-        return self.scheduler.pending()
+        (cancelled requests drop out; completed ones move to ``done``).
+
+        ``detail=True`` returns per-request dicts instead of bare counts:
+        ``remaining`` plus the coalescing introspection — ``bucket`` (the
+        :class:`~repro.serving.bucketing.BucketKey` the request was planned
+        into, None before planning or for exact dispatch),
+        ``n_padded_steps`` (masked padding steps per path) and
+        ``n_padded_paths`` (dead slots delivered alongside it so far)."""
+        return self.scheduler.pending(detail=detail)
+
+    def warmup(self, signatures) -> int:
+        """Ahead-of-time compile the executables a list of requests needs.
+
+        ``signatures`` is a list of submit-style dicts — ``{"solver": ...,
+        "t1": ..., "n_steps": ...}`` plus any of ``t0`` / ``save_every`` /
+        ``rtol`` / ``atol`` / ``save_at`` — describing expected traffic
+        (``n_paths`` / ``seed`` / ``priority`` are ignored: executables
+        depend only on the signature).  Each is resolved to its bucket (or
+        exact signature) and AOT-compiled at the configured ``slots`` for
+        both dispatch depths the engine uses (``ticks_per_dispatch`` and the
+        single-tick tail).  With ``compile_cache_dir`` set this also
+        populates the on-disk cache, so later processes warm-start.  Returns
+        the number of executables actually compiled by this call (already
+        cached entries — in memory or on disk — are cheap no-ops and do not
+        count)."""
+        fresh = 0
+        for spec in signatures:
+            spec = dict(spec)
+            for drop in ("n_paths", "seed", "priority"):
+                spec.pop(drop, None)
+            solver = spec.pop("solver")
+            term_kind = ("manifold" if hasattr(self.term, "algebra_increment")
+                         else "euclidean")
+            req = make_request(0, solver, term_kind=term_kind,
+                               n_paths=1, seed=0, **spec)
+            key = bucket_key(req.signature, self._bucket_cfg)
+            if key is None:
+                key = req.signature
+            for depth in {1, self.cfg.ticks_per_dispatch}:
+                fresh += self.executor.warmup(key, depth, self.cfg.slots)
+        return fresh
 
     def cancel(self, request_id: int) -> bool:
         """Cancel a queued request (partial results discarded).  True if this
@@ -307,9 +365,32 @@ class SDESampleEngine:
         ``ticks_per_dispatch`` executables per signature instead of two."""
         if plan.n_ticks in (1, self.cfg.ticks_per_dispatch):
             return [plan]
-        return [SlotPlan(plan.signature, plan.slots, [tick],
-                         reserved=plan.reserved)
-                for tick in plan.ticks]
+        return [SlotPlan(plan.tick_sigs[t] if plan.tick_sigs else
+                         plan.signature, plan.slots, [tick],
+                         reserved=plan.reserved, group=plan.group,
+                         tick_sigs=(plan.tick_sigs[t],)
+                         if plan.tick_sigs else None)
+                for t, tick in enumerate(plan.ticks)]
+
+    def _exec_key(self, plan: SlotPlan):
+        """What the executor caches/dispatches on for this plan: its bucket
+        when the scheduler grouped it into one, else its exact signature."""
+        if isinstance(plan.group, BucketKey):
+            return plan.group
+        return plan.signature
+
+    def _active_steps(self, plan: SlotPlan):
+        """The bucket executable's per-tick true-step-count operand (None for
+        exact dispatch).  Each tick is signature-homogeneous by planner
+        contract, so its entry is that tick's signature's ``n_steps``."""
+        if not isinstance(plan.group, BucketKey):
+            return None
+        return jnp.asarray([sig[3] for sig in plan.tick_sigs], jnp.int32)
+
+    def _dispatch(self, plan: SlotPlan, keys):
+        """Route one subplan to the executor — bucketed or exact."""
+        return self.executor.dispatch(self._exec_key(plan), keys,
+                                      self._active_steps(plan))
 
     def _take_plan(self, depth: int):
         """The next (plan, key stack) to dispatch: the staged pair when it is
@@ -362,7 +443,7 @@ class SDESampleEngine:
             sp_keys = keys if len(subplans) == 1 else \
                 keys[offset:offset + sp.n_ticks]
             offset += sp.n_ticks
-            result = self.executor.dispatch(sp.signature, sp_keys)
+            result = self._dispatch(sp, sp_keys)
             if i == len(subplans) - 1 and self.cfg.double_buffer:
                 # Device is (asynchronously) chewing on the stack we just
                 # dispatched; overlap the next plan's host work with it.

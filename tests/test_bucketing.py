@@ -1,0 +1,289 @@
+"""Signature coalescing (PR 8): bucketed dispatch must be bitwise-exact.
+
+The contract under test, layer by layer:
+
+* ``PaddedBrownianPath`` — row ``n`` of a padded driver's increments is
+  bit-equal to the unpadded ``BrownianPath`` on the same key (the masked
+  executable consumes the same noise the exact one would);
+* ``TimeGrid.padded_uniform`` — clamped time grid, static uniform ``h``;
+* ``sdeint_ticks(..., active_steps=, step_size=)`` — the padded multi-tick
+  executable equals per-tick jitted ``sdeint`` at each tick's true step
+  count, across solvers and adjoints (the ``lax.cond`` step mask's live
+  branch compiles to exactly the unpadded solve);
+* the serving engines — ``bucketing=True`` (default) returns
+  ``SampleResult``s bitwise-identical to ``bucketing=False`` for every
+  request in a mixed population, including off-ladder step counts and
+  ineligible (saved-trajectory / adaptive) requests that fall back to exact
+  dispatch — while compiling strictly fewer executables;
+* ``warmup()`` — AOT compilation changes no sample and leaves nothing to
+  compile at dispatch time;
+* introspection — ``pending(detail=True)`` and retired results surface the
+  bucket, padded steps, and dead-slot counts.
+
+References are jitted: on CPU an eager reference drifts from any compiled
+executable by an ulp through fusion differences, which would make this test
+measure XLA's whims instead of the coalescing layer.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core import (
+    BrownianPath,
+    PaddedBrownianPath,
+    TimeGrid,
+    sdeint,
+    sdeint_ticks,
+)
+from repro.core.solvers import SDETerm
+from repro.serving import (
+    AsyncSDESampleEngine,
+    BucketKey,
+    SDESampleConfig,
+    SDESampleEngine,
+)
+from repro.serving.bucketing import (
+    BucketingConfig,
+    bucket_eligible,
+    bucket_key,
+    group_key,
+    ladder_rung,
+)
+
+DIM = 3
+
+
+def make_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: a["nu"] * (a["mu"] - y),
+        diffusion=lambda t, y, a: a["sigma"] * jnp.cos(y),
+        noise="diagonal",
+    )
+
+
+TERM_ARGS = {"nu": jnp.float32(1.2), "mu": jnp.float32(0.3),
+             "sigma": jnp.float32(0.4)}
+Y0 = jnp.full((DIM,), 0.7, jnp.float32)
+# Engine tests use the ambient precision (f64 under the test-suite x64 flag),
+# matching test_serving's y0 idiom — the adaptive controller's time/step
+# arithmetic runs in ambient precision and expects y0 to match.
+ENGINE_Y0 = jnp.full((DIM,), 0.7)
+
+
+# -- bucketing pure functions -------------------------------------------------
+
+def test_ladder_rung():
+    assert ladder_rung(1) == 8 and ladder_rung(8) == 8
+    assert ladder_rung(9) == 16 and ladder_rung(16) == 16
+    assert ladder_rung(17) == 32 and ladder_rung(100) == 128
+    assert ladder_rung(3, min_steps=2) == 4  # doubling from the floor
+
+
+def _sig(solver="ees25", t0=0.0, t1=1.0, n_steps=32, save_every=None,
+         rtol=None, atol=None, save_at=None):
+    return (solver, t0, t1, n_steps, save_every, rtol, atol, save_at)
+
+
+def test_bucket_eligibility_and_keys():
+    cfg = BucketingConfig()
+    assert bucket_eligible(_sig())
+    assert not bucket_eligible(_sig(save_every=8))
+    assert not bucket_eligible(_sig(save_at=(0.5,)))
+    assert not bucket_eligible(_sig(rtol=1e-3))
+    assert not bucket_eligible(_sig(solver="ees25:adaptive"))
+
+    bk = bucket_key(_sig(n_steps=37), cfg)
+    assert bk == BucketKey("ees25", 0.0, 1.0 / 37, 64)
+    # coalescing condition: same exact-double h, different horizon, one rung
+    a = bucket_key(_sig(t1=1.0, n_steps=40), cfg)
+    b = bucket_key(_sig(t1=1.6, n_steps=64), cfg)
+    assert a == b  # 1/40 == 1.6/64 bitwise
+    # disabled / ineligible -> exact group, tagged so it can't collide
+    assert bucket_key(_sig(), BucketingConfig(enabled=False)) is None
+    g = group_key(_sig(save_every=8), cfg)
+    assert g == ("exact", _sig(save_every=8))
+
+
+# -- padded driver + grid -----------------------------------------------------
+
+def test_padded_brownian_rows_bitwise():
+    key = jax.random.PRNGKey(7)
+    exact = BrownianPath(key=key, t0=0.0, t1=1.25, n_steps=10,
+                         shape=(DIM,), dtype=jnp.float32)
+    padded = PaddedBrownianPath(key=key, t0=0.0, h=0.125, n_steps=16,
+                                shape=(DIM,), dtype=jnp.float32)
+    for n in range(10):
+        assert np.array_equal(np.asarray(exact.increment(n)),
+                              np.asarray(padded.increment(n)))
+
+
+def test_padded_uniform_grid():
+    g = TimeGrid.padded_uniform(0.0, 0.25, 3, 8)
+    assert g.is_padded
+    ts = np.asarray(g.ts)
+    # active steps advance, padding steps freeze at t0 + n_active*h
+    assert np.allclose(ts[:4], [0.0, 0.25, 0.5, 0.75])
+    assert np.allclose(ts[4:], 0.75)
+    assert g.uniform_h == 0.25  # static: the step mask never touches h
+    with pytest.raises(ValueError):
+        TimeGrid.padded_uniform(0.0, 0.25, jnp.arange(2), 8)  # non-scalar
+
+
+# -- core layer: padded sdeint_ticks vs exact per-tick sdeint ----------------
+
+CORE_CASES = [
+    ("ees25", "full"),
+    ("ees25", "recursive"),
+    ("milstein", "full"),
+    ("mcf-rk4", "full"),
+    ("reversible-heun", "reversible"),
+]
+
+
+@pytest.mark.parametrize("solver,adjoint", CORE_CASES)
+def test_padded_ticks_bitwise_vs_exact(solver, adjoint):
+    term = make_term()
+    n_pad, slots = 32, 4
+    actives = (20, 32, 9)
+    h = 1.0 / 32
+    tick_keys = jax.vmap(
+        lambda t: jax.vmap(lambda s: jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), t), s)
+        )(jnp.arange(slots))
+    )(jnp.arange(len(actives)))
+
+    got = sdeint_ticks(term, solver, 0.0, n_pad * h, n_pad, Y0, tick_keys,
+                       active_steps=jnp.asarray(actives), step_size=h,
+                       args=TERM_ARGS, adjoint=adjoint)
+
+    for t, n in enumerate(actives):
+        ref = jax.jit(lambda keys, n=n: sdeint(
+            term, solver, 0.0, n * h, n, Y0, None, batch_keys=keys,
+            args=TERM_ARGS, adjoint=adjoint))(tick_keys[t])
+        assert np.array_equal(np.asarray(got.y_final[t]),
+                              np.asarray(ref.y_final)), \
+            f"tick {t} (n_active={n}) diverged from exact dispatch"
+
+
+def test_padded_ticks_rejects_bad_args():
+    term = make_term()
+    keys = jax.random.split(jax.random.PRNGKey(0), 4).reshape(1, 4, 2)
+    with pytest.raises(ValueError):  # step_size without active_steps
+        sdeint_ticks(term, "ees25", 0.0, 1.0, 8, Y0, keys, step_size=0.125,
+                     args=TERM_ARGS)
+    with pytest.raises(ValueError):  # active_steps without step_size
+        sdeint_ticks(term, "ees25", 0.0, 1.0, 8, Y0, keys,
+                     active_steps=jnp.asarray([4]), args=TERM_ARGS)
+    with pytest.raises(ValueError):  # saved trajectories can't be padded
+        sdeint_ticks(term, "ees25", 0.0, 1.0, 8, Y0, keys,
+                     active_steps=jnp.asarray([4]), step_size=0.125,
+                     save_every=2, args=TERM_ARGS)
+
+
+# -- engine layer: bucketed == unbucketed, fewer executables ------------------
+
+# Mixed population: two ees25 horizons sharing h AND a rung (coalesce into
+# one bucket), an off-ladder heun, a saved-trajectory request and an
+# adaptive request (both exact fallback).
+POP = [
+    dict(solver="ees25", t1=20 / 32, n_steps=20, n_paths=11, seed=1),
+    dict(solver="ees25", t1=1.0, n_steps=32, n_paths=5, seed=2),
+    dict(solver="heun", t1=1.0, n_steps=27, n_paths=19, seed=3),
+    dict(solver="ees25", t1=1.0, n_steps=32, n_paths=6, seed=4,
+         save_every=16),
+    dict(solver="ees25:adaptive", t1=1.0, n_steps=64, n_paths=3, seed=5,
+         rtol=1e-3, atol=1e-6),
+]
+
+
+def _run_engine(bucketing, *, slots=8, tpd=2, warm_specs=None):
+    eng = SDESampleEngine(
+        make_term(), ENGINE_Y0,
+        SDESampleConfig(slots=slots, ticks_per_dispatch=tpd,
+                        bucketing=bucketing, dtype=ENGINE_Y0.dtype),
+        args=TERM_ARGS)
+    if warm_specs is not None:
+        eng.warmup(warm_specs)
+    rids = [eng.submit(**p) for p in POP]
+    done = eng.run()
+    return eng, [done[r] for r in rids]
+
+
+def _assert_results_bitwise(got, want):
+    for k, (a, b) in enumerate(zip(got, want)):
+        assert np.array_equal(np.asarray(a.y_final),
+                              np.asarray(b.y_final)), f"request {k} y_final"
+        assert (a.ys is None) == (b.ys is None)
+        if a.ys is not None:
+            assert np.array_equal(np.asarray(a.ys), np.asarray(b.ys)), \
+                f"request {k} ys"
+
+
+def test_engine_bucketed_bitwise_and_fewer_executables():
+    eb, rb = _run_engine(True)
+    eu, ru = _run_engine(False)
+    _assert_results_bitwise(rb, ru)
+    # the two rung-32 ees25 signatures share one bucket executable (cache
+    # entries are (key, depth) pairs, so count unique dispatch keys)
+    exec_keys = {k for k, _ in eb._compiled}
+    assert len(exec_keys) < len({k for k, _ in eu._compiled})
+    n_buckets = sum(isinstance(k, BucketKey) for k in exec_keys)
+    assert n_buckets == 2  # ees25 rung 32 (shared) + heun rung 32
+    # introspection: coalesced requests carry their bucket + padding
+    assert isinstance(rb[0].bucket, BucketKey)
+    assert rb[0].bucket == rb[1].bucket  # coalesced
+    assert rb[0].n_padded_steps == 12 and rb[1].n_padded_steps == 0
+    assert rb[2].n_padded_steps == 32 - 27
+    assert rb[3].bucket is None and rb[4].bucket is None  # exact fallback
+    assert ru[0].bucket is None  # opt-out: nothing coalesces
+
+
+def test_engine_warmup_is_aot_and_bitwise():
+    _, ref = _run_engine(True)
+    eng, got = _run_engine(True, warm_specs=[dict(p) for p in POP])
+    _assert_results_bitwise(got, ref)
+    # warmup covered every executable the run needed: dispatch compiled
+    # nothing (all cache entries are AOT Compiled objects, not jit wrappers)
+    assert all(not hasattr(fn, "lower") for fn in eng._compiled.values())
+
+
+def test_async_engine_bucketed_bitwise():
+    _, ref = _run_engine(True)
+
+    async def serve():
+        cfg = SDESampleConfig(slots=8, ticks_per_dispatch=2,
+                              dtype=ENGINE_Y0.dtype)
+        async with AsyncSDESampleEngine(make_term(), ENGINE_Y0, cfg,
+                                        args=TERM_ARGS) as eng:
+            rids = [await eng.submit(**p) for p in POP]
+            return [await eng.result(rid, numpy=True) for rid in rids]
+
+    got = asyncio.run(serve())
+    _assert_results_bitwise(got, ref)
+    assert isinstance(got[0].bucket, BucketKey)
+    assert got[0].n_padded_steps == 12
+
+
+def test_pending_detail_introspection():
+    eng = SDESampleEngine(
+        make_term(), ENGINE_Y0, SDESampleConfig(slots=4, ticks_per_dispatch=1, dtype=ENGINE_Y0.dtype),
+        args=TERM_ARGS)
+    rid = eng.submit("ees25", t1=20 / 32, n_steps=20, n_paths=10, seed=0)
+    assert eng.pending() == {rid: 10}
+    detail = eng.pending(detail=True)
+    assert detail[rid]["remaining"] == 10
+    assert detail[rid]["bucket"] is None  # not planned yet
+    eng.tick()
+    detail = eng.pending(detail=True)
+    assert detail[rid]["remaining"] == 6
+    assert isinstance(detail[rid]["bucket"], BucketKey)
+    assert detail[rid]["bucket"].n_padded == 32
+    assert detail[rid]["n_padded_steps"] == 12
+    res = eng.run()[rid]
+    assert res.n_padded_steps == 12
+    # 10 paths over 4-wide ticks: the last tick carries 2 dead slots
+    assert res.n_padded_paths == 2

@@ -289,8 +289,12 @@ class TestServingDispatch:
     def test_batch_fn_reused_across_ticks(self):
         from repro.serving import SDESampleConfig, SDESampleEngine
 
+        # bucketing=False: this probes the exact-signature dispatch path
+        # (the bucketed path's executable reuse is covered in
+        # tests/test_bucketing.py)
         eng = SDESampleEngine(diag_term(), jnp.ones(3),
-                              SDESampleConfig(slots=2), args=args())
+                              SDESampleConfig(slots=2, bucketing=False),
+                              args=args())
         rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=5, seed=1)
         sig = eng.queue[0].request.signature
         fn_first = eng.executor._stack_fn(sig, 1)
