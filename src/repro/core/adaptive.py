@@ -72,6 +72,8 @@ class AdaptiveResult(NamedTuple):
     h_final: jnp.ndarray     # last proposed step size
     n_accepted: jnp.ndarray
     n_rejected: jnp.ndarray
+    # Scalar bool blow-up flag (see SolveResult.diverged); None with guard off.
+    diverged: Any = None
 
 
 class RealizedGrid(NamedTuple):
@@ -292,6 +294,7 @@ def integrate_adaptive(
     adjoint: str = "full",
     remat_chunk: Optional[int] = None,
     bulk_increments: bool = True,
+    guard: Optional[float] = None,
 ) -> AdaptiveResult:
     """PI-controlled adaptive integration of ``term`` over ``[t0, t1]``.
 
@@ -337,6 +340,13 @@ def integrate_adaptive(
         level-sweep over the tree and streams the buffer through the solve
         (see :func:`~repro.core.adjoint.solve`); ``False`` re-queries the
         tree per step.  Bit-identical increments either way.
+    guard:
+        Blow-up guard threshold (see :func:`~repro.core.adjoint.solve`).
+        ``bounded=True`` threads it through the phase-2 solve;
+        ``bounded=False`` checks the controller's terminal state (the
+        accept/reject loop already rejects its way around transient spikes,
+        so the terminal check is the meaningful one).  ``None`` disables
+        (``AdaptiveResult.diverged`` is ``None``).
 
     Example
     -------
@@ -369,8 +379,13 @@ def integrate_adaptive(
             max_steps=int(max_steps), save_at=save_at, record_grid=False,
         )
         y, t, h, _, _, na, nr, ys_out, _, _ = final
+        div = None
+        if guard is not None:
+            from .pytree import tree_blowup
+
+            div = tree_blowup(y, guard)
         return AdaptiveResult(y_final=y, ys=ys_out, t_final=t, h_final=h,
-                              n_accepted=na, n_rejected=nr)
+                              n_accepted=na, n_rejected=nr, diverged=div)
 
     from .adjoint import solve
 
@@ -381,7 +396,7 @@ def integrate_adaptive(
     )
     out = solve(solver, term, y0, rg.grid, args, adjoint=adjoint,
                 save_at=save_at, remat_chunk=remat_chunk,
-                bulk_increments=bulk_increments)
+                bulk_increments=bulk_increments, guard=guard)
     return AdaptiveResult(y_final=out.y_final, ys=out.ys, t_final=rg.t_final,
                           h_final=rg.h_final, n_accepted=rg.n_accepted,
-                          n_rejected=rg.n_rejected)
+                          n_rejected=rg.n_rejected, diverged=out.diverged)

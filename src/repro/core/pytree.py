@@ -9,11 +9,16 @@ carrying private copies:
 * ``tree_select`` — leafwise ``jnp.where`` on a scalar predicate (the masked
   no-op step used by both the accept/reject controller and the padded
   realized-grid solve);
+* ``tree_blowup`` — scalar blow-up predicate (any non-finite leaf entry, or
+  any magnitude above a threshold) reduced over the inexact leaves of a
+  state pytree — the in-loop divergence guard's one primitive;
 * ``resolve_solver`` — spec string / raw coefficient set / solver object →
   solver object, with an optional loud check for the embedded error estimate
   that adaptive stepping requires.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +30,7 @@ __all__ = [
     "tree_axpy",
     "tree_zeros_like",
     "tree_select",
+    "tree_blowup",
     "resolve_solver",
 ]
 
@@ -53,6 +59,39 @@ def tree_zeros_like(x):
 def tree_select(pred, a, b):
     """Leafwise ``where(pred, a, b)`` for a scalar (or broadcastable) pred."""
     return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_blowup(x, threshold=None):
+    """Scalar bool: does any inexact leaf of ``x`` contain a non-finite entry
+    (or, with ``threshold``, a magnitude above it)?
+
+    Purely an observer — it reads the state, never feeds back into it — so
+    wiring it alongside a solve loop cannot perturb the integration.  Integer
+    and bool leaves are skipped (they cannot blow up).
+
+    This runs once per solver step when the blow-up guard is on, so it is
+    kept to a single comparison + reduce per leaf: for a finite threshold,
+    ``~(|x| <= thr)`` flags NaN and ±Inf for free (they fail ``<=``), which
+    is measurably cheaper inside a scan than ``~isfinite | (|x| > thr)``.
+    """
+    finite_thr = threshold is not None and not (
+        isinstance(threshold, float) and math.isinf(threshold)
+    )
+    flags = []
+    for leaf in jax.tree_util.tree_leaves(x):
+        arr = jnp.asarray(leaf)
+        if not jnp.issubdtype(arr.dtype, jnp.inexact):
+            continue
+        if finite_thr:
+            flags.append(~jnp.all(jnp.abs(arr) <= threshold))
+        else:
+            flags.append(~jnp.all(jnp.isfinite(arr)))
+    if not flags:
+        return jnp.asarray(False)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out | f
+    return out
 
 
 def resolve_solver(solver, *, require_error_estimate: bool = False):

@@ -100,6 +100,7 @@ def sdeint(
     bm_tol: Optional[float] = None,
     bounded: bool = True,
     bulk_increments: bool = True,
+    guard: Optional[float] = None,
     noise_shape=None,
     dtype=None,
     batch_keys: Optional[jax.Array] = None,
@@ -189,6 +190,12 @@ def sdeint(
         gradients match the per-step path to ulp-level), per-step RNG
         hoisted out of the sequential hot loop (see
         ``docs/performance.md``).  ``False`` restores per-step generation.
+    guard:
+        Blow-up guard threshold (see :func:`repro.core.adjoint.solve`): when
+        set, the result carries a per-trajectory ``diverged`` bool (any
+        non-finite state entry, or ``|y| > guard``, at any step) computed
+        in-loop on device — no host sync, and bitwise-identical solutions
+        with the guard on or off.  ``None`` (default) disables it.
     noise_shape:
         Shape of one Brownian increment.  Defaults to the state's shape for
         diagonal noise; required for ``noise="general"``.
@@ -225,7 +232,7 @@ def sdeint(
         term, solver, t0, t1, n_steps, y0, args=args, adjoint=adjoint,
         save_every=save_every, remat_chunk=remat_chunk, adaptive=adaptive,
         save_at=save_at, rtol=rtol, atol=atol, h0=h0, bm_tol=bm_tol,
-        bounded=bounded, bulk_increments=bulk_increments,
+        bounded=bounded, bulk_increments=bulk_increments, guard=guard,
         noise_shape=noise_shape, dtype=dtype,
     )
 
@@ -341,7 +348,7 @@ def _trajectory_fn(
     term, solver, t0, t1, n_steps, y0, *, args=None, adjoint="full",
     save_every=None, remat_chunk=None, adaptive=False, save_at=None,
     rtol=None, atol=None, h0=None, bm_tol=None, bounded=True,
-    bulk_increments=True, noise_shape=None, dtype=None,
+    bulk_increments=True, guard=None, noise_shape=None, dtype=None,
 ):
     """Validate options and build the single-trajectory ``key -> result`` fn
     (shared by :func:`sdeint` and :func:`sdeint_ticks`)."""
@@ -397,7 +404,7 @@ def _trajectory_fn(
                 solver, term, y0, vbt, args, t0=t0, t1=t1,
                 h0=h0, max_steps=int(n_steps), save_at=save_at,
                 bounded=bounded, adjoint=adjoint, remat_chunk=remat_chunk,
-                bulk_increments=bulk_increments,
+                bulk_increments=bulk_increments, guard=guard,
                 **tols,
             )
     else:
@@ -406,7 +413,7 @@ def _trajectory_fn(
             return solve(
                 solver, term, y0, bm, args,
                 adjoint=adjoint, save_every=save_every, remat_chunk=remat_chunk,
-                bulk_increments=bulk_increments,
+                bulk_increments=bulk_increments, guard=guard,
             )
 
     return one
@@ -416,7 +423,7 @@ def _padded_trajectory_fn(
     term, solver, t0, n_padded, y0, h, *, args=None, adjoint="full",
     save_every=None, remat_chunk=None, adaptive=False, save_at=None,
     rtol=None, atol=None, h0=None, bm_tol=None, bounded=True,
-    bulk_increments=True, noise_shape=None, dtype=None,
+    bulk_increments=True, guard=None, noise_shape=None, dtype=None,
 ):
     """Build the padded single-trajectory ``(key, n_active) -> result`` fn
     for bucketed dispatch: ``h`` is the bucket's exact static step size,
@@ -456,7 +463,7 @@ def _padded_trajectory_fn(
         grid = TimeGrid.padded_uniform(t0, h, n_active, n_padded, bm)
         return solve(solver, term, y0, grid, args, adjoint=adjoint,
                      remat_chunk=remat_chunk,
-                     bulk_increments=bulk_increments)
+                     bulk_increments=bulk_increments, guard=guard)
 
     return one
 

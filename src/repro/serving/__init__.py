@@ -13,12 +13,16 @@
                  submit/result with backpressure, cross-signature
                  interleaving, host-side double buffering, device-resident
                  results
+  faults       — deterministic fault injection (NaN trajectories, transient
+                 executor crashes, delays) + FakeClock, for exercising the
+                 robustness layer (guards, retries, deadlines, restarts)
 """
 from .async_engine import AsyncSDESampleEngine
 from .bucketing import BucketingConfig, BucketKey, bucket_key, group_key, ladder_rung
 from .engine import Engine, ServeConfig
 from .executor import TickExecutor, enable_persistent_compile_cache
-from .scheduler import QueueFull, Scheduler, SlotPlan
+from .faults import FakeClock, FaultConfig, FaultyExecutor, InjectedCrash, inject_faults
+from .scheduler import QueueFull, RetryPolicy, Scheduler, SlotPlan
 from .sde_engine import SampleRequest, SampleResult, SDESampleConfig, SDESampleEngine
 
 __all__ = [
@@ -39,4 +43,10 @@ __all__ = [
     "SDESampleConfig",
     "SampleRequest",
     "SampleResult",
+    "RetryPolicy",
+    "FaultConfig",
+    "FaultyExecutor",
+    "FakeClock",
+    "InjectedCrash",
+    "inject_faults",
 ]

@@ -21,17 +21,27 @@ What the async plane adds:
   different-signature request of its first tick for the whole burst.
 * **Host-side double buffering** — jax dispatch is asynchronous, so right
   after stack N is handed to the device the loop scatters N's results
-  *lazily* (device-resident slices), resolves any retired futures, and
-  immediately plans + key-packs stack N+1 on the host while the device
-  integrates.  At most two dispatches are in flight: before dispatching
-  N+2 the loop awaits N's buffers off-thread (``asyncio.to_thread``), which
-  also keeps the event loop responsive for submitters.
+  *lazily* (device-resident slices) and immediately plans + key-packs stack
+  N+1 on the host while the device integrates.  At most two dispatches are
+  in flight: before dispatching N+2 the loop awaits N's buffers off-thread
+  (``asyncio.to_thread``), which also keeps the event loop responsive for
+  submitters.
 * **Device-resident results** — delivery slices and stacks dispatch outputs
   as jax arrays (``Scheduler.deliver(..., stack=jnp.stack)``); nothing is
   copied to host numpy unless the caller asks
   (``await eng.result(rid, numpy=True)``), so a large ``n_paths`` drain
   whose consumer feeds another device computation never round-trips
   through the host.
+* **Robustness (PR 9, see ``docs/robustness.md``)** — retirement and
+  *finalization* are split: a retired request's divergence flags are read
+  (and its retry-vs-surface decision made) only when the serve loop next
+  lands a stack, so the blow-up guard costs no extra host sync in the
+  dispatch hot path.  Deadlines wake their ``result`` waiters with
+  ``TimeoutError``; a *transient* executor crash (e.g. an injected fault —
+  :mod:`repro.serving.faults`) restarts the serve loop under supervision,
+  and because async plans are unreserved and delivery is atomic per
+  subplan, the replan after a crash re-issues exactly the undelivered
+  ticks: no request is lost, duplicated, or left hanging.
 
 Determinism is inherited, not re-proved: samples are pure functions of
 ``(seed, path index)`` and every slot-plan invariant is shared with the
@@ -43,7 +53,8 @@ depths, priorities, and interleavings (regression-tested in
 from __future__ import annotations
 
 import asyncio
-from typing import Dict, List, Optional
+import dataclasses
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +76,8 @@ class AsyncSDESampleEngine:
 
     Construction mirrors :class:`~repro.serving.sde_engine.SDESampleEngine`
     (``term``/``y0`` define the process; :class:`SDESampleConfig` sizes the
-    plane — ``max_queue_paths`` is what turns ``submit`` backpressure on).
+    plane — ``max_queue_paths`` is what turns ``submit`` backpressure on;
+    ``clock`` overrides the deadline clock, for deterministic tests).
     Use as an async context manager, or call :meth:`close` explicitly::
 
         async with AsyncSDESampleEngine(term, y0, cfg) as eng:
@@ -77,9 +89,9 @@ class AsyncSDESampleEngine:
     """
 
     def __init__(self, term, y0, cfg: SDESampleConfig = SDESampleConfig(),
-                 args=None, noise_shape=None):
+                 args=None, noise_shape=None, clock=None):
         self._eng = SDESampleEngine(term, y0, cfg, args=args,
-                                    noise_shape=noise_shape)
+                                    noise_shape=noise_shape, clock=clock)
         self.cfg = self._eng.cfg
         self.scheduler = self._eng.scheduler
         self.executor = self._eng.executor
@@ -89,6 +101,11 @@ class AsyncSDESampleEngine:
         self._waiters: Dict[int, asyncio.Future] = {}
         self._last_group = None
         self._closed = False
+        # Retired-but-not-finalized request ids (append order = retirement
+        # order).  An instance attribute — NOT serve-loop local state — so a
+        # supervised restart after an injected crash still finalizes (and,
+        # if diverged, retries) everything the crashed loop had delivered.
+        self._pending_fin: List[int] = []
 
     # -- client surface ------------------------------------------------------
 
@@ -112,14 +129,17 @@ class AsyncSDESampleEngine:
                      seed: Optional[int] = None,
                      rtol: Optional[float] = None,
                      atol: Optional[float] = None, save_at=None,
-                     priority: int = 0) -> int:
+                     priority: int = 0,
+                     deadline_ms: Optional[float] = None) -> int:
         """Queue a sampling request; returns its request id.
 
         Same options and validation as the sync engine's ``submit`` (plus
-        the same ``priority`` semantics), but admission control applies
-        *backpressure*: a full bounded queue makes this coroutine wait for
-        space — it only raises for malformed requests, never
-        :class:`QueueFull`."""
+        the same ``priority`` / ``deadline_ms`` semantics), but admission
+        control applies *backpressure*: a full bounded queue makes this
+        coroutine wait for space — it only raises for malformed requests,
+        never :class:`QueueFull`.  A request whose ``deadline_ms`` elapses
+        before delivery wakes its :meth:`result` waiter with
+        ``TimeoutError`` and frees its admission capacity."""
         if self._closed:
             raise RuntimeError("engine is closed")
         self._ensure_serving()
@@ -131,33 +151,52 @@ class AsyncSDESampleEngine:
                     solver, t1=t1, n_steps=n_steps, n_paths=n_paths, t0=t0,
                     save_every=save_every, seed=seed, rtol=rtol, atol=atol,
                     save_at=save_at, priority=priority,
+                    deadline_ms=deadline_ms,
                 )
                 break
             except QueueFull:
                 # Single-threaded event loop: capacity can only appear via
-                # the serve task (retirement) or cancel(), both of which set
-                # the event after this clear — no lost wakeup.
+                # the serve task (retirement/expiry) or cancel(), all of
+                # which set the event after this clear — no lost wakeup.
                 self._space.clear()
                 await self._space.wait()
         self._work.set()
         return rid
+
+    def _unfinalized(self, request_id: int) -> bool:
+        """Whether ``request_id`` (a root id) has a retirement still awaiting
+        finalization — its own, or a retry child's.  A result in ``done``
+        for such an id is provisional: finalization may pull it back onto
+        the queue as a degraded retry."""
+        return any(self._eng._retry_parent.get(c, c) == request_id
+                   for c in self._pending_fin)
 
     async def result(self, request_id: int, *, numpy: bool = False
                      ) -> SampleResult:
         """Await a request's :class:`SampleResult`.
 
         Returns device-resident jax arrays once every path is integrated
-        (the await covers device completion, not just retirement);
+        (the await covers device completion, not just retirement) **and**
+        the engine finalized it — its divergence flags read, any retry
+        ladder run to completion;
         ``numpy=True`` additionally materialises host copies off-thread.
         Raises ``asyncio.CancelledError`` if the request was (or gets)
-        cancelled, ``KeyError`` for ids this engine never issued."""
+        cancelled, ``TimeoutError`` if its ``deadline_ms`` expired before
+        delivery, ``KeyError`` for ids this engine never issued."""
         res = self.done.get(request_id)
+        if res is not None and self._unfinalized(request_id):
+            res = None  # provisional: the engine may still retry it
         if res is None:
             if request_id in self.scheduler._cancelled_ids:
                 raise asyncio.CancelledError(
                     f"request {request_id} was cancelled")
-            if not any(p.request.request_id == request_id
-                       for p in self.scheduler.queue):
+            queued = any(p.request.request_id == request_id
+                         for p in self.scheduler.queue)
+            # A root mid-retry is absent from the queue (its degraded child
+            # rides there under a negative internal id) — it is known via
+            # the engine's attempt ledger, or via a pending finalization.
+            if not (queued or request_id in self._eng._retry_attempt
+                    or self._unfinalized(request_id)):
                 raise KeyError(f"unknown request id {request_id}")
             self._ensure_serving()
             fut = self._waiters.get(request_id)
@@ -165,6 +204,9 @@ class AsyncSDESampleEngine:
                 fut = asyncio.get_running_loop().create_future()
                 self._waiters[request_id] = fut
             res = await asyncio.shield(fut)
+        if res.timed_out:
+            raise TimeoutError(
+                f"request {request_id} deadline expired before delivery")
         # Block on the device buffers off-thread so concurrent submitters
         # and the serve loop keep running while XLA finishes.
         await asyncio.to_thread(jax.block_until_ready, _result_leaves(res))
@@ -184,15 +226,22 @@ class AsyncSDESampleEngine:
             self._space.set()
         return cancelled
 
-    async def drain(self) -> Dict[int, SampleResult]:
-        """Await every currently queued request; returns ``done``."""
-        rids = list(self.pending())
-        for rid in rids:
+    async def drain(self) -> Dict[Any, Any]:
+        """Await every currently queued request; returns a snapshot of
+        ``done`` plus one extra ``"counters"`` entry — the engine-lifetime
+        robustness counters (retries / timeouts / diverged / restarts), so
+        load tests and operators see retries without parsing logs.
+        Requests that get cancelled or time out mid-drain are skipped (both
+        are terminal; a timeout's state is in ``done`` / the counters)."""
+        roots = {self._eng._retry_parent.get(r, r) for r in self.pending()}
+        for rid in sorted(roots):
             try:
                 await self.result(rid)
-            except asyncio.CancelledError:
-                pass  # cancelled mid-drain by another client; nothing owed
-        return self.done
+            except (asyncio.CancelledError, TimeoutError):
+                pass  # terminal either way; nothing owed
+        out: Dict[Any, Any] = dict(self.done)
+        out["counters"] = dict(self._eng.counters)
+        return out
 
     async def close(self) -> None:
         """Stop the serve task.  Queued-but-unserved requests are abandoned:
@@ -204,6 +253,11 @@ class AsyncSDESampleEngine:
             try:
                 await self._task
             except asyncio.CancelledError:
+                pass
+            except Exception:
+                # The serve loop already crashed: its exception was handed
+                # to every waiter when it died — close() tearing down the
+                # engine must not raise it a second time.
                 pass
             self._task = None
         for fut in self._waiters.values():
@@ -253,39 +307,112 @@ class AsyncSDESampleEngine:
     def _deliver_device(self, plan, result) -> List[int]:
         """Scatter a dispatch lazily: slot slices and per-request stacks are
         jax operations on device buffers, so delivery never blocks on (or
-        copies to) the host."""
+        copies to) the host.  Retirement frees admission capacity right
+        away; *finalization* — reading the diverged flags, deciding
+        retry-vs-surface, waking waiters — is deferred to the serve loop's
+        next buffer landing (:meth:`_finalize`), so the guard never forces
+        a host sync against a stack still in flight."""
         outputs = {"y_final": result.y_final, "ys": result.ys}
         for name in STAT_FIELDS:
             outputs[name] = getattr(result, name, None)
         retired = self.scheduler.deliver(plan, outputs, stack=jnp.stack)
         for rid in retired:
             self._eng._key_cache.pop(rid, None)
-            fut = self._waiters.pop(rid, None)
-            if fut is not None and not fut.done():
-                fut.set_result(self.done[rid])
+        self._pending_fin.extend(retired)
         if retired:
             self._space.set()
         return retired
 
+    async def _finalize(self, n: int) -> None:
+        """Terminal bookkeeping for the first ``n`` retirements awaiting
+        finalization: read their diverged flags (awaited off-thread — they
+        may still be in flight after a crash-restart), let the engine book
+        divergence and run the retry ladder, and wake ``result`` waiters
+        with the terminal result.
+
+        The device sync happens while the ids are STILL in
+        ``_pending_fin``: the await yields the event loop, and a concurrent
+        ``result()`` must keep seeing them as provisional (``_unfinalized``)
+        or it would surface a diverged result the ladder is about to pull
+        back as a retry.  Only the serve task appends to ``_pending_fin``
+        and it is parked here, so the prefix is stable across the await;
+        everything after the sync is await-free, so removal, retry
+        enqueueing, and waiter wakeup are atomic w.r.t. the loop."""
+        if not n:
+            return
+        rids = self._pending_fin[:n]
+        flags = [self.done[r].diverged for r in rids
+                 if self.done.get(r) is not None
+                 and self.done[r].diverged is not None]
+        if flags:
+            await asyncio.to_thread(jax.block_until_ready, flags)
+        del self._pending_fin[:n]
+        retried = False
+        for rid in rids:
+            root = self._eng._finalize_retired(rid)
+            if root is None:
+                retried = True  # back on the queue, degraded
+                continue
+            fut = self._waiters.pop(root, None)
+            if fut is not None and not fut.done():
+                fut.set_result(self.done[root])
+        if retried:
+            self._work.set()
+
+    def _expire_wake(self) -> None:
+        """Retire deadline-expired requests and wake their waiters with
+        ``TimeoutError``; expiry frees admission capacity, so one blocked
+        ``submit`` may be admitted."""
+        expired = self._eng._expire()
+        for root in expired:
+            fut = self._waiters.pop(root, None)
+            if fut is not None and not fut.done():
+                fut.set_exception(TimeoutError(
+                    f"request {root} deadline expired before delivery"))
+        if expired:
+            self._space.set()
+
     async def _serve(self) -> None:
-        try:
-            await self._serve_loop()
-        except Exception as exc:  # fail awaiters loudly, never hang them
-            for fut in self._waiters.values():
-                if not fut.done():
-                    fut.set_exception(exc)
-            self._waiters.clear()
-            raise
+        while True:
+            try:
+                await self._serve_loop()
+                return
+            except asyncio.CancelledError:
+                raise
+            except Exception as exc:
+                transient = getattr(exc, "transient", False)
+                if (transient and self._eng.counters["restarts"]
+                        < self.cfg.max_restarts):
+                    # Supervised restart: async plans are unreserved and
+                    # delivery is atomic per subplan, so replanning after
+                    # the crash re-issues exactly the undelivered ticks —
+                    # no request lost or duplicated (property-tested in
+                    # tests/test_faults.py); _pending_fin survives, so
+                    # already-delivered work still finalizes.
+                    self._eng.counters["restarts"] += 1
+                    continue
+                # fail awaiters loudly, never hang them
+                for fut in self._waiters.values():
+                    if not fut.done():
+                        fut.set_exception(exc)
+                self._waiters.clear()
+                raise
 
     async def _serve_loop(self) -> None:
         inflight: Optional[List] = None  # previous dispatch's device buffers
         while True:
+            self._expire_wake()
             plan = self._next_plan()
             if plan is None:
-                if inflight is not None:
-                    await asyncio.to_thread(jax.block_until_ready, inflight)
-                    inflight = None
-                    continue  # a submit may have landed during the await
+                if inflight is not None or self._pending_fin:
+                    if inflight is not None:
+                        await asyncio.to_thread(jax.block_until_ready,
+                                                inflight)
+                        inflight = None
+                    await self._finalize(len(self._pending_fin))
+                    # a submit may have landed during the awaits, and a
+                    # finalized retry is plannable work — loop, don't sleep.
+                    continue
                 self._work.clear()
                 if self.scheduler.signatures():
                     continue  # raced with clear(): serve it, don't sleep
@@ -308,13 +435,23 @@ class AsyncSDESampleEngine:
                     # stay live meanwhile.
                     out = await asyncio.to_thread(
                         self.executor.dispatch, ek, sp_keys, active)
+                # Only retirements from dispatches BEFORE this one become
+                # finalizable once the previous stack lands; this dispatch's
+                # own retirees wait for the next landing (their diverged
+                # flags are still integrating on the device).
+                n_ready = len(self._pending_fin)
                 self._deliver_device(sp, out)
                 if inflight is not None:
                     # Double-buffer depth 2: the *previous* stack must land
                     # before a third enters flight.  Until it does, the plan
                     # and key-pack work above already overlapped the device.
                     await asyncio.to_thread(jax.block_until_ready, inflight)
-                inflight = jax.tree_util.tree_leaves((out.y_final, out.ys))
+                await self._finalize(n_ready)
+                # The diverged leaf rides in the landing set, so when the
+                # next landing finalizes this dispatch's retirees their
+                # flags are already past the device sync.
+                inflight = jax.tree_util.tree_leaves(
+                    (out.y_final, out.ys, getattr(out, "diverged", None)))
             # Let submitters/cancellers interleave between stacks even when
             # everything above completed synchronously.
             await asyncio.sleep(0)
@@ -322,9 +459,7 @@ class AsyncSDESampleEngine:
     @staticmethod
     def _to_numpy(res: SampleResult) -> SampleResult:
         conv = lambda x: None if x is None else np.asarray(x)  # noqa: E731
-        return SampleResult(
-            y_final=conv(res.y_final), ys=conv(res.ys),
-            bucket=res.bucket, n_padded_steps=res.n_padded_steps,
-            n_padded_paths=res.n_padded_paths,
+        return dataclasses.replace(
+            res, y_final=conv(res.y_final), ys=conv(res.ys),
             **{n: conv(getattr(res, n)) for n in STAT_FIELDS},
         )

@@ -68,7 +68,8 @@ class TickExecutor:
 
     def __init__(self, term, y0, *, args: Any = None, noise_shape=None,
                  dtype: Any = jnp.float32, mesh=None,
-                 mesh_axis: Optional[str] = None):
+                 mesh_axis: Optional[str] = None,
+                 guard: Optional[float] = None):
         if (mesh is None) != (mesh_axis is None):
             # Both or neither: a long-lived executor must not resolve the
             # mesh from whatever `with mesh:` context is ambient at dispatch
@@ -85,6 +86,12 @@ class TickExecutor:
         self.dtype = dtype
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        # In-loop blow-up guard threshold: every executable carries the
+        # per-path divergence check (see repro.core.adjoint.solve) and its
+        # results gain a (n_ticks, slots) bool ``diverged`` leaf.  The flag
+        # stays on device until the scheduler retires the request — no per-
+        # dispatch host sync.  None compiles guard-free executables.
+        self.guard = guard
         self._compiled: Dict[Tuple, Any] = {}
         # Host-round-trip accounting: n_dispatches counts jit re-entries
         # (host -> device round trips), n_ticks the engine ticks they served.
@@ -119,6 +126,7 @@ class TickExecutor:
                         step_size=bk.h, args=self.args,
                         noise_shape=self.noise_shape, dtype=self.dtype,
                         mesh=self.mesh, mesh_axis=self.mesh_axis,
+                        guard=self.guard,
                     )
             else:
                 solver, t0, t1, n_steps, save_every, rtol, atol, save_at = key
@@ -141,7 +149,8 @@ class TickExecutor:
                         self.term, solver, t0, t1, n_steps, self.y0,
                         tick_keys, args=self.args, save_every=save_every,
                         noise_shape=self.noise_shape, dtype=self.dtype,
-                        mesh=self.mesh, mesh_axis=self.mesh_axis, **extra,
+                        mesh=self.mesh, mesh_axis=self.mesh_axis,
+                        guard=self.guard, **extra,
                     )
 
             # Donate the key stack so its device buffer is reused across

@@ -1,0 +1,187 @@
+"""Deterministic fault injection for the SDE serving plane.
+
+The robustness layer (blow-up guard, retry ladder, deadlines, supervised
+serve loop — see ``docs/robustness.md``) is only trustworthy if it can be
+*exercised*: this module wraps a :class:`~repro.serving.executor.TickExecutor`
+in a :class:`FaultyExecutor` that injects three failure modes into dispatch,
+all driven by one seeded ``random.Random`` stream so every run of a test (or
+of ``benchmarks/bench_resilience.py``) sees the identical fault schedule:
+
+* **NaN trajectories** — corrupt chosen (tick, slot) cells of a dispatch's
+  outputs *after* the real integration ran, flipping the corresponding
+  ``diverged`` flag the way a genuine blow-up would.  Targeted cells
+  (``nan_slots``) make isolation tests exact; a rate (``nan_rate``) drives
+  statistical sweeps.
+* **Executor crashes** — raise :class:`InjectedCrash` (marked ``transient``)
+  *instead of* dispatching, before any device work: exactly the failure the
+  sync engine's reservation unwind and the async plane's supervised restart
+  must survive without losing or duplicating queued paths.
+* **Artificial delays** — ``time.sleep`` before dispatching, for deadline
+  and straggler scenarios.
+
+The injector composes with both engines through :func:`inject_faults`
+(swaps the executor on an engine that already exists), or by constructing a
+``FaultyExecutor`` around an executor directly.  Because corruption happens
+to the *outputs* of the real executor, the underlying samples, executable
+caches, and dispatch counters stay exactly those of the clean plane — an
+injected run differs from a clean run only where the schedule says so.
+
+:class:`FakeClock` is the matching deterministic time source for deadline
+tests: pass it as the engine's ``clock`` and ``advance()`` it explicitly —
+no sleeps, no flaky wall-clock margins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["InjectedCrash", "FaultConfig", "FaultyExecutor", "FakeClock",
+           "inject_faults"]
+
+
+class InjectedCrash(RuntimeError):
+    """A dispatch-time crash injected by :class:`FaultyExecutor`.
+
+    ``transient = True`` is the marker the async engine's supervised serve
+    loop keys restarts on — a real (non-transient) executor error still
+    fails the engine loudly."""
+
+    transient = True
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Schedule of injected faults; all draws come from ``Random(seed)``.
+
+    ``nan_rate`` / ``crash_rate`` / ``delay_rate`` are per-dispatch
+    probabilities (one draw each per dispatch call, in that order, so a
+    given seed yields one reproducible fault schedule regardless of which
+    rates are zero).  A NaN fault corrupts one uniformly-drawn (tick, slot)
+    cell; ``nan_slots`` instead names explicit ``(dispatch_index, tick,
+    slot)`` cells to corrupt — exact, schedule-independent targeting for
+    isolation tests (rates still apply on top if nonzero).  Likewise
+    ``crash_dispatches`` names explicit dispatch indices to crash — e.g.
+    ``(0,)`` for exactly one crash followed by a clean recovery, which is
+    what supervised-restart tests need (a crash *rate* would also crash the
+    restarted loop's first dispatch).  ``delay_s`` is the sleep injected by
+    a delay fault."""
+
+    seed: int = 0
+    nan_rate: float = 0.0
+    crash_rate: float = 0.0
+    delay_rate: float = 0.0
+    delay_s: float = 0.0
+    nan_slots: Optional[Tuple[Tuple[int, int, int], ...]] = None
+    crash_dispatches: Optional[Tuple[int, ...]] = None
+
+
+class FaultyExecutor:
+    """Wrap a ``TickExecutor`` (or compatible) with deterministic faults.
+
+    Everything not overridden here — ``warmup``, ``has_compiled``, the
+    compiled-executable cache, the dispatch counters — delegates to the
+    wrapped executor, so an engine cannot tell the difference until a fault
+    fires.  Injection counters (``n_crashes`` / ``n_nans`` / ``n_delays`` /
+    ``n_dispatch_calls``) record what actually fired, for asserting a test
+    exercised what it meant to."""
+
+    def __init__(self, inner, cfg: FaultConfig = FaultConfig()):
+        self.inner = inner
+        self.fault_cfg = cfg
+        self.rng = random.Random(cfg.seed)
+        self.n_dispatch_calls = 0
+        self.n_crashes = 0
+        self.n_nans = 0
+        self.n_delays = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def _corrupt(self, result, cells):
+        """NaN the given (tick, slot) cells of a dispatch result, flipping
+        the matching ``diverged`` flags — indistinguishable downstream from
+        a genuine blow-up (which is the point)."""
+
+        def nan_cell(leaf):
+            arr = jnp.asarray(leaf)
+            if not jnp.issubdtype(arr.dtype, jnp.inexact):
+                return leaf
+            for t, s in cells:
+                arr = arr.at[t, s].set(jnp.nan)
+            return arr
+
+        updates: dict = {"y_final": jax.tree_util.tree_map(
+            nan_cell, result.y_final)}
+        if getattr(result, "ys", None) is not None:
+            updates["ys"] = jax.tree_util.tree_map(nan_cell, result.ys)
+        div = getattr(result, "diverged", None)
+        if div is not None:
+            for t, s in cells:
+                div = div.at[t, s].set(True)
+            updates["diverged"] = div
+        return result._replace(**updates)
+
+    def dispatch(self, key, tick_keys, active_steps=None):
+        cfg = self.fault_cfg
+        idx = self.n_dispatch_calls
+        self.n_dispatch_calls += 1
+        # One draw per rate per dispatch, fixed order: the schedule for a
+        # seed is independent of which faults are enabled.
+        crash = self.rng.random() < cfg.crash_rate
+        nan = self.rng.random() < cfg.nan_rate
+        delay = self.rng.random() < cfg.delay_rate
+        n_ticks, slots = tick_keys.shape[0], tick_keys.shape[1]
+        rand_cell = (self.rng.randrange(n_ticks), self.rng.randrange(slots))
+        if crash or (cfg.crash_dispatches and idx in cfg.crash_dispatches):
+            self.n_crashes += 1
+            raise InjectedCrash(f"injected crash at dispatch {idx}")
+        if delay and cfg.delay_s > 0:
+            self.n_delays += 1
+            time.sleep(cfg.delay_s)
+        result = self.inner.dispatch(key, tick_keys, active_steps)
+        cells = []
+        if cfg.nan_slots:
+            cells += [(t, s) for d, t, s in cfg.nan_slots
+                      if d == idx and t < n_ticks and s < slots]
+        if nan:
+            cells.append(rand_cell)
+        if cells:
+            self.n_nans += len(cells)
+            result = self._corrupt(result, cells)
+        return result
+
+
+def inject_faults(engine, cfg: FaultConfig = FaultConfig()) -> FaultyExecutor:
+    """Swap ``engine``'s executor for a :class:`FaultyExecutor` around it.
+
+    Works on both :class:`~repro.serving.sde_engine.SDESampleEngine` and
+    :class:`~repro.serving.async_engine.AsyncSDESampleEngine` (whose
+    ``executor`` attribute is a view over the inner sync engine's).
+    Returns the injector so the caller can read its fired-fault counters."""
+    faulty = FaultyExecutor(engine.executor, cfg)
+    inner = getattr(engine, "_eng", engine)  # async façade wraps a sync core
+    inner.executor = faulty
+    if engine is not inner:
+        engine.executor = faulty
+    return faulty
+
+
+class FakeClock:
+    """Deterministic, manually-advanced clock for deadline tests.
+
+    Callable (so it drops in for ``time.monotonic`` as an engine/scheduler
+    ``clock``); ``advance(dt)`` moves time forward explicitly."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)

@@ -58,6 +58,7 @@ ordering, and double buffering.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -67,6 +68,7 @@ from repro.core import canonical_spec, parse_solver_spec, solver_kind
 
 __all__ = [
     "QueueFull",
+    "RetryPolicy",
     "SampleRequest",
     "SampleResult",
     "PendingRequest",
@@ -82,8 +84,11 @@ class QueueFull(RuntimeError):
     Sync callers should shed load (or retry later); the async engine's
     ``await submit`` catches this and waits for space instead."""
 
-# Per-path adaptive statistics riding along with every delivery.
-STAT_FIELDS = ("t_final", "n_accepted", "n_rejected")
+# Per-path statistics riding along with every delivery: the adaptive
+# controller stats plus the per-path blow-up flag from the in-loop guard
+# (``diverged`` — produced whenever the engine's guard is enabled, for
+# fixed-grid and adaptive requests alike; None when the guard is off).
+STAT_FIELDS = ("t_final", "n_accepted", "n_rejected", "diverged")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +110,11 @@ class SampleRequest:
     # priorities keep strict FIFO.  Never part of the signature — priority
     # says when a request runs, not what executable runs it.
     priority: int = 0
+    # Wall-clock budget: paths not delivered within deadline_ms of submit
+    # retire with a timeout result (sync) / a TimeoutError (async).  Never
+    # part of the signature — a deadline says how long a request may wait,
+    # not what executable runs it.
+    deadline_ms: Optional[float] = None
 
     @property
     def signature(self) -> Tuple:
@@ -130,6 +140,18 @@ class SampleResult:
     accepted/rejected — the realized grid a client would replay offline (via
     ``realize_grid`` with the same seed-derived key) for gradient work.
 
+    ``diverged`` (guard-enabled engines) is the (n_paths,) per-path blow-up
+    flag from the in-loop divergence guard: True where a path's state went
+    non-finite or exceeded the guard threshold at any step.  The samples are
+    whatever the solver computed (the guard is a pure observer); treat
+    flagged paths as unusable.  None when the guard is off.
+
+    ``timed_out`` marks a request whose ``deadline_ms`` elapsed before
+    delivery: its arrays are None and it retired with a timeout state
+    instead of samples.  ``retries`` counts degradation-ladder resubmits the
+    engine spent on this request (0 for a first-attempt completion; see
+    :class:`RetryPolicy`).
+
     ``bucket`` / ``n_padded_steps`` / ``n_padded_paths`` surface bucketed
     dispatch (PR 8) for operators watching padding waste: ``bucket`` is the
     :class:`~repro.serving.bucketing.BucketKey` this request was coalesced
@@ -146,9 +168,12 @@ class SampleResult:
     t_final: Optional[np.ndarray] = None
     n_accepted: Optional[np.ndarray] = None
     n_rejected: Optional[np.ndarray] = None
+    diverged: Optional[np.ndarray] = None
     bucket: Any = None
     n_padded_steps: int = 0
     n_padded_paths: int = 0
+    timed_out: bool = False
+    retries: int = 0
 
 
 @dataclasses.dataclass(eq=False)  # identity hash: instances are queue entries
@@ -165,15 +190,25 @@ class PendingRequest:
     bucket: Any = None
     n_padded_steps: int = 0
     n_padded_paths: int = 0
+    # Absolute wall-clock deadline (scheduler-clock seconds) when the
+    # request carries deadline_ms; set at enqueue time.
+    deadline: Optional[float] = None
     y_final: List[np.ndarray] = dataclasses.field(default_factory=list)
     ys: List[np.ndarray] = dataclasses.field(default_factory=list)
     t_final: List[np.ndarray] = dataclasses.field(default_factory=list)
     n_accepted: List[np.ndarray] = dataclasses.field(default_factory=list)
     n_rejected: List[np.ndarray] = dataclasses.field(default_factory=list)
+    diverged: List[np.ndarray] = dataclasses.field(default_factory=list)
 
     @property
     def remaining(self) -> int:
         return self.request.n_paths - self.delivered
+
+    def n_diverged(self) -> int:
+        """Delivered paths flagged by the blow-up guard so far.  Each entry
+        is one path's scalar flag; async deliveries keep them device-resident
+        until materialised, so this forces a transfer of tiny bools only."""
+        return int(sum(bool(np.asarray(d)) for d in self.diverged))
 
 
 @dataclasses.dataclass
@@ -217,11 +252,50 @@ class SlotPlan:
         return any(not p.cancelled for tick in self.ticks for p, _ in tick)
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Degradation ladder for diverged requests (see ``docs/robustness.md``).
+
+    A request whose delivered paths carry any guard ``diverged`` flag is
+    resubmitted by the engine down a two-stage ladder, at most
+    ``max_retries`` times total:
+
+    1. the first ``max_h_halvings`` retries **halve the step size** — same
+       solver, ``n_steps`` doubled over the same window (for adaptive
+       requests this doubles the trial-step budget);
+    2. further retries **fall back** to ``fallback_solver`` (``ees27`` — the
+       paper's widest-stability-region explicit scheme), preserving the
+       request's adaptive flag; if the request already runs the fallback
+       family, the ladder keeps halving instead.
+
+    Retries reuse the root request's seed, so a retried sample is exactly
+    what submitting the degraded spec directly would have produced —
+    reproducible, and bitwise-independent of when the retry happened."""
+
+    max_retries: int = 2
+    max_h_halvings: int = 1
+    fallback_solver: str = "ees27"
+
+    def degrade(self, request: "SampleRequest", attempt: int) -> Dict[str, Any]:
+        """Spec overrides for retry number ``attempt`` (0-based): a dict of
+        ``make_request`` keyword overrides (``solver`` / ``n_steps``)."""
+        base, opts = parse_solver_spec(request.solver)
+        fb = canonical_spec(self.fallback_solver)
+        fb_base, _ = parse_solver_spec(fb)
+        if attempt < self.max_h_halvings or base == fb_base:
+            return {"solver": request.solver, "n_steps": request.n_steps * 2}
+        solver = self.fallback_solver
+        if opts.get("adaptive", False):
+            solver = f"{solver}:adaptive"
+        return {"solver": canonical_spec(solver), "n_steps": request.n_steps}
+
+
 def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
                  n_steps: int, n_paths: int, t0: float = 0.0,
                  save_every: Optional[int] = None, seed: Optional[int] = None,
                  rtol: Optional[float] = None, atol: Optional[float] = None,
-                 save_at=None, priority: int = 0) -> SampleRequest:
+                 save_at=None, priority: int = 0,
+                 deadline_ms: Optional[float] = None) -> SampleRequest:
     """Validate request options and build a :class:`SampleRequest`.
 
     Raises on anything malformed — this runs at submit time, not at the
@@ -281,6 +355,10 @@ def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
             )
     if int(priority) != priority:
         raise ValueError(f"priority must be an int, got {priority!r}")
+    if deadline_ms is not None:
+        deadline_ms = float(deadline_ms)
+        if not deadline_ms > 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
     return SampleRequest(
         request_id=request_id, solver=solver, t0=float(t0), t1=float(t1),
         n_steps=n_steps, n_paths=int(n_paths), save_every=save_every,
@@ -289,6 +367,7 @@ def make_request(request_id: int, solver: str, *, term_kind: str, t1: float,
         atol=None if atol is None else float(atol),
         save_at=save_at,
         priority=int(priority),
+        deadline_ms=deadline_ms,
     )
 
 
@@ -306,12 +385,15 @@ class Scheduler:
     contract)."""
 
     def __init__(self, max_requests: Optional[int] = None,
-                 max_paths: Optional[int] = None, group_key=None):
+                 max_paths: Optional[int] = None, group_key=None, clock=None):
         self.queue: Deque[PendingRequest] = deque()
         self.done: Dict[int, SampleResult] = {}
         self.max_requests = max_requests
         self.max_paths = max_paths
         self.group_key = group_key if group_key is not None else (lambda sig: sig)
+        # Deadline clock: monotonic seconds.  Injectable (fault-injection
+        # tests pass a FakeClock) so deadline behaviour is deterministic.
+        self.clock = clock if clock is not None else time.monotonic
         self._next_id = 0
         self._cancelled_ids: set = set()
 
@@ -328,16 +410,21 @@ class Scheduler:
         self._next_id += 1
         return rid
 
-    def enqueue(self, request: SampleRequest) -> int:
+    def enqueue(self, request: SampleRequest, *, force: bool = False) -> int:
+        """Admit ``request`` into the queue (raising :class:`QueueFull` at
+        capacity).  ``force=True`` bypasses admission control — reserved for
+        the engine's internal retry resubmits, which replace capacity an
+        earlier admit already granted and must never be refused (a refused
+        retry would strand its waiter)."""
         live = [p for p in self.queue if not p.cancelled]
-        if (self.max_requests is not None
+        if (not force and self.max_requests is not None
                 and len(live) + 1 > self.max_requests):
             raise QueueFull(
                 f"queue holds {len(live)} live request(s); admission limit is "
                 f"max_requests={self.max_requests} — drain, cancel, or raise "
                 "the limit (the async engine awaits space instead)"
             )
-        if self.max_paths is not None:
+        if not force and self.max_paths is not None:
             owed = sum(p.remaining for p in live)
             if owed + request.n_paths > self.max_paths:
                 raise QueueFull(
@@ -346,7 +433,10 @@ class Scheduler:
                     f"{self.max_paths}"
                 )
         self._next_id = max(self._next_id, request.request_id + 1)
-        self.queue.append(PendingRequest(request))
+        entry = PendingRequest(request)
+        if request.deadline_ms is not None:
+            entry.deadline = self.clock() + request.deadline_ms / 1e3
+        self.queue.append(entry)
         return request.request_id
 
     # -- introspection / cancellation ---------------------------------------
@@ -361,15 +451,23 @@ class Scheduler:
         into once planned; None before planning or for exact dispatch),
         ``n_padded_steps`` (masked padding steps its bucket executable
         carries beyond the true ``n_steps``) and ``n_padded_paths`` (dead
-        slots that rode along in its delivered ticks so far)."""
+        slots that rode along in its delivered ticks so far) — plus the
+        robustness fields: ``n_diverged`` (delivered paths flagged by the
+        blow-up guard so far) and ``deadline_remaining_s`` (seconds until
+        this request's deadline expires; None without a deadline)."""
         if not detail:
             return {p.request.request_id: p.remaining
                     for p in self.queue if not p.cancelled}
+        now = self.clock()
         return {p.request.request_id: {
                     "remaining": p.remaining,
                     "bucket": p.bucket,
                     "n_padded_steps": p.n_padded_steps,
                     "n_padded_paths": p.n_padded_paths,
+                    "n_diverged": p.n_diverged(),
+                    "deadline_remaining_s": (
+                        None if p.deadline is None
+                        else max(0.0, p.deadline - now)),
                 }
                 for p in self.queue if not p.cancelled}
 
@@ -392,6 +490,29 @@ class Scheduler:
                 self._cancelled_ids.add(request_id)
                 return True
         raise KeyError(f"unknown request id {request_id}")
+
+    def expire_deadlines(self, now: Optional[float] = None) -> List[int]:
+        """Retire every queued request whose deadline has passed.
+
+        Each expired request is cancelled in place (same lazy mechanism as
+        :meth:`cancel` — partial results drop, the planner prunes the husk)
+        and a timeout :class:`SampleResult` (``timed_out=True``, no arrays)
+        lands in ``done`` so pollers and waiters observe a terminal state
+        instead of a vanished id.  Returns the expired ids, FIFO order.
+        Engines call this once per dispatch cycle; ``now`` overrides the
+        scheduler clock (tests)."""
+        now = self.clock() if now is None else now
+        expired: List[int] = []
+        for p in self.queue:
+            if p.cancelled or p.deadline is None or now < p.deadline:
+                continue
+            rid = p.request.request_id
+            p.cancelled = True
+            self._cancelled_ids.add(rid)
+            self.done[rid] = SampleResult(y_final=None, ys=None,
+                                          timed_out=True)
+            expired.append(rid)
+        return expired
 
     # -- planning -----------------------------------------------------------
 

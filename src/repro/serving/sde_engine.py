@@ -60,6 +60,7 @@ samples.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -72,6 +73,7 @@ from .executor import TickExecutor, enable_persistent_compile_cache
 from .scheduler import (
     STAT_FIELDS,
     QueueFull,
+    RetryPolicy,
     SampleRequest,
     SampleResult,
     Scheduler,
@@ -80,7 +82,7 @@ from .scheduler import (
 )
 
 __all__ = ["SDESampleConfig", "SampleRequest", "SampleResult",
-           "SDESampleEngine", "QueueFull"]
+           "SDESampleEngine", "QueueFull", "RetryPolicy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +113,20 @@ class SDESampleConfig:
     # executables are written to disk and reloaded by later processes, so a
     # restarted engine warm-starts instead of re-paying XLA compilation.
     compile_cache_dir: Optional[str] = None
+    # Divergence guard (PR 9): every solve carries the in-loop blow-up check
+    # (non-finite state, or |y| > guard_threshold) and delivers a per-path
+    # ``diverged`` flag — a pure observer, so guarded samples are
+    # bitwise-identical to unguarded ones.  None disables the guard (and
+    # with it retry-on-divergence).  float('inf') checks non-finiteness only.
+    guard_threshold: Optional[float] = 1e6
+    # Degradation ladder for requests whose delivered paths diverged: halve
+    # the step, then fall back to the wide-stability ees27 scheme, at most
+    # max_retries resubmits per request (seeded — retries are reproducible).
+    # None turns retries off (diverged results retire flagged, unretried).
+    retry_policy: Optional[RetryPolicy] = RetryPolicy()
+    # Supervised async serve loop: how many times an injected/transient
+    # executor crash may restart the loop before it fails the engine.
+    max_restarts: int = 2
 
 
 class SDESampleEngine:
@@ -125,7 +141,7 @@ class SDESampleEngine:
     """
 
     def __init__(self, term, y0, cfg: SDESampleConfig = SDESampleConfig(),
-                 args: Any = None, noise_shape=None):
+                 args: Any = None, noise_shape=None, clock=None):
         if cfg.ticks_per_dispatch < 1:
             raise ValueError(
                 f"ticks_per_dispatch must be >= 1, got {cfg.ticks_per_dispatch}"
@@ -158,16 +174,33 @@ class SDESampleEngine:
             max_requests=cfg.max_queue_requests,
             max_paths=cfg.max_queue_paths,
             group_key=lambda sig: group_key(sig, self._bucket_cfg),
+            clock=clock,
         )
         self.executor = TickExecutor(
             term, y0, args=args, noise_shape=noise_shape, dtype=cfg.dtype,
             mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
+            guard=cfg.guard_threshold,
         )
         self._key_cache: Dict[int, np.ndarray] = {}
         self._pad_key = np.asarray(jax.random.PRNGKey(0))
         # Double buffering: the (reserved plan, packed key stack) staged
         # while the device ran the previous dispatch.
         self._staged: Optional[Tuple[SlotPlan, jax.Array]] = None
+        # Robustness bookkeeping (PR 9).  Retry children run under NEGATIVE
+        # internal ids (never colliding with user ids, never shifting the
+        # default-seed id counter) and keep the ROOT request's seed, so a
+        # retried sample is exactly what submitting the degraded spec
+        # directly would produce.  Counters are cumulative over the engine's
+        # lifetime — see pending(detail=True) / AsyncSDESampleEngine.drain.
+        self._retry_ids = itertools.count(1)
+        self._retry_parent: Dict[int, int] = {}   # child rid -> root rid
+        self._retry_attempt: Dict[int, int] = {}  # root rid -> retries spent
+        self._req_by_id: Dict[int, SampleRequest] = {}
+        self._deadline: Dict[int, float] = {}     # root rid -> absolute s
+        self.counters: Dict[str, int] = {
+            "retries": 0, "timeouts": 0, "diverged_requests": 0,
+            "diverged_paths": 0, "restarts": 0,
+        }
 
     # The queue, result store, and compiled-executable cache live on the two
     # layers; these views keep the engine's original surface (and tests).
@@ -187,7 +220,8 @@ class SDESampleEngine:
                t0: float = 0.0, save_every: Optional[int] = None,
                seed: Optional[int] = None, rtol: Optional[float] = None,
                atol: Optional[float] = None, save_at=None,
-               priority: int = 0) -> int:
+               priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
         """Queue a sampling request; returns its request id.
 
         Parameters
@@ -226,6 +260,13 @@ class SDESampleEngine:
             equal priorities keep strict FIFO.  Priority reorders *when* a
             request is served, never its samples (pure function of
             ``(seed, path)``).
+        deadline_ms:
+            Wall-clock budget in milliseconds.  A request not fully
+            delivered when it expires retires into ``done`` with
+            ``timed_out=True`` and no arrays (the async engine instead wakes
+            the waiter with ``TimeoutError``).  The sync engine checks
+            deadlines once per dispatch cycle, so expiry resolution is one
+            dispatch.  Retries inherit the remaining budget.
 
         Raises
         ------
@@ -263,9 +304,13 @@ class SDESampleEngine:
             self.scheduler.next_request_id, solver, term_kind=term_kind,
             t0=t0, t1=t1, n_steps=n_steps, n_paths=n_paths,
             save_every=save_every, seed=seed, rtol=rtol, atol=atol,
-            save_at=save_at, priority=priority,
+            save_at=save_at, priority=priority, deadline_ms=deadline_ms,
         )
-        return self.scheduler.enqueue(req)
+        rid = self.scheduler.enqueue(req)
+        self._req_by_id[rid] = req
+        if deadline_ms is not None:
+            self._deadline[rid] = self.scheduler.clock() + deadline_ms / 1e3
+        return rid
 
     def pending(self, detail: bool = False) -> Dict[int, Any]:
         """Paths still owed per queued request id — poll this between ticks
@@ -275,9 +320,17 @@ class SDESampleEngine:
         ``remaining`` plus the coalescing introspection — ``bucket`` (the
         :class:`~repro.serving.bucketing.BucketKey` the request was planned
         into, None before planning or for exact dispatch),
-        ``n_padded_steps`` (masked padding steps per path) and
-        ``n_padded_paths`` (dead slots delivered alongside it so far)."""
-        return self.scheduler.pending(detail=detail)
+        ``n_padded_steps`` (masked padding steps per path),
+        ``n_padded_paths`` (dead slots delivered alongside it so far),
+        ``n_diverged`` (delivered paths the blow-up guard flagged) and
+        ``deadline_remaining_s``.  The detail dict additionally carries one
+        non-request entry, ``"counters"``: the engine-lifetime robustness
+        counters (``retries`` / ``timeouts`` / ``diverged_requests`` /
+        ``diverged_paths`` / ``restarts``)."""
+        out = self.scheduler.pending(detail=detail)
+        if detail:
+            out["counters"] = dict(self.counters)
+        return out
 
     def warmup(self, signatures) -> int:
         """Ahead-of-time compile the executables a list of requests needs.
@@ -314,11 +367,131 @@ class SDESampleEngine:
     def cancel(self, request_id: int) -> bool:
         """Cancel a queued request (partial results discarded).  True if this
         call cancelled it; False if already cancelled or already completed;
-        ``KeyError`` on unknown ids."""
-        cancelled = self.scheduler.cancel(request_id)
+        ``KeyError`` on unknown ids.  A request mid-retry is cancellable by
+        its ROOT id — the queued degraded child (internal negative id) is
+        what actually gets cancelled."""
+        target = request_id
+        if (request_id in self._retry_attempt
+                and request_id not in self.scheduler.done):
+            for child, root in self._retry_parent.items():
+                if root == request_id:
+                    target = child
+                    break
+        cancelled = self.scheduler.cancel(target)
         if cancelled:
-            self._key_cache.pop(request_id, None)
+            self._key_cache.pop(target, None)
+            self._req_by_id.pop(target, None)
+            self._deadline.pop(request_id, None)
+            self._retry_attempt.pop(request_id, None)
+            if target != request_id:
+                self._retry_parent.pop(target, None)
+                # The root id is what clients hold — record its cancellation
+                # so re-cancels return False and async result() raises
+                # CancelledError instead of KeyError.
+                self.scheduler._cancelled_ids.add(request_id)
         return cancelled
+
+    # -- robustness internals (PR 9) ----------------------------------------
+
+    def _expire(self) -> list:
+        """Retire queued requests whose deadline passed; book the timeouts.
+
+        A timed-out retry child resolves to its ROOT id — the child never
+        surfaces (its negative id is internal), the root lands in ``done``
+        with ``timed_out=True``.  Returns the expired ROOT ids (what the
+        async plane wakes waiters on)."""
+        roots = []
+        for rid in self.scheduler.expire_deadlines():
+            self.counters["timeouts"] += 1
+            self._key_cache.pop(rid, None)
+            self._req_by_id.pop(rid, None)
+            root = self._retry_parent.pop(rid, rid)
+            attempt = self._retry_attempt.pop(root, 0)
+            self._deadline.pop(root, None)
+            res = self.scheduler.done.pop(rid)
+            self.scheduler.done[root] = dataclasses.replace(
+                res, retries=attempt)
+            roots.append(root)
+        return roots
+
+    def _make_retry(self, root: int, req: SampleRequest,
+                    attempt: int) -> Optional[int]:
+        """Enqueue the degraded resubmit of ``req`` (retry ``attempt``);
+        None when no retry is possible (deadline spent, or the degraded spec
+        does not validate — e.g. a manifold term with a euclidean fallback)."""
+        policy = self.cfg.retry_policy
+        deadline_ms = None
+        dl = self._deadline.get(root)
+        if dl is not None:
+            remaining = dl - self.scheduler.clock()
+            if remaining <= 0:
+                return None
+            deadline_ms = remaining * 1e3
+        overrides = policy.degrade(req, attempt)
+        n_steps = overrides.get("n_steps", req.n_steps)
+        save_every = req.save_every
+        if save_every is not None and n_steps != req.n_steps:
+            # Halved h doubles the grid; scale the cadence so the retried
+            # result saves the same times (and the same number of frames).
+            save_every = save_every * (n_steps // req.n_steps)
+        term_kind = ("manifold" if hasattr(self.term, "algebra_increment")
+                     else "euclidean")
+        child_id = -next(self._retry_ids)
+        try:
+            child = make_request(
+                child_id, overrides.get("solver", req.solver),
+                term_kind=term_kind, t0=req.t0, t1=req.t1, n_steps=n_steps,
+                n_paths=req.n_paths, save_every=save_every, seed=req.seed,
+                rtol=req.rtol, atol=req.atol, save_at=req.save_at,
+                priority=req.priority, deadline_ms=deadline_ms)
+        except ValueError:
+            return None
+        # force: a retry replaces capacity an earlier admit already granted;
+        # refusing it would strand the request (and any async waiter).
+        self.scheduler.enqueue(child, force=True)
+        self._req_by_id[child_id] = child
+        self._retry_parent[child_id] = root
+        self._retry_attempt[root] = attempt + 1
+        self.counters["retries"] += 1
+        return child_id
+
+    def _finalize_retired(self, rid: int) -> Optional[int]:
+        """Post-retirement hook: book divergence, retry or surface.
+
+        Called with an id just retired into ``done``.  Returns the ROOT id
+        now terminally complete (results of retry children move under their
+        root), or None when the request went back on the queue as a
+        degraded retry.  Forces a host read of the per-path ``diverged``
+        flags — one tiny bool array per retired request, NOT per tick."""
+        res = self.scheduler.done[rid]
+        root = self._retry_parent.get(rid, rid)
+        attempt = self._retry_attempt.get(root, 0)
+        n_div = 0
+        if res.diverged is not None:
+            n_div = int(np.asarray(jax.device_get(res.diverged)).sum())
+        if n_div:
+            self.counters["diverged_requests"] += 1
+            self.counters["diverged_paths"] += n_div
+        req = self._req_by_id.get(rid)
+        if (n_div and self.cfg.retry_policy is not None and req is not None
+                and attempt < self.cfg.retry_policy.max_retries
+                and self._make_retry(root, req, attempt) is not None):
+            del self.scheduler.done[rid]
+            self._req_by_id.pop(rid, None)
+            if rid != root:
+                self._retry_parent.pop(rid, None)
+            return None
+        self._req_by_id.pop(rid, None)
+        self._retry_attempt.pop(root, None)
+        self._deadline.pop(root, None)
+        if rid != root:
+            self._retry_parent.pop(rid, None)
+            res = self.scheduler.done.pop(rid)
+            self.scheduler.done[root] = res
+        if attempt:
+            self.scheduler.done[root] = dataclasses.replace(
+                self.scheduler.done[root], retries=attempt)
+        return root
 
     # -- internals -----------------------------------------------------------
 
@@ -432,34 +605,62 @@ class SDESampleEngine:
 
     def _dispatch_next(self, tick_limit: int) -> int:
         """Plan (or unstage), dispatch, and deliver one tick stack; returns
-        the number of ticks served (0 when idle — nothing live queued)."""
+        the number of ticks served (0 when idle — nothing live queued).
+
+        Crash safety: if a dispatch raises (an injected executor fault, an
+        XLA error), the reservations of every not-yet-delivered tick are
+        released before the exception propagates — the queue keeps owning
+        exactly the undelivered work, so a caller that catches the error and
+        calls ``run()`` again serves every path exactly once (no loss, no
+        duplication; samples are key-determined, so the rerun is bitwise
+        what an uninterrupted run would have delivered)."""
+        self._expire()
         depth = min(tick_limit, self.cfg.ticks_per_dispatch)
         plan, keys = self._take_plan(depth)
         if plan is None:
             return 0
         subplans = self._split_subplans(plan)
         offset = 0
-        for i, sp in enumerate(subplans):
-            sp_keys = keys if len(subplans) == 1 else \
-                keys[offset:offset + sp.n_ticks]
-            offset += sp.n_ticks
-            result = self._dispatch(sp, sp_keys)
-            if i == len(subplans) - 1 and self.cfg.double_buffer:
-                # Device is (asynchronously) chewing on the stack we just
-                # dispatched; overlap the next plan's host work with it.
-                self._stage_next()
-            outputs = {"y_final": np.asarray(result.y_final),
-                       "ys": (None if result.ys is None
-                              else np.asarray(result.ys))}
-            # Adaptive results carry where each path actually stopped plus
-            # its realized-grid stats; surface them so budget-exhausted
-            # (truncated) paths are detectable and step counts are
-            # observable per path.
-            for name in STAT_FIELDS:
-                val = getattr(result, name, None)
-                outputs[name] = None if val is None else np.asarray(val)
-            for rid in self.scheduler.deliver(sp, outputs):
-                self._key_cache.pop(rid, None)
+        delivered = 0
+        try:
+            for i, sp in enumerate(subplans):
+                sp_keys = keys if len(subplans) == 1 else \
+                    keys[offset:offset + sp.n_ticks]
+                offset += sp.n_ticks
+                result = self._dispatch(sp, sp_keys)
+                if i == len(subplans) - 1 and self.cfg.double_buffer:
+                    # Device is (asynchronously) chewing on the stack we just
+                    # dispatched; overlap the next plan's host work with it.
+                    self._stage_next()
+                outputs = {"y_final": np.asarray(result.y_final),
+                           "ys": (None if result.ys is None
+                                  else np.asarray(result.ys))}
+                # Adaptive results carry where each path actually stopped
+                # plus its realized-grid stats; the guard adds the per-path
+                # diverged flag — surface them all so truncated paths are
+                # detectable, step counts observable, and blow-ups
+                # retryable.
+                for name in STAT_FIELDS:
+                    val = getattr(result, name, None)
+                    outputs[name] = None if val is None else np.asarray(val)
+                for rid in self.scheduler.deliver(sp, outputs):
+                    self._key_cache.pop(rid, None)
+                    self._finalize_retired(rid)
+                delivered += 1
+        except BaseException:
+            # LIFO unwind: the staged (newest) reservation first, then the
+            # undelivered remainder of the crashed plan.
+            if self._staged is not None:
+                staged_plan, _ = self._staged
+                self._staged = None
+                self.scheduler.release(staged_plan)
+            residual = [tick for sp in subplans[delivered:]
+                        for tick in sp.ticks]
+            if residual:
+                self.scheduler.release(SlotPlan(
+                    plan.signature, plan.slots, residual, reserved=True,
+                    group=plan.group))
+            raise
         return plan.n_ticks
 
     def tick(self) -> bool:

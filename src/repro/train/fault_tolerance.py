@@ -32,6 +32,11 @@ __all__ = ["HeartbeatMonitor", "StragglerTracker", "recovery_plan"]
 
 
 class HeartbeatMonitor:
+    """Per-host liveness.  Hosts named at construction start the deadline
+    clock immediately; unknown hosts register lazily on their first ``beat``
+    (an elastic fleet adds hosts mid-run — a monitor must never throw on a
+    heartbeat from one)."""
+
     def __init__(self, hosts: Sequence[int], deadline_s: float = 60.0):
         self.deadline_s = deadline_s
         self._last: Dict[int, float] = {h: time.monotonic() for h in hosts}
@@ -53,7 +58,9 @@ class StragglerTracker:
         self._times: Dict[int, List[float]] = {h: [] for h in hosts}
 
     def record(self, host: int, step_time_s: float):
-        buf = self._times[host]
+        # Lazy registration: a host joining the fleet mid-run (or one the
+        # caller forgot to pre-declare) must not KeyError its first sample.
+        buf = self._times.setdefault(host, [])
         buf.append(step_time_s)
         if len(buf) > self.window:
             buf.pop(0)
@@ -88,12 +95,25 @@ def recovery_plan(
     Synchronous SPMD requires whole-pod granularity: a pod with any dead host
     is dropped; the survivors form a (pods', data, model) mesh and training
     resumes from the latest checkpoint re-sharded onto it.
+
+    Every dead host id must belong to the fleet the mesh describes
+    (``0 <= host < pods * hosts_per_pod``): a bogus id means the failure
+    report and the mesh disagree, and silently ignoring it would produce a
+    recovery plan that keeps a genuinely dead pod — raise loudly instead.
     """
     if len(mesh_shape) == 2:
         mesh_shape = (1,) + tuple(mesh_shape)
     pods, data, model = mesh_shape
+    fleet = pods * hosts_per_pod
+    for h in dead_hosts:
+        if not 0 <= int(h) < fleet:
+            raise ValueError(
+                f"dead host {h} is outside the fleet: mesh {tuple(mesh_shape)}"
+                f" with hosts_per_pod={hosts_per_pod} has host ids 0.."
+                f"{fleet - 1}"
+            )
     dead_pods = sorted({h // hosts_per_pod for h in dead_hosts})
-    surviving = pods - len([p for p in dead_pods if p < pods])
+    surviving = pods - len(dead_pods)
     if surviving < 1:
         raise RuntimeError("no surviving pods")
     return RecoveryPlan(

@@ -18,9 +18,10 @@ import numpy as np
 from repro.models import ModelOptions, loss_fn, make_train_step
 from repro.optim import adamw, cosine_schedule
 from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.fault_tolerance import recovery_plan
 
 __all__ = ["TrainLoopConfig", "train_loop", "make_accum_train_step",
-           "make_sde_train_step"]
+           "make_sde_train_step", "ResilienceConfig", "resilient_train_loop"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +94,7 @@ def make_sde_train_step(
     remat_chunk: Optional[int] = None,
     bulk_increments: bool = True,
     noise_shape=None,
+    guard: bool = True,
 ):
     """Neural-SDE analogue of ``make_train_step``: one Monte-Carlo batch of
     ``n_paths`` trajectories through ``sdeint``, a loss on the result, one
@@ -119,8 +121,19 @@ def make_sde_train_step(
     streamed through the solve — see ``docs/performance.md``.  Set it
     ``False`` for the strict memory-lean configuration (per-step noise
     recompute, no O(n_steps x noise) buffer in the backward residuals).
+
+    ``guard`` (default ``True``) is the trainer half of the PR-9 divergence
+    guard (``docs/robustness.md``): when the loss or any gradient leaf comes
+    back non-finite, the optimizer update is **skipped** — params and
+    opt_state pass through unchanged — and ``metrics["skipped"]`` is 1.
+    One blown Monte-Carlo batch then costs one wasted step instead of
+    poisoning the parameters (every later step would be NaN).  The guard is
+    in-jit (a ``where`` select, no host sync) and bitwise-inert on finite
+    steps: ``where(True, new, old)`` is ``new``.  Pair it with
+    :func:`resilient_train_loop` for checkpoint rollback when skips persist.
     """
     from repro.core import get_solver, sdeint
+    from repro.core.pytree import tree_blowup
 
     solver = get_solver(solver)
     extra = {}
@@ -147,8 +160,16 @@ def make_sde_train_step(
             return loss_fn_result(p, r)
 
         l, g = jax.value_and_grad(loss)(params)
-        params, opt_state, gnorm = optimizer.update(g, opt_state, params)
-        return params, opt_state, {"loss": l, "grad_norm": gnorm}
+        if not guard:
+            params, opt_state, gnorm = optimizer.update(g, opt_state, params)
+            return params, opt_state, {"loss": l, "grad_norm": gnorm}
+        bad = tree_blowup(g) | ~jnp.isfinite(l)
+        new_p, new_s, gnorm = optimizer.update(g, opt_state, params)
+        keep = lambda new, old: jnp.where(bad, old, new)  # noqa: E731
+        params = jax.tree_util.tree_map(keep, new_p, params)
+        opt_state = jax.tree_util.tree_map(keep, new_s, opt_state)
+        return params, opt_state, {"loss": l, "grad_norm": gnorm,
+                                   "skipped": bad}
 
     return step
 
@@ -196,3 +217,98 @@ def train_loop(
         "losses": losses,
         "wall_s": time.time() - t0,
     }
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs for :func:`resilient_train_loop` (see ``docs/robustness.md``).
+
+    ``skip_patience`` consecutive guard-skipped steps trigger a rollback to
+    the latest checkpoint (the blow-up evidently was not a one-off batch);
+    checkpoints are written every ``ckpt_every`` *productive* boundaries so a
+    rollback never restores a state reached through skipped steps.
+    ``mesh_shape`` / ``hosts_per_pod`` feed :func:`recovery_plan` when the
+    heartbeat monitor reports dead hosts."""
+
+    steps: int = 100
+    ckpt_every: int = 10
+    ckpt_dir: Optional[str] = None
+    skip_patience: int = 3
+    mesh_shape: tuple = (1, 1, 1)
+    hosts_per_pod: int = 1
+
+
+def resilient_train_loop(
+    step_fn: Callable,
+    params,
+    opt_state,
+    key,
+    *,
+    res: ResilienceConfig = ResilienceConfig(),
+    monitor=None,
+    tracker=None,
+    host: int = 0,
+) -> Dict[str, Any]:
+    """Drive a guarded SDE train step with skip-streak rollback and fleet
+    health bookkeeping — the trainer-side divergence story (PR 9).
+
+    ``step_fn`` is a (possibly jit'd) ``make_sde_train_step`` product:
+    ``(params, opt_state, key) -> (params, opt_state, metrics)``.  Step
+    ``i`` uses ``fold_in(key, i)``, so the trajectory is reproducible and a
+    rollback replays the identical keys it first saw.
+
+    Per step, the loop records the step time into ``tracker``
+    (:class:`~repro.train.fault_tolerance.StragglerTracker`) and beats
+    ``monitor`` (:class:`~repro.train.fault_tolerance.HeartbeatMonitor`);
+    when the monitor reports dead hosts, a
+    :func:`~repro.train.fault_tolerance.recovery_plan` is computed against
+    ``res.mesh_shape`` and appended to the history (the launcher acts on
+    it; this in-process loop keeps training its own shard).
+
+    The guard's ``metrics["skipped"]`` drives the rollback policy: after
+    ``res.skip_patience`` consecutive skips the loop restores the latest
+    checkpoint under ``res.ckpt_dir`` (written every ``res.ckpt_every``
+    productive steps, plus one at step 0 so rollback is always possible)
+    and continues.  Returns params/opt_state plus a history dict — per-step
+    ``losses`` and ``skipped`` flags, ``rollbacks``, ``recovery_plans``,
+    and ``goodput`` (productive steps / total steps: the resilience metric
+    ``benchmarks/bench_resilience.py`` sweeps against fault rate)."""
+    history: Dict[str, Any] = {"losses": [], "skipped": [], "rollbacks": 0,
+                               "recovery_plans": []}
+    if res.ckpt_dir:
+        save_checkpoint(res.ckpt_dir, 0, (params, opt_state))
+    streak = 0
+    productive = 0
+    for step in range(res.steps):
+        k = jax.random.fold_in(key, step)
+        t_step = time.monotonic()
+        params, opt_state, metrics = step_fn(params, opt_state, k)
+        skipped = bool(np.asarray(metrics.get("skipped", False)))
+        dt = time.monotonic() - t_step
+        if tracker is not None:
+            tracker.record(host, dt)
+        if monitor is not None:
+            monitor.beat(host)
+            dead = monitor.dead_hosts()
+            if dead:
+                history["recovery_plans"].append(recovery_plan(
+                    res.mesh_shape, res.hosts_per_pod, dead,
+                    (latest_step(res.ckpt_dir) or 0) if res.ckpt_dir else 0))
+        history["losses"].append(float(metrics["loss"]))
+        history["skipped"].append(skipped)
+        if skipped:
+            streak += 1
+            if streak >= res.skip_patience and res.ckpt_dir:
+                last = latest_step(res.ckpt_dir)
+                if last is not None:
+                    params, opt_state = restore_checkpoint(
+                        res.ckpt_dir, last, (params, opt_state))
+                    history["rollbacks"] += 1
+                    streak = 0
+        else:
+            streak = 0
+            productive += 1
+            if res.ckpt_dir and (step + 1) % res.ckpt_every == 0:
+                save_checkpoint(res.ckpt_dir, step + 1, (params, opt_state))
+    history["goodput"] = productive / max(res.steps, 1)
+    return {"params": params, "opt_state": opt_state, **history}

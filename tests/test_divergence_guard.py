@@ -1,0 +1,251 @@
+"""Blow-up guard tests: solve-core divergence flags and the trainer guard.
+
+The PR-9 contract (``docs/robustness.md``):
+
+* ``guard`` on ``solve``/``sdeint``/``sdeint_ticks`` surfaces a per-solve
+  (per-path under vmap) ``diverged`` bool with **no** change to the computed
+  samples — guarded results are bitwise-identical to unguarded ones, across
+  every adjoint and save mode, including gradients.
+* Divergence is checked at save-segment boundaries; non-finites persist in
+  the state, so every genuine blow-up is flagged.
+* ``make_sde_train_step(guard=True)`` skips the optimizer update when the
+  loss or any gradient leaf is non-finite (bitwise-inert on finite steps),
+  and ``resilient_train_loop`` rolls back to the latest checkpoint after a
+  skip streak.
+
+Serving-plane fault injection (retries, deadlines, crash recovery) lives in
+``tests/test_faults.py``.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SDETerm, sdeint, sdeint_ticks
+from repro.core.pytree import tree_blowup
+
+KEY = jax.random.PRNGKey(0)
+
+
+def ou_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: -0.5 * y,
+        diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+def explosive_term() -> SDETerm:
+    # Deterministic exponential blow-up: dy = 80 y dt; Euler-family steps on
+    # h = 4/64 grow by ~6x per step, overflowing float32 well inside the
+    # horizon.
+    return SDETerm(
+        drift=lambda t, y, a: 80.0 * y,
+        diffusion=lambda t, y, a: 0.0 * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+class TestTreeBlowup:
+    @pytest.mark.parametrize("value,thr,want", [
+        (1.0, 1e6, False),
+        (2e6, 1e6, True),
+        (float("nan"), 1e6, True),
+        (float("inf"), 1e6, True),
+        (-float("inf"), 1e6, True),
+        (float("nan"), None, True),
+        (1e30, None, False),          # finite: no threshold, no flag
+        (float("inf"), float("inf"), True),   # inf threshold = finiteness
+        (1e30, float("inf"), False),
+    ])
+    def test_scalar_semantics(self, value, thr, want):
+        x = {"a": jnp.array([1.0, value]), "n": jnp.arange(3)}  # int skipped
+        assert bool(tree_blowup(x, thr)) is want
+
+    def test_integer_only_tree_is_clean(self):
+        assert not bool(tree_blowup({"n": jnp.arange(4)}, 1.0))
+
+
+class TestSolveGuard:
+    @pytest.mark.parametrize("adjoint", ["full", "recursive", "reversible"])
+    @pytest.mark.parametrize("save_every", [None, 16])
+    def test_guarded_bitwise_identical_and_clean(self, adjoint, save_every):
+        kw = {"remat_chunk": 8} if adjoint == "recursive" else {}
+        on = sdeint(ou_term(), "ees25", 0.0, 1.0, 64, jnp.ones(4), KEY,
+                    adjoint=adjoint, save_every=save_every, guard=1e6, **kw)
+        off = sdeint(ou_term(), "ees25", 0.0, 1.0, 64, jnp.ones(4), KEY,
+                     adjoint=adjoint, save_every=save_every, **kw)
+        assert off.diverged is None
+        assert not bool(on.diverged)
+        np.testing.assert_array_equal(np.asarray(on.y_final),
+                                      np.asarray(off.y_final))
+        if save_every:
+            np.testing.assert_array_equal(np.asarray(on.ys),
+                                          np.asarray(off.ys))
+
+    @pytest.mark.parametrize("adjoint", ["full", "recursive", "reversible"])
+    @pytest.mark.parametrize("save_every", [None, 16])
+    def test_blowup_flagged(self, adjoint, save_every):
+        kw = {"remat_chunk": 8} if adjoint == "recursive" else {}
+        r = sdeint(explosive_term(), "ees25", 0.0, 4.0, 64, jnp.ones(4), KEY,
+                   adjoint=adjoint, save_every=save_every, guard=1e6, **kw)
+        assert bool(r.diverged)
+
+    def test_threshold_without_nonfinite(self):
+        # Shorter horizon: the trajectory exceeds 1e2 but stays finite, so
+        # only the magnitude threshold can flag it.
+        r = sdeint(explosive_term(), "ees25", 0.0, 0.25, 64, jnp.ones(4),
+                   KEY, guard=1e2)
+        assert bool(r.diverged) and bool(jnp.isfinite(r.y_final).all())
+        assert not bool(sdeint(explosive_term(), "ees25", 0.0, 0.25, 64,
+                               jnp.ones(4), KEY,
+                               guard=float("inf")).diverged)
+
+    def test_batched_per_path_flags(self):
+        keys = jax.random.split(KEY, 4)
+        r = sdeint(explosive_term(), "ees25", 0.0, 4.0, 64, jnp.ones(4),
+                   None, batch_keys=keys, guard=1e6)
+        assert r.diverged.shape == (4,) and bool(r.diverged.all())
+        clean = sdeint(ou_term(), "ees25", 0.0, 1.0, 64, jnp.ones(4), None,
+                       batch_keys=keys, guard=1e6)
+        assert clean.diverged.shape == (4,) and not bool(clean.diverged.any())
+
+    def test_gradients_bitwise_under_guard(self):
+        def loss(scale, guard):
+            t = SDETerm(
+                drift=lambda t_, y, a: -a * y,
+                diffusion=lambda t_, y, a: 0.2 * jnp.ones_like(y),
+                noise="diagonal",
+            )
+            return sdeint(t, "ees25", 0.0, 1.0, 32, jnp.ones(4), KEY,
+                          args=scale, adjoint="reversible",
+                          guard=guard).y_final.sum()
+
+        g_on = jax.grad(lambda s: loss(s, 1e6))(jnp.float32(0.5))
+        g_off = jax.grad(lambda s: loss(s, None))(jnp.float32(0.5))
+        np.testing.assert_array_equal(np.asarray(g_on), np.asarray(g_off))
+
+    def test_adaptive_guard_clean_and_bitwise(self):
+        on = sdeint(ou_term(), "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(4),
+                    KEY, rtol=1e-3, bounded=False, guard=1e6)
+        off = sdeint(ou_term(), "ees25:adaptive", 0.0, 1.0, 64, jnp.ones(4),
+                     KEY, rtol=1e-3, bounded=False)
+        assert not bool(on.diverged) and off.diverged is None
+        np.testing.assert_array_equal(np.asarray(on.y_final),
+                                      np.asarray(off.y_final))
+
+    def test_ticks_guard_threads_through_executor_shape(self):
+        keys = jax.random.split(KEY, 6).reshape(2, 3, -1)
+        r = sdeint_ticks(ou_term(), "ees25", 0.0, 1.0, 16, jnp.ones(4), keys,
+                         dtype=jnp.float32, guard=1e6)
+        assert r.diverged.shape == (2, 3) and not bool(r.diverged.any())
+        off = sdeint_ticks(ou_term(), "ees25", 0.0, 1.0, 16, jnp.ones(4),
+                           keys, dtype=jnp.float32)
+        assert getattr(off, "diverged", None) is None
+        np.testing.assert_array_equal(np.asarray(r.y_final),
+                                      np.asarray(off.y_final))
+        bad = sdeint_ticks(explosive_term(), "ees25", 0.0, 4.0, 16,
+                           jnp.ones(4), keys, dtype=jnp.float32, guard=1e6)
+        assert bool(bad.diverged.all())
+
+
+class TestTrainerGuard:
+    def _pieces(self, train_steps=4):
+        from repro.optim import adamw, cosine_schedule
+        from repro.train.trainer import make_sde_train_step
+
+        term = SDETerm(
+            drift=lambda t, y, p: p["nu"] * (p["mu"] - y),
+            diffusion=lambda t, y, p: p["sigma"] * jnp.ones_like(y),
+            noise="diagonal",
+        )
+        params = {"nu": jnp.float32(0.5), "mu": jnp.float32(0.0),
+                  "sigma": jnp.float32(0.5)}
+        opt = adamw(cosine_schedule(1e-3, 2, train_steps))
+        return term, params, opt, make_sde_train_step
+
+    def test_finite_step_bitwise_inert(self):
+        term, params, opt, make = self._pieces()
+        common = dict(t0=0.0, t1=1.0, n_steps=16, n_paths=4)
+        y0_fn = lambda p: jnp.zeros(4, jnp.float32)  # noqa: E731
+        loss = lambda p, r: jnp.mean(r.y_final ** 2)  # noqa: E731
+        guarded = jax.jit(make("ees25", term, opt, y0_fn, loss, **common))
+        bare = jax.jit(make("ees25", term, opt, y0_fn, loss, guard=False,
+                            **common))
+        s0 = opt.init(params)
+        pg, sg, mg = guarded(params, s0, KEY)
+        pb, sb, mb = bare(params, opt.init(params), KEY)
+        assert not bool(mg["skipped"])
+        for a, b in zip(jax.tree_util.tree_leaves(pg),
+                        jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(sg),
+                        jax.tree_util.tree_leaves(sb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_nonfinite_loss_skips_update(self):
+        term, params, opt, make = self._pieces()
+        blown = jax.jit(make(
+            "ees25", term, opt, lambda p: jnp.zeros(4, jnp.float32),
+            lambda p, r: jnp.mean(r.y_final ** 2) * jnp.nan,
+            t0=0.0, t1=1.0, n_steps=16, n_paths=4))
+        s0 = opt.init(params)
+        p1, s1, m = blown(params, s0, KEY)
+        assert bool(m["skipped"]) and not bool(jnp.isfinite(m["loss"]))
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(s1),
+                        jax.tree_util.tree_leaves(s0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_resilient_loop_rolls_back_after_skip_streak(self):
+        from repro.train.trainer import ResilienceConfig, resilient_train_loop
+
+        term, params, opt, make = self._pieces(train_steps=10)
+        common = dict(t0=0.0, t1=1.0, n_steps=16, n_paths=4)
+        y0_fn = lambda p: jnp.zeros(4, jnp.float32)  # noqa: E731
+        loss = lambda p, r: jnp.mean(r.y_final ** 2)  # noqa: E731
+        clean = jax.jit(make("ees25", term, opt, y0_fn, loss, **common))
+        blown = jax.jit(make("ees25", term, opt, y0_fn,
+                             lambda p, r: loss(p, r) * jnp.nan, **common))
+        fault_steps = {3, 4, 5}
+        calls = {"i": 0}
+
+        def step_fn(p, s, k):
+            i = calls["i"]
+            calls["i"] += 1
+            return (blown if i in fault_steps else clean)(p, s, k)
+
+        with tempfile.TemporaryDirectory() as d:
+            out = resilient_train_loop(
+                step_fn, params, opt.init(params), KEY,
+                res=ResilienceConfig(steps=10, ckpt_every=2, ckpt_dir=d,
+                                     skip_patience=3))
+        assert out["skipped"] == [False, False, False, True, True, True,
+                                  False, False, False, False]
+        assert out["rollbacks"] == 1
+        assert out["goodput"] == pytest.approx(0.7)
+        assert all(jnp.isfinite(jnp.asarray(p)).all()
+                   for p in jax.tree_util.tree_leaves(out["params"]))
+
+    def test_resilient_loop_records_fleet_health(self):
+        from repro.train.fault_tolerance import HeartbeatMonitor, StragglerTracker
+        from repro.train.trainer import ResilienceConfig, resilient_train_loop
+
+        term, params, opt, make = self._pieces()
+        step = jax.jit(make(
+            "ees25", term, opt, lambda p: jnp.zeros(4, jnp.float32),
+            lambda p, r: jnp.mean(r.y_final ** 2),
+            t0=0.0, t1=1.0, n_steps=16, n_paths=4))
+        monitor = HeartbeatMonitor(hosts=[], deadline_s=1e9)
+        tracker = StragglerTracker(hosts=[])
+        out = resilient_train_loop(
+            step, params, opt.init(params), KEY,
+            res=ResilienceConfig(steps=3), monitor=monitor, tracker=tracker,
+            host=7)
+        # Lazy registration: host 7 was never pre-declared on either.
+        assert 7 in monitor._last and len(tracker._times[7]) == 3
+        assert out["rollbacks"] == 0 and out["goodput"] == 1.0

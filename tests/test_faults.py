@@ -1,0 +1,384 @@
+"""Fault-injection tests for the divergence-aware serving plane (PR 9).
+
+What must hold under injected faults (``repro.serving.faults``):
+
+* **Isolation** — a NaN'd slot never poisons co-batched clean requests:
+  their retired samples are bitwise-identical to a fault-free engine's.
+* **Retry ladder** — diverged requests re-enter the queue degraded (halved
+  ``h``, then the canonical fallback solver), capped by
+  ``RetryPolicy.max_retries``; the final result lands under the ORIGINAL
+  request id with ``retries`` set.
+* **Crash recovery** — a dispatch-time crash releases exactly the
+  undelivered reservations (sync), or triggers a supervised serve-loop
+  restart (async); every queued request is then served exactly once,
+  bitwise what an uninterrupted run would have produced.
+* **Deadlines** — an expired request cancels in place: the sync engine
+  surfaces ``timed_out=True``, the async engine raises ``TimeoutError`` to
+  the waiter and frees its admission capacity.
+* **Accounting** — engine counters (``retries`` / ``timeouts`` /
+  ``diverged_requests`` / ``diverged_paths`` / ``restarts``) surface through
+  ``pending(detail=True)`` and async ``drain()``.
+
+Randomized sweeps at the bottom drive seeded fault schedules against a
+fault-free reference engine: no request lost, duplicated, or stuck, and
+every un-faulted result bitwise-unchanged.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SDETerm
+from repro.serving import (
+    AsyncSDESampleEngine,
+    FakeClock,
+    FaultConfig,
+    InjectedCrash,
+    RetryPolicy,
+    SDESampleConfig,
+    SDESampleEngine,
+    inject_faults,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, a: -0.5 * y,
+        diffusion=lambda t, y, a: 0.2 * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+def stiff_term() -> SDETerm:
+    # Blows up deterministically on the coarse grids requests below use, and
+    # stabilizes once the retry ladder halves h far enough.
+    return SDETerm(
+        drift=lambda t, y, a: -40.0 * y,
+        diffusion=lambda t, y, a: 0.05 * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+def make_engine(t=None, slots=4, **cfg_kw):
+    return SDESampleEngine(t if t is not None else term(),
+                           jnp.ones(3, jnp.float32),
+                           SDESampleConfig(slots=slots, **cfg_kw))
+
+
+def leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestNaNIsolation:
+    def test_victim_retries_cobatched_request_bitwise_clean(self):
+        # Two 2-path requests share one 4-slot tick: slots 0-1 belong to the
+        # victim, 2-3 to the bystander.  Corrupt slot 0 of dispatch 0.
+        def serve(faults):
+            eng = make_engine(slots=4)
+            inj = (inject_faults(eng, FaultConfig(nan_slots=((0, 0, 0),)))
+                   if faults else None)
+            a = eng.submit("ees25", t1=1.0, n_steps=16, n_paths=2, seed=1)
+            b = eng.submit("ees25", t1=1.0, n_steps=16, n_paths=2, seed=2)
+            done = eng.run()
+            return eng, inj, a, b, done
+
+        eng, inj, a, b, done = serve(True)
+        _, _, ra, rb, ref = serve(False)
+        assert inj.n_nans == 1
+        assert set(done) == {a, b}
+        # The bystander never saw the fault: bitwise equal to the clean run.
+        np.testing.assert_array_equal(np.asarray(done[b].y_final),
+                                      np.asarray(ref[rb].y_final))
+        assert done[b].retries == 0
+        # The victim retried once (degraded) and completed clean.
+        assert done[a].retries == 1
+        assert bool(jnp.isfinite(done[a].y_final).all())
+        assert eng.counters["retries"] == 1
+        assert eng.counters["diverged_requests"] == 1
+        assert eng.counters["diverged_paths"] == 1
+
+    def test_counters_surface_via_pending_detail(self):
+        eng = make_engine(slots=4)
+        inject_faults(eng, FaultConfig(nan_slots=((0, 0, 0),)))
+        eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=1)
+        eng.run()
+        detail = eng.pending(detail=True)
+        assert detail["counters"]["retries"] == 1
+        assert detail["counters"]["diverged_requests"] == 1
+        assert detail["counters"]["timeouts"] == 0
+
+
+class TestRetryLadder:
+    def test_degrade_halves_then_falls_back(self):
+        from repro.serving.scheduler import make_request
+
+        pol = RetryPolicy()
+        r0 = make_request(1, "heun", term_kind="euclidean", t1=1.0,
+                          n_steps=64, n_paths=2)
+        r1 = pol.degrade(r0, 0)  # halve h: same solver, doubled steps
+        assert r1["n_steps"] == 128 and r1["solver"] == r0.solver
+        r_fb = pol.degrade(r0, pol.max_h_halvings)  # then fall back
+        assert r_fb["solver"].startswith("ees27")
+        assert r_fb["n_steps"] == 64
+
+    def test_stiff_request_walks_ladder_to_completion(self):
+        eng = make_engine(stiff_term(), slots=4)
+        rid = eng.submit("ees25", t1=1.0, n_steps=8, n_paths=4, seed=0)
+        done = eng.run()
+        assert set(done) == {rid}
+        res = done[rid]
+        assert res.retries >= 1
+        assert bool(jnp.isfinite(res.y_final).all())
+        assert eng.counters["retries"] == res.retries
+        assert eng.counters["diverged_requests"] >= 1
+
+    def test_retries_capped_result_surfaces_diverged(self):
+        pol = RetryPolicy(max_retries=1, max_h_halvings=0)
+        eng = SDESampleEngine(
+            stiff_term(), jnp.ones(3, jnp.float32),
+            SDESampleConfig(slots=4, retry_policy=pol))
+        rid = eng.submit("ees25", t1=1.0, n_steps=4, n_paths=4, seed=0)
+        done = eng.run()
+        res = done[rid]
+        assert res.retries == 1  # burned the cap, still diverged
+        assert bool(np.asarray(res.diverged).any())
+
+    def test_async_retry_lands_under_root_id(self):
+        async def go():
+            async with AsyncSDESampleEngine(
+                    stiff_term(), jnp.ones(3, jnp.float32),
+                    SDESampleConfig(slots=4)) as eng:
+                rid = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=4,
+                                       seed=0)
+                res = await eng.result(rid)
+                out = await eng.drain()
+                return rid, res, out
+
+        rid, res, out = asyncio.run(go())
+        assert res.retries >= 1 and bool(jnp.isfinite(res.y_final).all())
+        assert out["counters"]["retries"] == res.retries
+        assert rid in out
+
+
+class TestCrashRecovery:
+    def test_sync_crash_releases_reservations_rerun_bitwise(self):
+        ref_eng = make_engine(slots=4)
+        for i in range(4):
+            ref_eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=i)
+        ref = ref_eng.run()
+
+        eng = make_engine(slots=4)
+        inj = inject_faults(eng, FaultConfig(crash_dispatches=(1,)))
+        rids = [eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=i)
+                for i in range(4)]
+        with pytest.raises(InjectedCrash):
+            eng.run()
+        assert inj.n_crashes == 1
+        # Crashed work went back on the queue; a rerun serves it exactly
+        # once — run() returns the cumulative done map.
+        done = eng.run()
+        assert set(done) == set(rids)
+        for rid in rids:
+            np.testing.assert_array_equal(np.asarray(done[rid].y_final),
+                                          np.asarray(ref[rid].y_final))
+
+    def test_async_supervised_restart_serves_all_bitwise(self):
+        async def go(fault_cfg):
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3, jnp.float32),
+                    SDESampleConfig(slots=4)) as eng:
+                if fault_cfg is not None:
+                    inj = inject_faults(eng, fault_cfg)
+                rids = [await eng.submit("ees25", t1=1.0, n_steps=16,
+                                         n_paths=4, seed=i)
+                        for i in range(4)]
+                results = [await eng.result(r) for r in rids]
+                counters = dict(eng._eng.counters)
+                n_crashes = inj.n_crashes if fault_cfg is not None else 0
+            return results, counters, n_crashes
+
+        ref, _, _ = asyncio.run(go(None))
+        got, counters, n_crashes = asyncio.run(
+            go(FaultConfig(crash_dispatches=(0,))))
+        assert n_crashes == 1 and counters["restarts"] == 1
+        assert len(got) == len(ref) == 4
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g.y_final),
+                                          np.asarray(r.y_final))
+
+    def test_async_restart_budget_exhausted_fails_waiters(self):
+        async def go():
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3, jnp.float32),
+                    SDESampleConfig(slots=4, max_restarts=1)) as eng:
+                inject_faults(eng, FaultConfig(crash_rate=1.0))
+                rid = await eng.submit("ees25", t1=1.0, n_steps=16,
+                                       n_paths=4, seed=0)
+                with pytest.raises(InjectedCrash):
+                    await eng.result(rid)
+
+        asyncio.run(go())
+
+    def test_non_transient_error_is_not_restarted(self):
+        class Boom(RuntimeError):
+            pass
+
+        async def go():
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3, jnp.float32),
+                    SDESampleConfig(slots=4)) as eng:
+                real = eng.executor.dispatch
+
+                def bad(*a, **kw):
+                    raise Boom("hard failure")
+
+                eng._eng.executor.dispatch = bad
+                rid = await eng.submit("ees25", t1=1.0, n_steps=16,
+                                       n_paths=4, seed=0)
+                with pytest.raises(Boom):
+                    await eng.result(rid)
+                assert eng._eng.counters["restarts"] == 0
+                eng._eng.executor.dispatch = real
+
+        asyncio.run(go())
+
+
+class TestDeadlines:
+    def test_sync_deadline_times_out_in_queue(self):
+        clk = FakeClock()
+        eng = SDESampleEngine(term(), jnp.ones(3, jnp.float32),
+                              SDESampleConfig(slots=4), clock=clk)
+        rid = eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=0,
+                         deadline_ms=50.0)
+        clk.advance(0.2)
+        done = eng.run()
+        res = done[rid]
+        assert res.timed_out and res.y_final is None
+        assert eng.counters["timeouts"] == 1
+
+    def test_sync_deadline_not_hit_serves_normally(self):
+        clk = FakeClock()
+        eng = SDESampleEngine(term(), jnp.ones(3, jnp.float32),
+                              SDESampleConfig(slots=4), clock=clk)
+        rid = eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=0,
+                         deadline_ms=1e6)
+        done = eng.run()
+        assert not done[rid].timed_out
+        assert bool(jnp.isfinite(done[rid].y_final).all())
+        assert eng.counters["timeouts"] == 0
+
+    def test_deadline_remaining_visible_in_pending_detail(self):
+        clk = FakeClock()
+        eng = SDESampleEngine(term(), jnp.ones(3, jnp.float32),
+                              SDESampleConfig(slots=4), clock=clk)
+        rid = eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=0,
+                         deadline_ms=1000.0)
+        detail = eng.pending(detail=True)
+        assert detail[rid]["deadline_remaining_s"] == pytest.approx(1.0)
+
+    def test_async_deadline_raises_and_frees_capacity(self):
+        async def go():
+            clk = FakeClock()
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3, jnp.float32),
+                    SDESampleConfig(slots=4), clock=clk) as eng:
+                # Block the serve loop from ever planning this request by
+                # advancing the clock past its deadline before first service.
+                rid = await eng.submit("ees25", t1=1.0, n_steps=16,
+                                       n_paths=4, seed=0, deadline_ms=1.0)
+                clk.advance(10.0)
+                with pytest.raises(TimeoutError):
+                    await eng.result(rid)
+                assert eng._eng.counters["timeouts"] == 1
+                # Capacity freed: the engine still serves new work, bitwise.
+                rid2 = await eng.submit("ees25", t1=1.0, n_steps=16,
+                                        n_paths=4, seed=7)
+                res = await eng.result(rid2)
+            ref = make_engine(slots=4)
+            ref_id = ref.submit("ees25", t1=1.0, n_steps=16, n_paths=4,
+                                seed=7)
+            ref_res = ref.run()[ref_id]
+            np.testing.assert_array_equal(np.asarray(res.y_final),
+                                          np.asarray(ref_res.y_final))
+
+        asyncio.run(go())
+
+
+class TestRandomizedFaultSweeps:
+    """Seeded random fault interleavings vs a fault-free reference: every
+    request retires exactly once (no loss, no duplication, no stuck
+    waiters), and whatever the schedule did not touch is bitwise-unchanged."""
+
+    N_REQ = 6
+
+    def _submit_all(self, eng):
+        return [eng.submit("ees25", t1=1.0 + (i % 2), n_steps=16, n_paths=2,
+                           seed=i) for i in range(self.N_REQ)]
+
+    def _reference(self):
+        eng = make_engine(slots=4)
+        rids = self._submit_all(eng)
+        done = eng.run()
+        return {i: done[r] for i, r in enumerate(rids)}
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_sync_nan_schedule(self, seed):
+        ref = self._reference()
+        eng = make_engine(slots=4)
+        inj = inject_faults(eng, FaultConfig(seed=seed, nan_rate=0.4))
+        rids = self._submit_all(eng)
+        done = eng.run()
+        assert set(done) == set(rids)  # exactly once, nothing stuck
+        for i, rid in enumerate(rids):
+            res = done[rid]
+            assert bool(jnp.isfinite(res.y_final).all())
+            if res.retries == 0:
+                np.testing.assert_array_equal(np.asarray(res.y_final),
+                                              np.asarray(ref[i].y_final))
+        assert eng.counters["retries"] >= (1 if inj.n_nans else 0)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_async_crash_and_nan_interleaving(self, seed):
+        ref = self._reference()
+
+        async def go():
+            async with AsyncSDESampleEngine(
+                    term(), jnp.ones(3, jnp.float32),
+                    SDESampleConfig(slots=4, max_restarts=100)) as eng:
+                inj = inject_faults(eng, FaultConfig(
+                    seed=seed, nan_rate=0.3, crash_rate=0.2))
+                rids = [await eng.submit("ees25", t1=1.0 + (i % 2),
+                                         n_steps=16, n_paths=2, seed=i)
+                        for i in range(self.N_REQ)]
+                results = [await eng.result(r) for r in rids]
+                out = await eng.drain()
+                return results, out, inj.n_crashes, dict(eng._eng.counters)
+
+        results, out, n_crashes, counters = asyncio.run(go())
+        assert len(results) == self.N_REQ
+        assert counters["restarts"] == n_crashes
+        for i, res in enumerate(results):
+            assert bool(jnp.isfinite(res.y_final).all())
+            if res.retries == 0:
+                np.testing.assert_array_equal(np.asarray(res.y_final),
+                                              np.asarray(ref[i].y_final))
+
+    def test_faulty_executor_delegates_and_counts(self):
+        eng = make_engine(slots=4)
+        inj = inject_faults(eng, FaultConfig(seed=0, delay_rate=1.0,
+                                             delay_s=0.001))
+        eng.submit("ees25", t1=1.0, n_steps=16, n_paths=4, seed=0)
+        eng.run()
+        assert inj.n_delays >= 1 and inj.n_dispatch_calls >= 1
+        assert inj.n_crashes == 0 and inj.n_nans == 0
+        # Delegation: the injector exposes the inner executor's counters.
+        assert inj.n_dispatches == eng.executor.inner.n_dispatches

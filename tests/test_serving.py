@@ -439,8 +439,9 @@ class TestAsyncEngine:
                     term(), jnp.ones(3), SDESampleConfig(slots=4)) as eng:
                 a = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=6)
                 done = await eng.drain()
-                assert sorted(done) == [a]
+                assert sorted(k for k in done if k != "counters") == [a]
                 b = await eng.submit("ees25", t1=1.0, n_steps=8, n_paths=2)
                 done = await eng.drain()
-                assert sorted(done) == [a, b]
+                assert sorted(k for k in done if k != "counters") == [a, b]
+                assert done["counters"]["retries"] == 0
         asyncio.run(main())

@@ -102,6 +102,34 @@ class TestCheckpoint:
                 np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
                 assert x.dtype == y.dtype
 
+    def test_restore_reshards_onto_named_sharding(self):
+        # Elastic restore: a checkpoint written plain (host-local arrays)
+        # comes back placed onto whatever sharding the new mesh prescribes —
+        # per-leaf NamedShardings here, bf16 bit-exact through the uint16
+        # round-trip, and latest_step picks the newest complete save.
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+        tree = {
+            "w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4),
+            "emb": (jnp.arange(6, dtype=jnp.bfloat16) / 3.0).reshape(3, 2),
+        }
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        shardings = {
+            "w": NamedSharding(mesh, PartitionSpec("data", None)),
+            "emb": NamedSharding(mesh, PartitionSpec()),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 3, tree)
+            save_checkpoint(d, 11, tree)
+            assert latest_step(d) == 11
+            got = restore_checkpoint(d, 11, tree, shardings=shardings)
+        assert got["w"].sharding == shardings["w"]
+        assert got["emb"].sharding == shardings["emb"]
+        assert got["emb"].dtype == jnp.bfloat16
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(got[k], np.float32), np.asarray(tree[k], np.float32))
+
     def test_resume_exact_training(self):
         cfg = get_arch("olmo-1b").smoke()
         key = jax.random.PRNGKey(42)
@@ -152,6 +180,30 @@ class TestFaultTolerance:
     def test_recovery_plan_all_dead_raises(self):
         with pytest.raises(RuntimeError):
             recovery_plan((1, 16, 16), 32, dead_hosts=[0], latest_ckpt_step=0)
+
+    def test_recovery_plan_rejects_host_outside_fleet(self):
+        # A dead-host id the mesh can't contain means the failure report and
+        # the mesh disagree — silently dropping it would keep a dead pod.
+        with pytest.raises(ValueError, match="outside the fleet"):
+            recovery_plan((4, 16, 16), hosts_per_pod=32, dead_hosts=[128],
+                          latest_ckpt_step=100)
+        with pytest.raises(ValueError, match="outside the fleet"):
+            recovery_plan((4, 16, 16), hosts_per_pod=32, dead_hosts=[-1],
+                          latest_ckpt_step=100)
+
+    def test_lazy_registration_of_unseen_hosts(self):
+        # Elastic fleets add hosts mid-run: first contact from an undeclared
+        # host must register it, not KeyError.
+        hb = HeartbeatMonitor(hosts=[], deadline_s=10.0)
+        hb.beat(7, now=100.0)
+        assert hb.dead_hosts(now=105.0) == []
+        assert hb.dead_hosts(now=200.0) == [7]
+        tr = StragglerTracker(hosts=[0, 1, 2], k=4.0)
+        for _ in range(16):
+            for h in range(3):
+                tr.record(h, 1.0 + 0.01 * h)
+            tr.record(9, 5.0)  # never pre-declared
+        assert tr.stragglers() == [9]
 
 
 class TestServing:
