@@ -1,0 +1,210 @@
+"""Training throughput: optimizer steps/sec vs ``steps_per_call`` chunking.
+
+The PR-10 scanned train step fuses K optimizer updates into one jit'd
+``lax.scan`` dispatch (:func:`repro.train.trainer.make_scanned_step`).  This
+bench measures what that buys on the host-dispatch-bound axis: for each
+(adjoint x n_paths x microbatches) configuration it times K sequential
+un-scanned steps against one scanned chunk of the same K steps — which is
+**bitwise the same trajectory** (tested), so the comparison is pure dispatch
+accounting — and emits ``BENCH_training.json``:
+
+    {"device": "cpu", "n_devices": 1,
+     "records": [{"adjoint": "reversible", "n_paths": 32, "microbatches": 1,
+                  "steps_per_call": 8, "us_per_step_sequential": ...,
+                  "us_per_step_scanned": ..., "steps_per_sec_sequential": ...,
+                  "steps_per_sec_scanned": ..., "speedup_scan": ...}, ...],
+     "speedup_scan_k8": <max speedup at K=8>,   # CI gate: > 1 on CPU
+     "mesh_records": [...]}                     # devices > 1 only
+
+With more than one visible device the reversible configuration additionally
+runs the mesh-sharded data-parallel step
+(``make_sde_train_step(..., mesh=make_train_mesh(), mesh_axis="dp")``) and
+``mesh_records`` carries, per config, the sharded step time plus
+``grads_bitwise_vs_single`` — the post-update params must be bit-equal to
+the single-device step's (the PR-10 DP invariant; CI-gated).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_training [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SDETerm
+from repro.optim import adamw, cosine_schedule
+from repro.train.trainer import (
+    init_scan_counters,
+    make_scanned_step,
+    make_sde_train_step,
+)
+
+from .common import emit, time_fn
+
+N_STEPS = 16
+DIM = 4
+K_SWEEP = (2, 8)
+# (adjoint, n_paths, microbatches)
+CONFIGS = (
+    ("reversible", 8, 1),
+    ("reversible", 32, 1),
+    ("reversible", 32, 4),
+    ("full", 8, 1),
+    ("full", 32, 1),
+)
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_training.json",
+)
+
+
+def ou_term() -> SDETerm:
+    return SDETerm(
+        drift=lambda t, y, p: p["nu"] * (p["mu"] - y),
+        diffusion=lambda t, y, p: p["sigma"] * jnp.ones_like(y),
+        noise="diagonal",
+    )
+
+
+def _setup(n_steps: int, dim: int):
+    term = ou_term()
+    params = {"nu": jnp.float32(0.5), "mu": jnp.float32(0.0),
+              "sigma": jnp.float32(0.5)}
+    opt = adamw(cosine_schedule(1e-3, 2, 1024))
+    y0_fn = lambda p: jnp.zeros(dim, jnp.float32)  # noqa: E731
+    loss = lambda p, r: jnp.mean(r.y_final ** 2)  # noqa: E731
+    return term, params, opt, y0_fn, loss
+
+
+def _fresh(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.array(x), tree)
+
+
+def run(out_path: str = DEFAULT_OUT, *, configs=CONFIGS, k_sweep=K_SWEEP,
+        n_steps: int = N_STEPS, dim: int = DIM):
+    term, params, opt, y0_fn, loss = _setup(n_steps, dim)
+    key = jax.random.PRNGKey(0)
+    records = []
+    k_max = max(k_sweep)
+    for adjoint, n_paths, microbatches in configs:
+        step = make_sde_train_step(
+            "ees25", term, opt, y0_fn, loss, t0=0.0, t1=1.0,
+            n_steps=n_steps, n_paths=n_paths, adjoint=adjoint,
+            microbatches=microbatches,
+        )
+        jstep = jax.jit(step)
+
+        def seq_chunk(k_steps):
+            # K un-scanned dispatches, params threaded on host — the
+            # pre-PR-10 cost model (one round trip per optimizer step)
+            p, s = _fresh(params), opt.init(params)
+            for i in range(k_steps):
+                p, s, _ = jstep(p, s, jax.random.fold_in(key, i))
+            return p
+
+        us_seq = time_fn(seq_chunk, k_max, warmup=1, iters=5) / k_max
+        tag = f"{adjoint}/P{n_paths}/M{microbatches}"
+        for k in k_sweep:
+            scanned = make_scanned_step(step, k)
+
+            def scan_chunk():
+                # fresh copies feed the donated carry each call
+                return scanned(_fresh(params), opt.init(params),
+                               init_scan_counters(), key, jnp.asarray(0))[0]
+
+            us_scan = time_fn(scan_chunk, warmup=1, iters=5) / k
+            speedup = us_seq / us_scan
+            records.append({
+                "adjoint": adjoint,
+                "n_paths": n_paths,
+                "microbatches": microbatches,
+                "n_steps": n_steps,
+                "dim": dim,
+                "steps_per_call": k,
+                "us_per_step_sequential": us_seq,
+                "us_per_step_scanned": us_scan,
+                "steps_per_sec_sequential": 1e6 / us_seq,
+                "steps_per_sec_scanned": 1e6 / us_scan,
+                "speedup_scan": speedup,
+            })
+            emit(f"bench_training/{tag}/K{k}", us_scan,
+                 f"steps_per_sec={1e6 / us_scan:.1f} speedup_scan={speedup:.2f}")
+
+    mesh_records = run_mesh_ladder(records, n_steps=n_steps, dim=dim)
+    out = {
+        "device": jax.devices()[0].platform,
+        "n_devices": jax.device_count(),
+        "records": records,
+        "speedup_scan_k8": max(r["speedup_scan"] for r in records
+                               if r["steps_per_call"] == k_max),
+        "mesh_records": mesh_records,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {out_path}")
+    return out
+
+
+def run_mesh_ladder(single_records, *, n_steps, dim):
+    """Data-parallel step timing + bitwise parity vs single device
+    (devices > 1 only; single-device CI emits an empty list)."""
+    n_devices = jax.device_count()
+    if n_devices < 2:
+        return []
+    from repro.launch.mesh import make_train_mesh
+
+    term, params, opt, y0_fn, loss = _setup(n_steps, dim)
+    key = jax.random.PRNGKey(0)
+    mesh = make_train_mesh()
+    mesh_records = []
+    for adjoint, n_paths, microbatches in (("reversible", 32, 1),
+                                           ("full", 32, 1)):
+        if (n_paths // microbatches) % n_devices:
+            continue
+        common = dict(t0=0.0, t1=1.0, n_steps=n_steps, n_paths=n_paths,
+                      adjoint=adjoint, microbatches=microbatches)
+        single = jax.jit(make_sde_train_step(
+            "ees25", term, opt, y0_fn, loss, **common))
+        dp = jax.jit(make_sde_train_step(
+            "ees25", term, opt, y0_fn, loss, mesh=mesh, mesh_axis="dp",
+            **common))
+        pa, sa, _ = single(params, opt.init(params), key)
+        pb, sb, _ = dp(params, opt.init(params), key)
+        bitwise = all(
+            np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+            zip(jax.tree_util.tree_leaves((pa, sa)),
+                jax.tree_util.tree_leaves((pb, sb))))
+        us_single = time_fn(single, params, opt.init(params), key,
+                            warmup=1, iters=5)
+        us_dp = time_fn(dp, params, opt.init(params), key, warmup=1, iters=5)
+        mesh_records.append({
+            "adjoint": adjoint,
+            "n_paths": n_paths,
+            "microbatches": microbatches,
+            "devices": n_devices,
+            "us_per_step_single": us_single,
+            "us_per_step_sharded": us_dp,
+            "speedup_vs_single": us_single / us_dp,
+            "grads_bitwise_vs_single": bool(bitwise),
+        })
+        emit(f"bench_training/mesh/{adjoint}/P{n_paths}", us_dp,
+             f"devices={n_devices} bitwise={bitwise}")
+    return mesh_records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--n-steps", type=int, default=N_STEPS)
+    ap.add_argument("--dim", type=int, default=DIM)
+    args = ap.parse_args()
+    run(args.out, n_steps=args.n_steps, dim=args.dim)
+
+
+if __name__ == "__main__":
+    main()

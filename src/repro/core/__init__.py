@@ -35,7 +35,7 @@ from .registry import (
     select_solver,
     solver_kind,
 )
-from .sdeint import sdeint, sdeint_ticks
+from .sdeint import path_keys, sdeint, sdeint_ticks
 from .cfees import (
     CFLowStorageSolver,
     CrouchGrossman2,
@@ -71,6 +71,7 @@ from .williamson import EES25_2N, EES27_2N, bazavov_residuals, butcher_from_2n, 
 
 __all__ = [
     "solve",
+    "path_keys",
     "sdeint",
     "sdeint_ticks",
     "SolveResult",

@@ -39,7 +39,21 @@ from .brownian import brownian_path, padded_brownian_path, virtual_brownian_tree
 from .grid import TimeGrid
 from .registry import get_solver
 
-__all__ = ["sdeint", "sdeint_ticks"]
+__all__ = ["sdeint", "sdeint_ticks", "path_keys"]
+
+
+def path_keys(key: jax.Array, n_paths: int) -> jax.Array:
+    """Per-path key batch by ``fold_in`` — THE path-batching convention.
+
+    Path ``i`` of a Monte-Carlo batch always derives its key as
+    ``fold_in(key, i)``; the serving engine, the trainer, and offline replay
+    all share this function, so a request seed reproduces the same
+    trajectories everywhere.  ``key`` may be a *traced* value (a scan carry,
+    a per-step ``fold_in(base, step)`` inside a jit'd multi-step training
+    chunk): ``fold_in`` is pure integer hashing, so the vmapped derivation
+    works identically under ``jit``/``lax.scan`` as it does eagerly.
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_paths))
 
 
 def _infer_noise_shape(term, y0):

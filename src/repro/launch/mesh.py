@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "make_production_mesh",
     "make_sample_mesh",
+    "make_train_mesh",
     "axis_size",
     "param_pspecs",
     "batch_pspecs",
@@ -62,6 +63,19 @@ def make_sample_mesh(n_devices: Optional[int] = None, axis: str = "mc") -> Mesh:
             f"n_devices={n_devices} not in [1, {len(devices)}] visible devices"
         )
     return Mesh(np.array(devices[:n]), (axis,))
+
+
+def make_train_mesh(n_devices: Optional[int] = None, axis: str = "dp") -> Mesh:
+    """1-D data-parallel training mesh for the scanned SDE train step.
+
+    Same embarrassingly-parallel shape as :func:`make_sample_mesh` — the
+    trainer shards the Monte-Carlo *path* axis, not the model — but named
+    ``"dp"`` by convention so launch configs read as data parallelism.
+    Feed it to ``make_sde_train_step(..., mesh=make_train_mesh(),
+    mesh_axis="dp")``; gradients come back bitwise-equal to the
+    single-device step (see ``docs/performance.md``).
+    """
+    return make_sample_mesh(n_devices, axis=axis)
 
 
 def axis_size(mesh: Mesh, axis) -> int:

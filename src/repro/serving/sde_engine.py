@@ -501,10 +501,10 @@ class SDESampleEngine:
         bitwise-identical to per-path host calls)."""
         keys = self._key_cache.get(req.request_id)
         if keys is None:
-            base = jax.random.PRNGKey(req.seed)
-            keys = np.asarray(jax.vmap(
-                lambda i: jax.random.fold_in(base, i)
-            )(jnp.arange(req.n_paths)))
+            from repro.core.sdeint import path_keys
+
+            keys = np.asarray(
+                path_keys(jax.random.PRNGKey(req.seed), req.n_paths))
             self._key_cache[req.request_id] = keys
         return keys
 

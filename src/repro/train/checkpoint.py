@@ -26,7 +26,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "checkpoint_meta"]
 
 
 def _flatten_with_paths(tree):
@@ -36,7 +37,17 @@ def _flatten_with_paths(tree):
     return names, leaves, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Write ``tree`` atomically under ``directory/step_<step>``.
+
+    ``extra``: optional JSON-serialisable metadata stored in the manifest —
+    the chunked train loops record their ``steps_per_call`` here so a resume
+    can report how the checkpointed trajectory was dispatched (the *params*
+    are chunking-independent: scanned chunks are bitwise-equal to sequential
+    steps, so any ``steps_per_call`` may resume any checkpoint, including
+    from a mid-chunk step of a differently-chunked run).
+    """
     host = jax.process_index()
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + f".tmp{host}"
@@ -45,6 +56,8 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     names, leaves, _ = _flatten_with_paths(tree)
     arrays = {}
     meta = {"step": step, "leaves": []}
+    if extra:
+        meta["extra"] = dict(extra)
     for name, leaf in zip(names, leaves):
         arr = np.asarray(jax.device_get(leaf))
         dtype_name = str(arr.dtype)
@@ -60,6 +73,14 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
             json.dump(meta, f)
     os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
     return final
+
+
+def checkpoint_meta(directory: str, step: int) -> dict:
+    """The ``extra`` metadata recorded with a checkpoint ({} when none was
+    given) — e.g. the ``steps_per_call`` a chunked loop trained with."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f).get("extra", {})
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -65,6 +65,16 @@ class StragglerTracker:
         if len(buf) > self.window:
             buf.pop(0)
 
+    def record_chunk(self, host: int, chunk_time_s: float, n_steps: int):
+        """Record a fused multi-step dispatch (``steps_per_call`` chunk) as
+        ONE per-step-average sample, so straggler medians stay comparable
+        between hosts running different chunk sizes.  Note the window then
+        fills ``n_steps``x slower in wall-clock steps — size ``window`` to
+        chunks, not steps, on chunked fleets."""
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        self.record(host, chunk_time_s / n_steps)
+
     def stragglers(self) -> List[int]:
         med_per_host = {
             h: float(np.median(v)) for h, v in self._times.items() if len(v) >= 8

@@ -1,0 +1,103 @@
+"""tools/check_bench.py gates the committed BENCH artifacts correctly.
+
+The CI bench lane now funnels every benchmark JSON through one checker
+(``python tools/check_bench.py --file <json>``) instead of per-step inline
+snippets.  Two invariants keep that consolidation honest:
+
+* every **committed** ``BENCH_*.json`` at the repo root passes its gate
+  (so the checker encodes the same invariants the artifacts were produced
+  under), and
+* **tampered** copies fail — dropped records, sub-1 scan speedup, a broken
+  DP-bitwise flag — so the gates still have teeth.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECK = os.path.join(REPO, "tools", "check_bench.py")
+
+COMMITTED = sorted(
+    f for f in os.listdir(REPO)
+    if f.startswith("BENCH_") and f.endswith(".json")
+)
+
+
+def run_check(*files):
+    return subprocess.run(
+        [sys.executable, CHECK] + [x for f in files for x in ("--file", f)],
+        cwd=REPO, capture_output=True, text=True,
+    )
+
+
+def test_all_committed_bench_files_pass():
+    assert COMMITTED, "no BENCH_*.json at repo root"
+    assert "BENCH_training.json" in COMMITTED
+    res = run_check(*COMMITTED)
+    assert res.returncode == 0, res.stdout + res.stderr
+    for f in COMMITTED:
+        assert f"OK {f}" in res.stdout, res.stdout
+
+
+def test_unknown_file_is_an_error(tmp_path):
+    p = tmp_path / "BENCH_mystery.json"
+    p.write_text("{}")
+    res = run_check(str(p))
+    assert res.returncode != 0
+    assert "no gate registered" in res.stderr
+
+
+def _tamper(tmp_path, src_name, mutate, out_name=None):
+    with open(os.path.join(REPO, src_name)) as f:
+        data = json.load(f)
+    mutate(data)
+    p = tmp_path / (out_name or src_name)
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+@pytest.mark.parametrize(
+    "src,mutate",
+    [
+        ("BENCH_throughput.json", lambda d: d["records"].clear()),
+        ("BENCH_training.json", lambda d: d["records"].clear()),
+        ("BENCH_training.json",
+         lambda d: d.__setitem__("speedup_scan_k8", 0.5)),
+        ("BENCH_training.json",
+         lambda d: d["records"][0].__setitem__("us_per_step_scanned",
+                                               float("nan"))),
+        ("BENCH_training.json",
+         lambda d: d["mesh_records"].append(
+             {"adjoint": "reversible", "grads_bitwise_vs_single": False})),
+        ("BENCH_serving.json",
+         lambda d: d["load"].__setitem__("dispatches_per_tick", 2.0)),
+        ("BENCH_reversible_adaptive.json",
+         lambda d: [r for r in d["records"]
+                    if r["adjoint"] == "reversible"][0]
+         .__setitem__("grad_rel_err_vs_full", 1.0)),
+    ],
+    ids=["throughput-empty", "training-empty", "training-slow-scan",
+         "training-nan-field", "training-dp-not-bitwise",
+         "serving-multi-dispatch", "revadaptive-grad-drift"],
+)
+def test_tampered_bench_files_fail(tmp_path, src, mutate):
+    path = _tamper(tmp_path, src, mutate)
+    res = run_check(path)
+    assert res.returncode != 0, res.stdout
+    assert "AssertionError" in res.stderr or "Error" in res.stderr, res.stderr
+
+
+def test_ci_workflow_routes_every_bench_through_checker():
+    """The bench lane must not regrow inline ``python -c`` gate snippets."""
+    with open(os.path.join(REPO, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    bench_lane = ci.split("bench-smoke:")[1]
+    assert "python -c" not in bench_lane, "inline gate snippet crept back in"
+    for artifact in ("bench.json", "bench_serving.json", "bench_kernels.json",
+                     "bench_stability.json", "bench_adaptive.json",
+                     "bench_rev_adaptive.json", "bench_resilience.json",
+                     "bench_training.json"):
+        assert f"check_bench.py --file {artifact}" in bench_lane, artifact

@@ -229,6 +229,68 @@ def test_bench_throughput_mesh_ladder_emits_records():
     assert "OK" in out
 
 
+def test_sde_train_step_data_parallel_bitwise():
+    """The PR-10 mesh-sharded SDE train step on 8 fake devices: loss,
+    gradients (hence params and opt_state after the update) are BITWISE
+    equal to the single-device step — per-path gradients are reduced
+    replicated in vmap-transpose order, never psum'd per shard — and the
+    scanned chunk preserves that equality."""
+    out = run_py("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import SDETerm
+        from repro.launch.mesh import make_train_mesh
+        from repro.optim import adamw, cosine_schedule
+        from repro.train.trainer import (init_scan_counters, make_scanned_step,
+                                         make_sde_train_step)
+
+        term = SDETerm(
+            drift=lambda t, y, p: p["nu"] * (p["mu"] - y),
+            diffusion=lambda t, y, p: p["sigma"] * jnp.ones_like(y),
+            noise="diagonal",
+        )
+        params = {"nu": jnp.float64(0.5), "mu": jnp.float64(0.0),
+                  "sigma": jnp.float64(0.5)}
+        opt = adamw(cosine_schedule(1e-3, 2, 64))
+        key = jax.random.PRNGKey(0)
+        # cross-path loss on purpose: the sharded step gathers the result
+        # before the loss, so moment terms are exact
+        loss = lambda p, r: (jnp.mean(r.y_final ** 2)
+                             + 0.1 * jnp.mean(jnp.mean(r.y_final, 0) ** 2))
+        y0 = lambda p: jnp.zeros(4, jnp.float64)
+        common = dict(t0=0.0, t1=1.0, n_steps=16, n_paths=16)
+
+        single = make_sde_train_step("ees25", term, opt, y0, loss, **common)
+        mesh = make_train_mesh(8)
+        dp = make_sde_train_step("ees25", term, opt, y0, loss,
+                                 mesh=mesh, mesh_axis="dp", **common)
+
+        eq = lambda a, b: all(
+            np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+            zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+        pa, sa, ma = jax.jit(single)(params, opt.init(params), key)
+        pb, sb, mb = jax.jit(dp)(params, opt.init(params), key)
+        assert eq((pa, sa), (pb, sb)), "dp step != single-device step"
+        assert np.array_equal(np.asarray(ma["loss"]), np.asarray(mb["loss"]))
+
+        # scanned K=4 chunk of the dp step == 4 sequential single steps
+        js = jax.jit(single)
+        p, s = params, opt.init(params)
+        for i in range(4):
+            p, s, _ = js(p, s, jax.random.fold_in(key, i))
+        sc = make_scanned_step(dp, 4)
+        p2, s2, _, _ = sc(jax.tree_util.tree_map(jnp.array, params),
+                          opt.init(params), init_scan_counters(), key,
+                          jnp.asarray(0))
+        assert eq((p, s), (p2, s2)), "scanned dp chunk != sequential single"
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_compressed_gradient_allreduce():
     """int8-quantised all-reduce with error feedback under shard_map."""
     out = run_py("""

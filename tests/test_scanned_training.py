@@ -1,0 +1,420 @@
+"""PR 10 — fused multi-step training pipeline.
+
+Invariants under test:
+
+* ``make_scanned_step`` with ``steps_per_call=K`` is **bitwise-identical**
+  to K sequential un-scanned steps — all three adjoints, fixed and adaptive
+  grids (the scan is a pure dispatch amortization, never a numerics change).
+* The fused guard select (one ``tree_map`` over the joined
+  ``(params, opt_state)`` tree) is bitwise-identical to the PR-9 two-pass
+  implementation, on finite and on guard-skipped steps.
+* The mesh-sharded data-parallel step matches the single-device step
+  bitwise (single-device mesh here; the multi-device case runs in
+  ``test_launch_distributed.py`` under 8 fake devices).
+* ``microbatches`` gradient accumulation reproduces the full-batch step for
+  path-decomposable losses.
+* ``train_loop`` / ``resilient_train_loop`` chunked modes: dispatch counts,
+  batched metric fetches, chunk-boundary checkpointing, exact mid-chunk
+  resume via ``batch_at`` replay, and chunk-granular skip/rollback.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SDETerm
+from repro.optim import adamw, cosine_schedule
+from repro.train.checkpoint import checkpoint_meta, latest_step
+from repro.train.trainer import (
+    ResilienceConfig,
+    TrainLoopConfig,
+    init_scan_counters,
+    make_scanned_step,
+    make_sde_train_step,
+    resilient_train_loop,
+    train_loop,
+)
+
+TERM = SDETerm(
+    drift=lambda t, y, p: p["nu"] * (p["mu"] - y),
+    diffusion=lambda t, y, p: p["sigma"] * jnp.ones_like(y),
+    noise="diagonal",
+)
+PARAMS = {"nu": jnp.float64(0.5), "mu": jnp.float64(0.0),
+          "sigma": jnp.float64(0.5)}
+KEY = jax.random.PRNGKey(0)
+COMMON = dict(t0=0.0, t1=1.0, n_steps=16, n_paths=8)
+Y0 = lambda p: jnp.zeros(4, jnp.float64)  # noqa: E731
+LOSS = lambda p, r: (jnp.mean(r.y_final ** 2)  # noqa: E731
+                     + 0.1 * jnp.mean(jnp.mean(r.y_final, 0) ** 2))
+
+
+def _opt(steps=64):
+    return adamw(cosine_schedule(1e-3, 2, steps))
+
+
+def _fresh(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.array(x), tree)
+
+
+def _leaves_eq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+class TestScannedStep:
+    @pytest.mark.parametrize("adjoint", ["full", "recursive", "reversible"])
+    def test_scan_matches_sequential(self, adjoint):
+        opt = _opt()
+        step = make_sde_train_step("ees25", TERM, opt, Y0, LOSS,
+                                   adjoint=adjoint, **COMMON)
+        jstep = jax.jit(step)
+        p, s = PARAMS, opt.init(PARAMS)
+        losses = []
+        for i in range(4):
+            p, s, m = jstep(p, s, jax.random.fold_in(KEY, i))
+            losses.append(np.asarray(m["loss"]))
+        scanned = make_scanned_step(step, 4)
+        p2, s2, c2, hist = scanned(_fresh(PARAMS), opt.init(PARAMS),
+                                   init_scan_counters(), KEY, jnp.asarray(0))
+        assert _leaves_eq((p, s), (p2, s2))
+        assert np.array_equal(np.asarray(hist["loss"]), np.stack(losses))
+
+    def test_scan_matches_sequential_adaptive(self):
+        opt = _opt()
+        kw = dict(rtol=1e-3, atol=1e-5, save_at=jnp.linspace(0.0, 1.0, 5))
+        loss = lambda p, r: jnp.mean(r.ys ** 2)  # noqa: E731
+        step = make_sde_train_step("ees25:adaptive", TERM, opt, Y0, loss,
+                                   **kw, **COMMON)
+        jstep = jax.jit(step)
+        p, s = PARAMS, opt.init(PARAMS)
+        for i in range(3):
+            p, s, _ = jstep(p, s, jax.random.fold_in(KEY, i))
+        scanned = make_scanned_step(step, 3)
+        p2, s2, _, _ = scanned(_fresh(PARAMS), opt.init(PARAMS),
+                               init_scan_counters(), KEY, jnp.asarray(0))
+        assert _leaves_eq((p, s), (p2, s2))
+
+    def test_counters_and_step0_offset(self):
+        opt = _opt()
+        step = make_sde_train_step("ees25", TERM, opt, Y0, LOSS, **COMMON)
+        scanned = make_scanned_step(step, 3)
+        # two chunks, offset step0 — same trajectory as one 6-step sequence
+        p, s, c, _ = scanned(_fresh(PARAMS), opt.init(PARAMS),
+                             init_scan_counters(), KEY, jnp.asarray(0))
+        p, s, c, _ = scanned(p, s, c, KEY, jnp.asarray(3))
+        jstep = jax.jit(step)
+        pr, sr = PARAMS, opt.init(PARAMS)
+        for i in range(6):
+            pr, sr, _ = jstep(pr, sr, jax.random.fold_in(KEY, i))
+        assert _leaves_eq((p, s), (pr, sr))
+        got = jax.device_get(c)
+        assert int(got["steps"]) == 6 and int(got["skipped"]) == 0
+
+    def test_four_arg_step_records_injected_faults(self):
+        opt = _opt()
+        base = make_sde_train_step("ees25", TERM, opt, Y0, LOSS, **COMMON)
+        faults = jnp.asarray([1, 4])
+
+        def faulty(p, o, k, s):
+            p2, o2, m = base(p, o, k)
+            hit = jnp.isin(s, faults)
+            keep = lambda new, old: jnp.where(hit, old, new)  # noqa: E731
+            p2, o2 = jax.tree_util.tree_map(keep, (p2, o2), (p, o))
+            return p2, o2, dict(m, skipped=m["skipped"] | hit)
+
+        scanned = make_scanned_step(faulty, 6)
+        _, _, c, hist = scanned(_fresh(PARAMS), opt.init(PARAMS),
+                                init_scan_counters(), KEY, jnp.asarray(0))
+        sk = np.asarray(jax.device_get(hist["skipped"])).astype(bool)
+        assert sk.tolist() == [False, True, False, False, True, False]
+        assert int(jax.device_get(c)["skipped"]) == 2
+
+    def test_bad_steps_per_call_raises(self):
+        with pytest.raises(ValueError, match="steps_per_call"):
+            make_scanned_step(lambda p, o, k: (p, o, {}), 0)
+
+
+class TestGuardFuse:
+    """The fused single-traversal guard select vs the PR-9 two-pass code."""
+
+    def _reference_step(self, opt, loss):
+        # verbatim shape of the pre-PR-10 guard: update, then TWO separate
+        # tree_map(keep, ...) passes over params and opt_state
+        from repro.core import sdeint
+        from repro.core.pytree import tree_blowup
+        from repro.core.sdeint import path_keys
+
+        def step(params, opt_state, key):
+            def lfn(p):
+                r = sdeint(TERM, "ees25", COMMON["t0"], COMMON["t1"],
+                           COMMON["n_steps"], Y0(p), None, args=p,
+                           adjoint="reversible", batch_keys=path_keys(
+                               key, COMMON["n_paths"]), bulk_increments=True)
+                return loss(p, r)
+
+            l, g = jax.value_and_grad(lfn)(params)
+            bad = tree_blowup(g) | ~jnp.isfinite(l)
+            new_p, new_s, gnorm = opt.update(g, opt_state, params)
+            keep = lambda new, old: jnp.where(bad, old, new)  # noqa: E731
+            params = jax.tree_util.tree_map(keep, new_p, params)
+            opt_state = jax.tree_util.tree_map(keep, new_s, opt_state)
+            return params, opt_state, {"loss": l, "grad_norm": gnorm,
+                                       "skipped": bad}
+
+        return step
+
+    def test_finite_steps_bitwise(self):
+        opt = _opt()
+        fused = jax.jit(make_sde_train_step("ees25", TERM, opt, Y0, LOSS,
+                                            **COMMON))
+        ref = jax.jit(self._reference_step(opt, LOSS))
+        pf, sf = PARAMS, opt.init(PARAMS)
+        pr, sr = PARAMS, opt.init(PARAMS)
+        for i in range(3):
+            k = jax.random.fold_in(KEY, i)
+            pf, sf, mf = fused(pf, sf, k)
+            pr, sr, mr = ref(pr, sr, k)
+            assert not bool(np.asarray(mf["skipped"]))
+        assert _leaves_eq((pf, sf), (pr, sr))
+
+    def test_skipped_step_bitwise_and_inert(self):
+        opt = _opt()
+        blown = lambda p, r: LOSS(p, r) + jnp.nan  # noqa: E731
+        fused = jax.jit(make_sde_train_step("ees25", TERM, opt, Y0, blown,
+                                            **COMMON))
+        ref = jax.jit(self._reference_step(opt, blown))
+        s0 = opt.init(PARAMS)
+        pf, sf, mf = fused(PARAMS, s0, KEY)
+        pr, sr, mr = ref(PARAMS, s0, KEY)
+        assert bool(np.asarray(mf["skipped"])) and bool(np.asarray(mr["skipped"]))
+        assert _leaves_eq((pf, sf), (pr, sr))
+        assert _leaves_eq(pf, PARAMS)  # guard held the params
+
+
+class TestMicrobatch:
+    def test_decomposable_loss_matches_full_batch(self):
+        opt = _opt()
+        loss = lambda p, r: jnp.mean(r.y_final ** 2)  # noqa: E731
+        full = jax.jit(make_sde_train_step("ees25", TERM, opt, Y0, loss,
+                                           **COMMON))
+        mb = jax.jit(make_sde_train_step("ees25", TERM, opt, Y0, loss,
+                                         microbatches=4, **COMMON))
+        p1, s1, m1 = full(PARAMS, opt.init(PARAMS), KEY)
+        p2, s2, m2 = mb(PARAMS, opt.init(PARAMS), KEY)
+        # mean-of-slice-means == full mean for equal slices; the grads are
+        # reduced in a different association order, so ulp-tight, not bitwise
+        assert np.allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-12)
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-9, atol=1e-12)
+
+    def test_non_dividing_microbatches_raises(self):
+        with pytest.raises(ValueError, match="microbatches"):
+            make_sde_train_step("ees25", TERM, _opt(), Y0, LOSS,
+                                microbatches=3, **COMMON)
+
+
+class TestMeshDataParallel:
+    def test_single_device_mesh_bitwise(self):
+        from repro.launch.mesh import make_train_mesh
+
+        opt = _opt()
+        mesh = make_train_mesh(1)
+        plain = jax.jit(make_sde_train_step("ees25", TERM, opt, Y0, LOSS,
+                                            **COMMON))
+        dp = jax.jit(make_sde_train_step("ees25", TERM, opt, Y0, LOSS,
+                                         mesh=mesh, mesh_axis="dp", **COMMON))
+        pa, sa, ma = plain(PARAMS, opt.init(PARAMS), KEY)
+        pb, sb, mb = dp(PARAMS, opt.init(PARAMS), KEY)
+        assert _leaves_eq((pa, sa), (pb, sb))
+        assert np.array_equal(np.asarray(ma["loss"]), np.asarray(mb["loss"]))
+
+    def test_single_device_mesh_adaptive_bitwise(self):
+        from repro.launch.mesh import make_train_mesh
+
+        opt = _opt()
+        mesh = make_train_mesh(1)
+        kw = dict(rtol=1e-3, atol=1e-5, save_at=jnp.linspace(0.0, 1.0, 5))
+        loss = lambda p, r: jnp.mean(r.ys ** 2)  # noqa: E731
+        plain = jax.jit(make_sde_train_step("ees25:adaptive", TERM, opt, Y0,
+                                            loss, **kw, **COMMON))
+        dp = jax.jit(make_sde_train_step("ees25:adaptive", TERM, opt, Y0,
+                                         loss, mesh=mesh, mesh_axis="dp",
+                                         **kw, **COMMON))
+        pa, sa, _ = plain(PARAMS, opt.init(PARAMS), KEY)
+        pb, sb, _ = dp(PARAMS, opt.init(PARAMS), KEY)
+        assert _leaves_eq((pa, sa), (pb, sb))
+
+    def test_mesh_validation(self):
+        from repro.launch.mesh import make_train_mesh
+
+        with pytest.raises(ValueError, match="mesh_axis"):
+            make_sde_train_step("ees25", TERM, _opt(), Y0, LOSS,
+                                mesh_axis="dp", **COMMON)
+        with pytest.raises(ValueError, match="mesh"):
+            make_sde_train_step("ees25", TERM, _opt(), Y0, LOSS,
+                                mesh=make_train_mesh(1), **COMMON)
+
+
+# --------------------------------------------------------------------------
+# train_loop: chunked dispatch, batched fetch, mid-chunk resume.
+# --------------------------------------------------------------------------
+
+class _ToyData:
+    """Step-pure data source: batch_at(step) is a pure function of step."""
+
+    def __init__(self, dim=3, batch=4):
+        self.dim, self.batch = dim, batch
+
+    def batch_at(self, step):
+        rng = np.random.default_rng(1000 + step)
+        return rng.standard_normal((self.batch, self.dim))
+
+
+def _toy_setup(steps):
+    opt = adamw(cosine_schedule(1e-2, 2, steps))
+    params = {"w": jnp.asarray(np.linspace(0.3, 0.9, 3))}
+
+    def step_fn(p, o, b):
+        l, g = jax.value_and_grad(
+            lambda pp: jnp.mean((b @ pp["w"]) ** 2))(p)
+        p2, o2, gn = opt.update(g, o, p)
+        return p2, o2, {"loss": l, "grad_norm": gn}
+
+    return opt, params, step_fn
+
+
+class TestTrainLoopChunked:
+    def test_chunked_bitwise_and_dispatch_count(self):
+        steps = 10
+        opt, params, step_fn = _toy_setup(steps)
+        o1 = train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                        step_fn=step_fn,
+                        loop=TrainLoopConfig(steps=steps, log_every=2))
+        o4 = train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                        step_fn=step_fn,
+                        loop=TrainLoopConfig(steps=steps, log_every=2,
+                                             steps_per_call=4))
+        # the dispatch-count regression: one jit call per step vs per chunk
+        assert o1["n_dispatches"] == steps
+        assert o4["n_dispatches"] == 3  # ceil(10 / 4)
+        assert _leaves_eq(o1["params"], o4["params"])
+        assert o1["losses"] == o4["losses"]
+
+    def test_resume_from_chunk_boundary_bitwise(self, tmp_path):
+        steps = 12
+        opt, params, step_fn = _toy_setup(steps)
+        loop = lambda n, d=None: TrainLoopConfig(  # noqa: E731
+            steps=n, ckpt_every=4, ckpt_dir=d, log_every=100, steps_per_call=4)
+        d = str(tmp_path / "ck")
+        train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                   step_fn=step_fn, loop=loop(8, d))
+        assert latest_step(d) == 8  # chunk-boundary save
+        resumed = train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                             step_fn=step_fn, loop=loop(steps, d))
+        unbroken = train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                              step_fn=step_fn, loop=loop(steps))
+        assert _leaves_eq(resumed["params"], unbroken["params"])
+        assert resumed["n_dispatches"] == 1  # 12 - 8 = one 4-step chunk
+
+    def test_resume_mid_chunk_bitwise(self, tmp_path):
+        # checkpoint written at step 5 by a K=1 run, resumed by a K=4 run:
+        # step 5 is mid-chunk for the resumer — still bitwise, because
+        # scanned chunks == sequential steps and batch_at replay is exact
+        steps = 11
+        opt, params, step_fn = _toy_setup(steps)
+        d = str(tmp_path / "ck")
+        train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                   step_fn=step_fn,
+                   loop=TrainLoopConfig(steps=5, ckpt_every=5, ckpt_dir=d,
+                                        log_every=100))
+        assert latest_step(d) == 5
+        resumed = train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                             step_fn=step_fn,
+                             loop=TrainLoopConfig(steps=steps, ckpt_every=100,
+                                                  ckpt_dir=d, log_every=100,
+                                                  steps_per_call=4))
+        unbroken = train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                              step_fn=step_fn,
+                              loop=TrainLoopConfig(steps=steps, log_every=100,
+                                                   steps_per_call=4))
+        assert _leaves_eq(resumed["params"], unbroken["params"])
+        # 6 remaining steps from step 5: chunks of 4 + 2
+        assert resumed["n_dispatches"] == 2
+
+    def test_checkpoint_meta_records_chunking(self, tmp_path):
+        opt, params, step_fn = _toy_setup(8)
+        d = str(tmp_path / "ck")
+        train_loop(None, _fresh(params), _ToyData(), optimizer=opt,
+                   step_fn=step_fn,
+                   loop=TrainLoopConfig(steps=8, ckpt_every=4, ckpt_dir=d,
+                                        log_every=100, steps_per_call=4))
+        assert checkpoint_meta(d, latest_step(d))["steps_per_call"] == 4
+
+
+# --------------------------------------------------------------------------
+# resilient_train_loop: chunked guard/rollback.
+# --------------------------------------------------------------------------
+
+class TestResilientChunked:
+    def test_fault_free_chunked_matches_stepwise(self):
+        opt = _opt()
+        step = make_sde_train_step("ees25", TERM, opt, Y0, LOSS, **COMMON)
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            r1 = resilient_train_loop(
+                jax.jit(step), _fresh(PARAMS), opt.init(PARAMS), KEY,
+                res=ResilienceConfig(steps=10, ckpt_every=4, ckpt_dir=d1))
+            r2 = resilient_train_loop(
+                step, _fresh(PARAMS), opt.init(PARAMS), KEY,
+                res=ResilienceConfig(steps=10, ckpt_every=4, ckpt_dir=d2,
+                                     steps_per_call=4))
+        assert _leaves_eq(r1["params"], r2["params"])
+        assert r1["losses"] == r2["losses"]
+        assert r1["skipped"] == r2["skipped"]
+        assert r1["goodput"] == r2["goodput"] == 1.0
+
+    def test_chunked_rollback_on_skip_streak(self):
+        opt = _opt()
+        base = make_sde_train_step("ees25", TERM, opt, Y0, LOSS, **COMMON)
+        faults = jnp.asarray([2, 3, 4, 9])  # streak of 3 -> rollback at 4
+
+        def faulty(p, o, k, s):
+            p2, o2, m = base(p, o, k)
+            hit = jnp.isin(s, faults)
+            keep = lambda new, old: jnp.where(hit, old, new)  # noqa: E731
+            p2, o2 = jax.tree_util.tree_map(keep, (p2, o2), (p, o))
+            return p2, o2, dict(m, skipped=m["skipped"] | hit)
+
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            r1 = resilient_train_loop(
+                faulty, _fresh(PARAMS), opt.init(PARAMS), KEY,
+                res=ResilienceConfig(steps=12, ckpt_every=2, ckpt_dir=d1,
+                                     skip_patience=3))
+            r2 = resilient_train_loop(
+                faulty, _fresh(PARAMS), opt.init(PARAMS), KEY,
+                res=ResilienceConfig(steps=12, ckpt_every=2, ckpt_dir=d2,
+                                     skip_patience=3, steps_per_call=5))
+        # same policy at both granularities: identical skip pattern, one
+        # rollback, identical goodput (restored *states* may differ — the
+        # chunked mode's checkpoints live on chunk boundaries)
+        assert r1["skipped"] == r2["skipped"]
+        assert r1["rollbacks"] == r2["rollbacks"] == 1
+        assert r1["goodput"] == r2["goodput"]
+        assert len(r2["losses"]) == 12
+
+    def test_record_chunk_averages_per_step(self):
+        from repro.train.fault_tolerance import StragglerTracker
+
+        tr = StragglerTracker([0])
+        tr.record_chunk(0, 8.0, 16)
+        assert tr._times[0] == [0.5]
+        with pytest.raises(ValueError, match="n_steps"):
+            tr.record_chunk(0, 1.0, 0)
